@@ -1,0 +1,49 @@
+"""Supplementary: handle-code operation costs (encode/classify/convert).
+
+The Huffman code's promise is O(1) bitmask classification and zero-page
+safety checks; Mukautuva's promise is an if-chain fast path for predefined
+handles.  Both are nanosecond-scale host operations.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+import repro.core as C
+from repro.core import handles as H
+
+N = 200_000
+
+
+def _ns(fn, args_list) -> float:
+    t0 = time.perf_counter_ns()
+    for a in args_list:
+        fn(a)
+    return (time.perf_counter_ns() - t0) / len(args_list)
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    preds = (list(H.PREDEFINED_NAMES) * (N // len(H.PREDEFINED_NAMES)))[:N]
+    rows.append(("handle_classify", _ns(H.handle_kind, preds) / 1000.0,
+                 "ns bitmask kind decode"))
+    users = [H.make_user_handle(H.HandleKind.COMM, i % 1000) for i in range(N)]
+    rows.append(("handle_user_roundtrip", _ns(H.user_handle_index, users) / 1000.0,
+                 "ns user-handle index extract"))
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    muk = C.pax_init(mesh, impl="ompix").backend
+    ops = ([C.PAX_SUM, C.PAX_MIN, C.PAX_MAX, C.PAX_PROD] * (N // 4))[:N]
+    rows.append(("muk_convert_predefined_op", _ns(muk._convert_op, ops) / 1000.0,
+                 "ns if-chain fast path"))
+    dts = ([C.PAX_FLOAT32, C.PAX_BFLOAT16, C.PAX_INT32_T, C.PAX_INT64_T] * (N // 4))[:N]
+    rows.append(("muk_convert_predefined_dtype", _ns(muk._convert_dtype, dts) / 1000.0,
+                 "ns map lookup"))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(",".join(str(x) for x in row))

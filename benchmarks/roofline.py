@@ -1,0 +1,71 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads benchmarks/results/dryrun/*.json and renders the per-(arch x shape x
+mesh) three-term roofline table with bottleneck and useful-flops ratio.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def load_cells(include_variants: bool = False) -> list[dict]:
+    cells = []
+    for f in sorted(RESULTS.glob("*.json")):
+        parts = f.stem.split("__")
+        is_variant = len(parts) > 3  # arch__shape__mesh__<variant>
+        if is_variant and not include_variants:
+            continue
+        try:
+            c = json.loads(f.read_text())
+            if is_variant:
+                c["variant"] = parts[3]
+            cells.append(c)
+        except Exception:
+            pass
+    return cells
+
+
+def render_table(cells, mesh_filter: str = "16x16") -> str:
+    hdr = (f"{'arch':<20} {'shape':<12} {'mode':<6} {'compute':>10} {'memory':>10} "
+           f"{'collect.':>10} {'bottleneck':<10} {'useful':>6} {'MFU<=':>6} {'peakGiB':>8}")
+    lines = [hdr, "-" * len(hdr)]
+    for c in cells:
+        if c.get("status") == "skipped":
+            if mesh_filter == "16x16":
+                lines.append(f"{c.get('arch','?'):<20} {c.get('shape','?'):<12} "
+                             f"{'skip':<6} {c.get('reason','')[:58]}")
+            continue
+        if c.get("status") != "ok" or c.get("mesh") != mesh_filter:
+            continue
+        r = c["roofline"]
+        m = c["memory"]
+        lines.append(
+            f"{c['arch']:<20} {c['shape']:<12} {c['mode']:<6} "
+            f"{r['compute_s']*1e3:>8.1f}ms {r['memory_s']*1e3:>8.1f}ms "
+            f"{r['collective_s']*1e3:>8.1f}ms {r['bottleneck']:<10} "
+            f"{r['useful_flops_fraction']:>6.2f} {r['mfu_bound']:>6.2f} "
+            f"{m['peak_estimate_bytes']/2**30:>8.1f}")
+    return "\n".join(lines)
+
+
+def run() -> list[tuple[str, float, str]]:
+    cells = load_cells()
+    ok = [c for c in cells if c.get("status") == "ok"]
+    rows = [("dryrun_cells_ok", float(len(ok)), f"of {len(cells)} recorded")]
+    for c in ok:
+        r = c["roofline"]
+        name = f"roofline_{c['arch']}_{c['shape']}_{c['mesh']}"
+        rows.append((name, r["step_time_s"] * 1e6,
+                     f"bottleneck={r['bottleneck']} useful={r['useful_flops_fraction']:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    cells = load_cells()
+    print("== single-pod (16x16)")
+    print(render_table(cells, "16x16"))
+    print("\n== multi-pod (2x16x16)")
+    print(render_table(cells, "2x16x16"))

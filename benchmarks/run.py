@@ -1,0 +1,45 @@
+"""Benchmark harness — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Prints ``name,us_per_call,derived`` CSV rows:
+
+* §6.1   type_size throughput (encoded vs lookup)          bench_type_size
+* Table 1 message rate with/without ABI layers             bench_message_rate
+* §6.2   Mukautuva request-map worst case                  bench_request_map
+* suppl. handle-code operation costs                       bench_handles
+* §Roofline summary from the dry-run artifacts             roofline
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_handles, bench_message_rate,
+                            bench_request_map, bench_type_size, roofline)
+
+    sections = [
+        ("paper_6.1_type_size", bench_type_size),
+        ("paper_table1_message_rate", bench_message_rate),
+        ("paper_6.2_request_map", bench_request_map),
+        ("handle_code", bench_handles),
+        ("roofline", roofline),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for title, mod in sections:
+        print(f"# --- {title}")
+        try:
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.4f},{derived}")
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

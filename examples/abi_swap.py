@@ -1,0 +1,45 @@
+"""The paper's headline property, demonstrated end-to-end: the SAME traced
+training program runs on every ABI implementation — native, algorithmic
+(ring), compressed-wire, and foreign-through-Mukautuva — with no user-code
+changes, and the native path adds zero equations to the jaxpr.
+
+    PYTHONPATH=src python examples/abi_swap.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as cfgs
+import repro.core as C
+from repro.models import build_model, make_batch
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.dist import make_dist
+from repro.train import train_loop
+
+mesh = jax.make_mesh((1, 1), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+cfg = cfgs.smoke_config("chatglm3-6b")
+api = build_model(cfg)
+key = jax.random.PRNGKey(0)
+batch = make_batch(key, cfg, 2, 16)
+
+losses = {}
+for impl in ("paxi", "ring", "ring-bf16", "ompix", "muk:paxi"):
+    dist = make_dist(mesh, impl=impl)
+    state = train_loop.init_state(api, key)              # same init
+    step = jax.jit(train_loop.make_train_step(api, dist, AdamWConfig()))
+    for _ in range(3):
+        state, m = step(state, batch)
+    losses[impl] = float(m.loss)
+    print(f"{impl:10s} loss after 3 steps: {losses[impl]:.6f}")
+
+ref = losses["paxi"]
+for impl, l in losses.items():
+    tol = 5e-3 if "bf16" in impl else 1e-5
+    assert abs(l - ref) <= tol * max(abs(ref), 1), (impl, l, ref)
+print("\nall implementations agree — the ABI is the contract, "
+      "the backend is a deployment choice (paper, Conclusions).")

@@ -1,0 +1,15 @@
+"""Serving example: batched generation with continuous KV-cache decode.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import serve as serve_cli
+
+if __name__ == "__main__":
+    reqs = serve_cli.main(["--arch", "qwen2-0.5b", "--smoke",
+                           "--batch", "4", "--prompt-len", "12",
+                           "--new-tokens", "12"])
+    assert all(len(r.out_tokens) == 12 for r in reqs)

@@ -1,0 +1,24 @@
+"""repro.core — the PAX ABI: a standard collective ABI for JAX runtimes.
+
+The paper's contribution (MPI ABI standardization, EuroMPI'23) as a
+composable JAX module.  See DESIGN.md for the full mapping.
+
+Public surface::
+
+    from repro.core import pax_init, PAX_SUM, PAX_COMM_WORLD, ...
+
+    abi = pax_init(mesh, impl="paxi")          # or "ompix", "ring", ...
+    dp  = abi.comm_from_axes(("pod", "data"))  # derived communicator
+    ... inside shard_map: abi.allreduce(g, PAX_SUM, dp) ...
+"""
+from .abi import PaxABI, Request  # noqa: F401
+from .communicator import CommInfo, CommTable  # noqa: F401
+from .constants import *  # noqa: F401,F403
+from .datatypes import DatatypeRegistry, TypeDescriptor, N_PREDEFINED  # noqa: F401
+from .errors import PAX_SUCCESS, PaxError, error_string  # noqa: F401
+from .handles import *  # noqa: F401,F403
+from .handles import HandleKind, describe, handle_kind, is_null, is_predefined  # noqa: F401
+from .interpose import ByteCounter, CallCounter, SequenceStamper, Tool, WallClockTracer  # noqa: F401
+from .ops import OpRegistry  # noqa: F401
+from .registry import available_backends, get_backend, pax_init, register_backend  # noqa: F401
+from .status import STATUS_BYTES, Status, status_array, traced_status  # noqa: F401

@@ -1,0 +1,14 @@
+"""Collective backends — the "MPI implementations" behind the PAX ABI.
+
+* :mod:`paxi`  — native implementation of the standard ABI (MPICH-with-
+  ``--enable-mpi-abi`` analogue): ABI handles are its internal handles,
+  conversions are the identity, overhead is zero by construction.
+* :mod:`ompix` — a *foreign-convention* implementation (Open-MPI analogue):
+  object handles, its own predefined globals, its own error codes and status
+  layout.  Only usable through the Mukautuva translation layer.
+* :mod:`ring`  — algorithmic backend implementing collectives as explicit
+  ``ppermute`` rings (reduce-scatter + all-gather), with an optional int8
+  compressed wire format; used for collective-schedule experiments.
+"""
+from . import paxi, ompix, ring  # noqa: F401
+from .base import Backend  # noqa: F401

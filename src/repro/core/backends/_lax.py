@@ -1,0 +1,152 @@
+"""Shared ``jax.lax`` lowering of the abstract collectives.
+
+All backends that map to XLA collectives funnel through these helpers.
+Axes are ordered mesh-axis tuples (row-major rank order — see
+``communicator.comm_rank_traced``):
+
+* ``reduce_scatter`` applies per-axis scatters in *forward* axis order and
+* ``all_gather`` applies per-axis gathers in *reverse* axis order,
+
+so that chunk index == linearized communicator rank, and the two compose to
+an all-reduce exactly like a ring implementation would.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def rank(axes: Sequence[str]):
+    if not axes:
+        return jnp.int32(0)
+    r = lax.axis_index(axes[0])
+    for a in axes[1:]:
+        r = r * lax.axis_size(a) + lax.axis_index(a)
+    return r
+
+
+def _cpu_safe_dtype(x):
+    """XLA-CPU's AllReducePromotion pass crashes on sub-f32 float all-reduce /
+    reduce-scatter emitted by shard_map (CreateBinary(copy) in CloneAllReduce).
+    On the CPU dry-run container we upcast the wire to f32 and downcast after;
+    on TPU (the target) this shim is inert and the wire stays bf16.
+    EXPERIMENTS.md §Dry-run footnotes the 2x all-reduce-byte inflation."""
+    import jax
+
+    if jax.default_backend() != "cpu":
+        return x, None
+    if jnp.issubdtype(x.dtype, jnp.floating) and jnp.dtype(x.dtype).itemsize < 4:
+        return x.astype(jnp.float32), x.dtype
+    return x, None
+
+
+def psum(x, axes: Sequence[str]):
+    if not axes:
+        return x
+    xw, orig = _cpu_safe_dtype(x)
+    out = lax.psum(xw, tuple(axes))
+    return out.astype(orig) if orig is not None else out
+
+
+def pmax(x, axes: Sequence[str]):
+    return lax.pmax(x, tuple(axes)) if axes else x
+
+
+def pmin(x, axes: Sequence[str]):
+    return lax.pmin(x, tuple(axes)) if axes else x
+
+
+def allreduce_generic(x, fn: Callable, axes: Sequence[str]):
+    """All-reduce for ops XLA has no wire-reduction for (PROD, bitwise,
+    logical, MINLOC/MAXLOC, user callbacks): all-gather + local fold,
+    applied per axis.  This mirrors how MPI implementations lower exotic
+    ops to pt2pt; the ABI makes no claim that every op is wire-native."""
+    for a in axes:
+        g = lax.all_gather(x, a, axis=0, tiled=False)  # (axis_size, *x.shape)
+        n = g.shape[0]
+        acc = g[0]
+        for i in range(1, n):
+            acc = fn(acc, g[i])
+        x = acc
+    return x
+
+
+def allgather(x, axes: Sequence[str], axis: int = 0, tiled: bool = True):
+    for a in reversed(tuple(axes)):
+        x = lax.all_gather(x, a, axis=axis, tiled=tiled)
+    return x
+
+
+def reduce_scatter_sum(x, axes: Sequence[str], axis: int = 0):
+    xw, orig = _cpu_safe_dtype(x)
+    for a in tuple(axes):
+        xw = lax.psum_scatter(xw, a, scatter_dimension=axis, tiled=True)
+    return xw.astype(orig) if orig is not None else xw
+
+
+def reduce_scatter_generic(x, fn: Callable, axes: Sequence[str], axis: int = 0):
+    """Generic-op reduce-scatter: all-reduce then slice own chunk."""
+    x = allreduce_generic(x, fn, axes)
+    r = rank(axes)
+    import math
+
+    total = math.prod(lax.axis_size(a) for a in axes) if axes else 1
+    chunk = x.shape[axis] // total
+    return lax.dynamic_slice_in_dim(x, r * chunk, chunk, axis=axis)
+
+
+def alltoall(x, axes: Sequence[str], split_axis: int, concat_axis: int, tiled: bool = True):
+    if len(axes) != 1:
+        raise NotImplementedError(
+            "alltoall is defined over single-axis communicators "
+            f"(got axes={tuple(axes)}); split the communicator"
+        )
+    return lax.all_to_all(x, axes[0], split_axis, concat_axis, tiled=tiled)
+
+
+def ppermute(x, axes: Sequence[str], perm):
+    if not axes:  # group of one: the only legal perm is the identity
+        return x
+    if len(axes) != 1:
+        raise NotImplementedError("point-to-point permutation needs a single-axis comm")
+    return lax.ppermute(x, axes[0], perm)
+
+
+def bcast(x, root: int, axes: Sequence[str]):
+    """Broadcast from linearized rank ``root`` via masked psum (one
+    all-reduce; avoids materializing a full all-gather)."""
+    if not axes:
+        return x
+    r = rank(axes)
+    mask = (r == root).astype(x.dtype)
+    return lax.psum(x * mask, tuple(axes)) if jnp.issubdtype(x.dtype, jnp.floating) else lax.psum(
+        jnp.where(r == root, x, jnp.zeros_like(x)), tuple(axes)
+    )
+
+
+def barrier(axes: Sequence[str]):
+    """Synchronization point: a zero-payload all-reduce the scheduler cannot
+    elide (optimization_barrier on both sides)."""
+    if not axes:
+        return None
+    t = jnp.zeros((), dtype=jnp.float32)
+    (t,) = lax.optimization_barrier((t,))
+    t = lax.psum(t, tuple(axes))
+    (t,) = lax.optimization_barrier((t,))
+    return t
+
+
+def scatter_from_root(x, root: int, axes: Sequence[str], axis: int = 0):
+    """SPMD scatter: input replicated (or defined on root); each device takes
+    its chunk. With root!=self the payload still moves via the bcast."""
+    x = bcast(x, root, axes)
+    r = rank(axes)
+    import math
+
+    total = math.prod(lax.axis_size(a) for a in axes) if axes else 1
+    chunk = x.shape[axis] // total
+    return lax.dynamic_slice_in_dim(x, r * chunk, chunk, axis=axis)

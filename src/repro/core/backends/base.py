@@ -1,0 +1,86 @@
+"""The implementation-side (IMPL) interface every backend provides.
+
+This is what the paper calls "the implementation": the paxi backend speaks
+the ABI handle convention natively; foreign backends (ompix) speak their own
+convention and are adapted by :mod:`repro.core.mukautuva`.
+
+The methods take *backend-domain* handles.  For paxi those ARE the ABI ints;
+for ompix they are its own objects.  The ABI layer never calls a foreign
+backend directly.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+
+
+class Backend(abc.ABC):
+    """Abstract collective backend."""
+
+    #: "abi" if the backend's handle convention IS the standard ABI
+    #: (no translation layer needed), "foreign" otherwise.
+    convention: str = "abi"
+    name: str = "base"
+
+    def __init__(self, mesh: Optional[jax.sharding.Mesh] = None) -> None:
+        self.mesh = mesh
+
+    # -- handle domain ----------------------------------------------------
+    @abc.abstractmethod
+    def comm_axes(self, comm: Any) -> tuple[str, ...]:
+        """Ordered mesh axes of a backend-domain communicator."""
+
+    @abc.abstractmethod
+    def op_fn(self, op: Any) -> Callable:
+        """Binary reduction fn of a backend-domain op handle."""
+
+    def op_is_native(self, op: Any) -> bool:
+        return False
+
+    # -- queries -----------------------------------------------------------
+    @abc.abstractmethod
+    def size(self, comm: Any) -> int: ...
+
+    @abc.abstractmethod
+    def rank(self, comm: Any): ...
+
+    @abc.abstractmethod
+    def type_size(self, datatype: Any) -> int: ...
+
+    # -- collectives (values are per-device jnp arrays inside shard_map) ---
+    @abc.abstractmethod
+    def allreduce(self, x, op: Any, comm: Any): ...
+
+    @abc.abstractmethod
+    def reduce(self, x, op: Any, root: int, comm: Any): ...
+
+    @abc.abstractmethod
+    def bcast(self, x, root: int, comm: Any): ...
+
+    @abc.abstractmethod
+    def reduce_scatter(self, x, op: Any, comm: Any, axis: int = 0): ...
+
+    @abc.abstractmethod
+    def allgather(self, x, comm: Any, axis: int = 0): ...
+
+    @abc.abstractmethod
+    def alltoall(self, x, comm: Any, split_axis: int = 0, concat_axis: int = 0): ...
+
+    @abc.abstractmethod
+    def sendrecv(self, x, perm: Sequence[tuple[int, int]], comm: Any): ...
+
+    @abc.abstractmethod
+    def barrier(self, comm: Any): ...
+
+    @abc.abstractmethod
+    def scatter(self, x, root: int, comm: Any, axis: int = 0): ...
+
+    def gather(self, x, root: int, comm: Any, axis: int = 0):
+        # SPMD gather == allgather (result defined on root, replicated
+        # elsewhere); subclasses may specialize.
+        return self.allgather(x, comm, axis=axis)
+
+    def alltoallw(self, blocks, sendtypes, recvtypes, comm: Any):
+        raise NotImplementedError(f"{self.name} does not implement alltoallw")

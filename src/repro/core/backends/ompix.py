@@ -1,0 +1,321 @@
+"""ompix — a foreign-convention collective implementation (Open MPI analogue).
+
+Everything about it deliberately mismatches the standard ABI, the way Open
+MPI's convention mismatches MPICH's (paper §3):
+
+* handles are **objects** (the incomplete-struct-pointer design of §3.3,
+  "increased type safety ... compiler can flag mismatches"): identity-
+  compared, not integers, not compile-time constants;
+* predefined handles are module-level globals (``ompix_comm_world``,
+  ``ompix_mpi_float`` — cf. ``OMPI_PREDEFINED_GLOBAL``);
+* datatype size is found by dereferencing a descriptor (the 352-byte struct
+  chase of §3.3, ``opal_datatype_type_size``), never from handle bits;
+* the status convention is Open MPI's §3.2.3 layout:
+  ``{MPI_SOURCE, MPI_TAG, MPI_ERROR, _cancelled, _ucount}``;
+* error codes use ompix's own numbering (success is 0 — the one value every
+  convention shares).
+
+All functions follow the C-ish convention ``(code, result)`` — no
+exceptions.  Only :mod:`repro.core.mukautuva` should call this module.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import numpy as np
+
+from ..ops import PREDEFINED_OP_FNS  # semantics only; handle domains differ
+from .. import handles as H
+from . import _lax
+
+# ---------------------------------------------------------------------------
+# ompix error codes (its own numbering)
+# ---------------------------------------------------------------------------
+OMPIX_SUCCESS = 0
+OMPIX_ERR_ARG = 71
+OMPIX_ERR_COMM = 72
+OMPIX_ERR_TYPE = 73
+OMPIX_ERR_OP = 74
+OMPIX_ERR_UNSUPPORTED = 75
+OMPIX_ERR_COUNT = 76
+OMPIX_ERR_RANK = 77
+OMPIX_ERR_INTERN = 78
+
+
+# ---------------------------------------------------------------------------
+# ompix handle objects ("incomplete struct pointers": opaque, identity-based)
+# ---------------------------------------------------------------------------
+class OmpixComm:
+    __slots__ = ("axes", "_name")
+
+    def __init__(self, axes: tuple[str, ...], name: str) -> None:
+        self.axes = axes
+        self._name = name
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"<ompix_communicator_t* {self._name}>"
+
+
+@dataclasses.dataclass(eq=False)
+class OmpixDatatype:
+    """The descriptor an OMPI-style impl chases a pointer into (§3.3)."""
+
+    dname: str
+    size: int
+    numpy_dtype: Optional[np.dtype]
+    # padding fields modelling the large internal struct (never read)
+    _align: int = 8
+    _flags: int = 0
+    _id: int = 0
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"<ompix_datatype_t* {self.dname}>"
+
+
+class OmpixOp:
+    __slots__ = ("fn", "commute", "oname", "is_native")
+
+    def __init__(self, fn: Callable, commute: bool, oname: str, is_native: bool) -> None:
+        self.fn = fn
+        self.commute = commute
+        self.oname = oname
+        self.is_native = is_native
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"<ompix_op_t* {self.oname}>"
+
+
+# predefined globals (OMPI_PREDEFINED_GLOBAL analogue) ----------------------
+ompix_comm_null = OmpixComm((), "OMPIX_COMM_NULL")
+# world/self axes are bound per-instance (mesh-dependent); the globals below
+# are the *identity tokens*; OmpixLib maps them to per-mesh axis tuples.
+
+_OMPIX_DTYPE_GLOBALS: dict[str, OmpixDatatype] = {}
+
+
+def _dt(dname: str, size: int, np_dtype: Optional[str]) -> OmpixDatatype:
+    d = OmpixDatatype(dname, size, np.dtype(np_dtype) if np_dtype else None)
+    _OMPIX_DTYPE_GLOBALS[dname] = d
+    return d
+
+
+ompix_datatype_null = _dt("OMPIX_DATATYPE_NULL", 0, None)
+ompix_mpi_int8 = _dt("OMPIX_INT8", 1, "int8")
+ompix_mpi_uint8 = _dt("OMPIX_UINT8", 1, "uint8")
+ompix_mpi_int16 = _dt("OMPIX_INT16", 2, "int16")
+ompix_mpi_uint16 = _dt("OMPIX_UINT16", 2, "uint16")
+ompix_mpi_int32 = _dt("OMPIX_INT32", 4, "int32")
+ompix_mpi_uint32 = _dt("OMPIX_UINT32", 4, "uint32")
+ompix_mpi_int64 = _dt("OMPIX_INT64", 8, "int64")
+ompix_mpi_uint64 = _dt("OMPIX_UINT64", 8, "uint64")
+ompix_mpi_float16 = _dt("OMPIX_FLOAT16", 2, "float16")
+ompix_mpi_float = _dt("OMPIX_FLOAT", 4, "float32")
+ompix_mpi_double = _dt("OMPIX_DOUBLE", 8, "float64")
+ompix_mpi_complex64 = _dt("OMPIX_COMPLEX64", 8, "complex64")
+ompix_mpi_complex128 = _dt("OMPIX_COMPLEX128", 16, "complex128")
+ompix_mpi_byte = _dt("OMPIX_BYTE", 1, "uint8")
+try:
+    import jax.numpy as _jnp
+
+    ompix_mpi_bfloat16 = _dt("OMPIX_BFLOAT16", 2, None)
+    _OMPIX_DTYPE_GLOBALS["OMPIX_BFLOAT16"] = OmpixDatatype(
+        "OMPIX_BFLOAT16", 2, np.dtype(_jnp.bfloat16)
+    )
+    ompix_mpi_bfloat16 = _OMPIX_DTYPE_GLOBALS["OMPIX_BFLOAT16"]
+except Exception:  # pragma: no cover
+    pass
+
+_OMPIX_OP_GLOBALS: dict[str, OmpixOp] = {}
+
+
+def _op(oname: str, abi_handle: int, native: bool) -> OmpixOp:
+    o = OmpixOp(PREDEFINED_OP_FNS[abi_handle], True, oname, native)
+    _OMPIX_OP_GLOBALS[oname] = o
+    return o
+
+
+ompix_op_sum = _op("OMPIX_SUM", H.PAX_SUM, True)
+ompix_op_min = _op("OMPIX_MIN", H.PAX_MIN, True)
+ompix_op_max = _op("OMPIX_MAX", H.PAX_MAX, True)
+ompix_op_prod = _op("OMPIX_PROD", H.PAX_PROD, False)
+ompix_op_band = _op("OMPIX_BAND", H.PAX_BAND, False)
+ompix_op_bor = _op("OMPIX_BOR", H.PAX_BOR, False)
+ompix_op_bxor = _op("OMPIX_BXOR", H.PAX_BXOR, False)
+ompix_op_land = _op("OMPIX_LAND", H.PAX_LAND, False)
+ompix_op_lor = _op("OMPIX_LOR", H.PAX_LOR, False)
+ompix_op_lxor = _op("OMPIX_LXOR", H.PAX_LXOR, False)
+ompix_op_minloc = _op("OMPIX_MINLOC", H.PAX_MINLOC, False)
+ompix_op_maxloc = _op("OMPIX_MAXLOC", H.PAX_MAXLOC, False)
+ompix_op_replace = _op("OMPIX_REPLACE", H.PAX_REPLACE, False)
+ompix_op_no_op = _op("OMPIX_NO_OP", H.PAX_NO_OP, False)
+
+
+def opal_datatype_type_size(dtype: OmpixDatatype) -> tuple[int, int]:
+    """The §3.3 lookup: ``*size = pData->size; return 0;``"""
+    return OMPIX_SUCCESS, dtype.size
+
+
+class OmpixLib:
+    """The foreign implementation library ("libompix.so")."""
+
+    name = "ompix"
+
+    def __init__(self, mesh: Optional[jax.sharding.Mesh] = None) -> None:
+        self.mesh = mesh
+        axes = tuple(mesh.axis_names) if mesh is not None else ()
+        self.comm_world = OmpixComm(axes, "OMPIX_COMM_WORLD")
+        self.comm_self = OmpixComm((), "OMPIX_COMM_SELF")
+        self.comm_null = ompix_comm_null
+        self.dtype_globals = dict(_OMPIX_DTYPE_GLOBALS)
+        self.op_globals = dict(_OMPIX_OP_GLOBALS)
+
+    # -- object constructors --------------------------------------------
+    def Comm_from_axes(self, axes: Sequence[str]) -> tuple[int, Optional[OmpixComm]]:
+        if self.mesh is None:
+            return OMPIX_ERR_COMM, None
+        axes = tuple(axes)
+        if any(a not in self.mesh.axis_names for a in axes):
+            return OMPIX_ERR_ARG, None
+        return OMPIX_SUCCESS, OmpixComm(axes, f"ompix_comm{axes}")
+
+    def Op_create(self, fn: Callable, commute: bool) -> tuple[int, Optional[OmpixOp]]:
+        if not callable(fn):
+            return OMPIX_ERR_OP, None
+        return OMPIX_SUCCESS, OmpixOp(fn, commute, "ompix_user_op", False)
+
+    def Type_contiguous(
+        self, count: int, base: OmpixDatatype
+    ) -> tuple[int, Optional[OmpixDatatype]]:
+        if not isinstance(base, OmpixDatatype):
+            return OMPIX_ERR_TYPE, None
+        return OMPIX_SUCCESS, OmpixDatatype(
+            f"contig({count},{base.dname})", base.size * count, base.numpy_dtype
+        )
+
+    # -- queries ----------------------------------------------------------
+    def Comm_size(self, comm: OmpixComm) -> tuple[int, int]:
+        if not isinstance(comm, OmpixComm) or comm is ompix_comm_null:
+            return OMPIX_ERR_COMM, -1
+        if self.mesh is None or not comm.axes:
+            return OMPIX_SUCCESS, 1
+        import math
+
+        return OMPIX_SUCCESS, math.prod(self.mesh.shape[a] for a in comm.axes)
+
+    def Comm_rank(self, comm: OmpixComm) -> tuple[int, Any]:
+        if not isinstance(comm, OmpixComm) or comm is ompix_comm_null:
+            return OMPIX_ERR_COMM, -1
+        return OMPIX_SUCCESS, _lax.rank(comm.axes)
+
+    def Type_size(self, dtype: OmpixDatatype) -> tuple[int, int]:
+        if not isinstance(dtype, OmpixDatatype):
+            return OMPIX_ERR_TYPE, -1
+        return opal_datatype_type_size(dtype)
+
+    # -- collectives -------------------------------------------------------
+    def _check(self, comm, op=None) -> int:
+        if not isinstance(comm, OmpixComm) or comm is ompix_comm_null:
+            return OMPIX_ERR_COMM
+        if op is not None and not isinstance(op, OmpixOp):
+            return OMPIX_ERR_OP
+        return OMPIX_SUCCESS
+
+    def Allreduce(self, x, op: OmpixOp, comm: OmpixComm):
+        rc = self._check(comm, op)
+        if rc:
+            return rc, None
+        if op is self.op_globals.get("OMPIX_SUM") or op.oname == "OMPIX_SUM":
+            return OMPIX_SUCCESS, _lax.psum(x, comm.axes)
+        if op.oname == "OMPIX_MAX":
+            return OMPIX_SUCCESS, _lax.pmax(x, comm.axes)
+        if op.oname == "OMPIX_MIN":
+            return OMPIX_SUCCESS, _lax.pmin(x, comm.axes)
+        return OMPIX_SUCCESS, _lax.allreduce_generic(x, op.fn, comm.axes)
+
+    def Reduce(self, x, op: OmpixOp, root: int, comm: OmpixComm):
+        return self.Allreduce(x, op, comm)
+
+    def Bcast(self, x, root: int, comm: OmpixComm):
+        rc = self._check(comm)
+        if rc:
+            return rc, None
+        return OMPIX_SUCCESS, _lax.bcast(x, root, comm.axes)
+
+    def Reduce_scatter(self, x, op: OmpixOp, comm: OmpixComm, axis: int = 0):
+        rc = self._check(comm, op)
+        if rc:
+            return rc, None
+        if op.oname == "OMPIX_SUM":
+            return OMPIX_SUCCESS, _lax.reduce_scatter_sum(x, comm.axes, axis=axis)
+        return OMPIX_SUCCESS, _lax.reduce_scatter_generic(x, op.fn, comm.axes, axis=axis)
+
+    def Allgather(self, x, comm: OmpixComm, axis: int = 0):
+        rc = self._check(comm)
+        if rc:
+            return rc, None
+        return OMPIX_SUCCESS, _lax.allgather(x, comm.axes, axis=axis)
+
+    def Alltoall(self, x, comm: OmpixComm, split_axis: int = 0, concat_axis: int = 0):
+        rc = self._check(comm)
+        if rc:
+            return rc, None
+        try:
+            return OMPIX_SUCCESS, _lax.alltoall(x, comm.axes, split_axis, concat_axis)
+        except NotImplementedError:
+            return OMPIX_ERR_UNSUPPORTED, None
+
+    def Alltoallw(self, blocks, sendtypes, recvtypes, comm: OmpixComm):
+        """Per-peer-typed alltoall over leading axis (one block per peer).
+
+        The cast to each peer's recv type is the per-element conversion work
+        whose bookkeeping gives Mukautuva its worst case (§6.2).
+        """
+        rc = self._check(comm)
+        if rc:
+            return rc, None
+        if any(not isinstance(t, OmpixDatatype) for t in list(sendtypes) + list(recvtypes)):
+            return OMPIX_ERR_TYPE, None
+        try:
+            out = _lax.alltoall(blocks, comm.axes, 0, 0)
+        except NotImplementedError:
+            return OMPIX_ERR_UNSUPPORTED, None
+        import jax.numpy as jnp
+
+        parts = [
+            out[i].astype(recvtypes[i].numpy_dtype) if recvtypes[i].numpy_dtype else out[i]
+            for i in range(out.shape[0])
+        ]
+        return OMPIX_SUCCESS, parts
+
+    def Sendrecv(self, x, perm, comm: OmpixComm):
+        rc = self._check(comm)
+        if rc:
+            return rc, None, None
+        try:
+            y = _lax.ppermute(x, comm.axes, perm)
+        except NotImplementedError:
+            return OMPIX_ERR_UNSUPPORTED, None, None
+        # ompix status convention (§3.2.3 layout)
+        status = {
+            "MPI_SOURCE": -1,
+            "MPI_TAG": 0,
+            "MPI_ERROR": OMPIX_SUCCESS,
+            "_cancelled": 0,
+            "_ucount": int(np.prod(x.shape)) if hasattr(x, "shape") else 0,
+        }
+        return OMPIX_SUCCESS, y, status
+
+    def Barrier(self, comm: OmpixComm):
+        rc = self._check(comm)
+        if rc:
+            return rc
+        _lax.barrier(comm.axes)
+        return OMPIX_SUCCESS
+
+    def Scatter(self, x, root: int, comm: OmpixComm, axis: int = 0):
+        rc = self._check(comm)
+        if rc:
+            return rc, None
+        return OMPIX_SUCCESS, _lax.scatter_from_root(x, root, comm.axes, axis=axis)

@@ -1,0 +1,148 @@
+"""ring — an algorithmic ABI-native backend: explicit ring collectives.
+
+Same handle convention as :mod:`paxi` (it is a second *native* implementation
+of the standard ABI — the ecosystem the paper wants: N interchangeable
+implementations behind one ABI).  Collectives lower to explicit
+``ppermute`` ring schedules instead of single XLA collective ops:
+
+* ring reduce-scatter + ring all-gather == bandwidth-optimal all-reduce,
+  with per-step traffic visible in the HLO (useful for the roofline tool
+  and for overlap experiments — each hop is an independently schedulable
+  ``collective-permute``);
+* optional wire compression (``compress="bf16"|"int8"``): payload quantized
+  per hop, accumulated in the original dtype.  int8 uses a per-hop absmax
+  scale.  This is the gradient-compression substrate (train/compression.py
+  adds error feedback on top).
+
+Multi-axis communicators reduce hierarchically (axis by axis) — the classic
+2D-torus schedule.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .. import handles as H
+from . import _lax
+from .paxi import PaxiBackend
+
+
+def _quantize(x, compress: Optional[str]):
+    if compress is None:
+        return x, None
+    if compress == "bf16":
+        return x.astype(jnp.bfloat16), None
+    if compress == "int8":
+        scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-30) / 127.0
+        q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+        return q, scale
+    raise ValueError(f"unknown compression {compress!r}")
+
+
+def _dequantize(q, scale, dtype, compress: Optional[str]):
+    if compress is None:
+        return q
+    if compress == "bf16":
+        return q.astype(dtype)
+    return q.astype(dtype) * scale
+
+
+def ring_reduce_scatter(x, axis_name: str, compress: Optional[str] = None):
+    """Returns this rank's fully-reduced chunk (chunk index == rank).
+
+    ``x`` must have leading dim divisible by the axis size. S-1 hops.
+    """
+    S = lax.axis_size(axis_name)
+    if S == 1:
+        return x
+    i = lax.axis_index(axis_name)
+    n = x.shape[0]
+    assert n % S == 0, f"ring reduce_scatter needs {S} | {n}"
+    c = n // S
+    perm = [(s, (s + 1) % S) for s in range(S)]
+
+    def chunk_at(idx):
+        return lax.dynamic_slice_in_dim(x, idx * c, c, axis=0)
+
+    travel = chunk_at((i - 1) % S)
+    for t in range(S - 1):
+        q, scale = _quantize(travel, compress)
+        q = lax.ppermute(q, axis_name, perm)
+        if scale is not None:
+            scale = lax.ppermute(scale, axis_name, perm)
+        received = _dequantize(q, scale, x.dtype, compress)
+        travel = received + chunk_at((i - 2 - t) % S)
+    return travel  # chunk index == own rank
+
+
+def ring_allgather(x, axis_name: str):
+    """Inverse of ring_reduce_scatter: collect every rank's chunk. S-1 hops."""
+    S = lax.axis_size(axis_name)
+    if S == 1:
+        return x
+    i = lax.axis_index(axis_name)
+    c = x.shape[0]
+    perm = [(s, (s + 1) % S) for s in range(S)]
+    out = jnp.zeros((S * c,) + x.shape[1:], dtype=x.dtype)
+    out = lax.dynamic_update_slice_in_dim(out, x, i * c, axis=0)
+    travel = x
+    for t in range(S - 1):
+        travel = lax.ppermute(travel, axis_name, perm)
+        src = (i - 1 - t) % S  # who produced the chunk we just received
+        out = lax.dynamic_update_slice_in_dim(out, travel, src * c, axis=0)
+    return out
+
+
+def _pad_to_multiple(x, m: int):
+    n = x.shape[0]
+    pad = (-n) % m
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
+    return x, n
+
+
+class RingBackend(PaxiBackend):
+    """ABI-native backend with explicit ring schedules for SUM collectives.
+
+    Non-SUM ops and non-flattenable payloads fall back to the paxi lowering
+    (an implementation is free to mix algorithms per op — MPI
+    implementations do exactly this).
+    """
+
+    name = "ring"
+
+    def __init__(self, *args, compress: Optional[str] = None, **kwargs) -> None:
+        super().__init__(*args, **kwargs)
+        self.compress = compress
+
+    # -- all-reduce: hierarchical ring RS+AG per axis ----------------------
+    def allreduce(self, x, op: int, comm: int):
+        axes = self.comm_axes(comm)
+        if op != H.PAX_SUM or not axes:
+            return super().allreduce(x, op, comm)
+        orig_shape = x.shape
+        flat = x.reshape(-1)
+        for a in axes:
+            S = self.comms.mesh.shape[a] if self.comms.mesh else 1
+            padded, n = _pad_to_multiple(flat, S)
+            chunk = ring_reduce_scatter(padded, a, self.compress)
+            flat = ring_allgather(chunk, a)[:n]
+        return flat.reshape(orig_shape)
+
+    def reduce_scatter(self, x, op: int, comm: int, axis: int = 0):
+        axes = self.comm_axes(comm)
+        if op != H.PAX_SUM or len(axes) != 1 or axis != 0:
+            return super().reduce_scatter(x, op, comm, axis=axis)
+        S = self.comms.mesh.shape[axes[0]] if self.comms.mesh else 1
+        if x.shape[0] % S:
+            return super().reduce_scatter(x, op, comm, axis=axis)
+        return ring_reduce_scatter(x, axes[0], self.compress)
+
+    def allgather(self, x, comm: int, axis: int = 0):
+        axes = self.comm_axes(comm)
+        if len(axes) != 1 or axis != 0:
+            return super().allgather(x, comm, axis=axis)
+        return ring_allgather(x, axes[0])

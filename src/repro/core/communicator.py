@@ -1,0 +1,110 @@
+"""Communicators over JAX mesh axes.
+
+An MPI communicator names an ordered process group.  In the JAX SPMD world
+the processes are mesh devices, so a communicator resolves to an ordered
+tuple of mesh axis names; collective calls made inside ``shard_map`` regions
+lower over exactly those axes.
+
+* ``PAX_COMM_WORLD`` → every axis of the active mesh (in mesh order);
+* ``PAX_COMM_SELF``  → the empty axis tuple (group of one device);
+* derived communicators (``comm_from_axes`` — the ``MPI_Comm_split``-shaped
+  constructor) name axis subsets, e.g. the data-parallel group
+  ``("pod", "data")`` or the expert-parallel group ``("model",)``.
+
+Handles are the ABI ints from :mod:`handles`; per-context tables map them to
+:class:`CommInfo`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+import jax
+from jax import lax
+
+from . import handles as H
+from .errors import PAX_ERR_COMM, PaxError
+
+
+@dataclasses.dataclass(frozen=True)
+class CommInfo:
+    handle: int
+    axes: tuple[str, ...]  # ordered mesh axes; () == SELF
+    mesh_axis_sizes: tuple[int, ...]
+    name: str = ""
+
+    @property
+    def size(self) -> int:
+        return math.prod(self.mesh_axis_sizes) if self.mesh_axis_sizes else 1
+
+
+class CommTable:
+    """Per-ABI-context communicator table."""
+
+    def __init__(self, mesh: Optional[jax.sharding.Mesh]) -> None:
+        self._mesh = mesh
+        self._table: dict[int, CommInfo] = {}
+        self._next_index = 0
+        axes = tuple(mesh.axis_names) if mesh is not None else ()
+        sizes = tuple(mesh.shape[a] for a in axes) if mesh is not None else ()
+        self._table[H.PAX_COMM_WORLD] = CommInfo(
+            H.PAX_COMM_WORLD, axes, sizes, "PAX_COMM_WORLD"
+        )
+        self._table[H.PAX_COMM_SELF] = CommInfo(H.PAX_COMM_SELF, (), (), "PAX_COMM_SELF")
+
+    @property
+    def mesh(self) -> Optional[jax.sharding.Mesh]:
+        return self._mesh
+
+    def info(self, handle: int) -> CommInfo:
+        H.check_handle(handle, H.HandleKind.COMM)
+        if handle == H.PAX_COMM_NULL:
+            raise PaxError(PAX_ERR_COMM, "PAX_COMM_NULL")
+        try:
+            return self._table[handle]
+        except KeyError:
+            raise PaxError(PAX_ERR_COMM, H.describe(handle)) from None
+
+    def comm_from_axes(self, axes: Sequence[str], name: str = "") -> int:
+        """Create a communicator over a subset of mesh axes (split analogue)."""
+        if self._mesh is None:
+            raise PaxError(PAX_ERR_COMM, "no mesh bound to this context")
+        axes = tuple(axes)
+        for a in axes:
+            if a not in self._mesh.axis_names:
+                raise PaxError(PAX_ERR_COMM, f"axis {a!r} not in mesh {self._mesh.axis_names}")
+        handle = H.make_user_handle(H.HandleKind.COMM, self._next_index)
+        self._next_index += 1
+        sizes = tuple(self._mesh.shape[a] for a in axes)
+        self._table[handle] = CommInfo(handle, axes, sizes, name or f"axes{axes}")
+        return handle
+
+    def comm_dup(self, handle: int) -> int:
+        info = self.info(handle)
+        new = H.make_user_handle(H.HandleKind.COMM, self._next_index)
+        self._next_index += 1
+        self._table[new] = dataclasses.replace(info, handle=new, name=info.name + "+dup")
+        return new
+
+    def comm_free(self, handle: int) -> None:
+        if H.is_predefined(handle):
+            raise PaxError(PAX_ERR_COMM, "cannot free a predefined communicator")
+        self._table.pop(handle, None)
+
+
+def comm_rank_traced(info: CommInfo):
+    """Linearized rank within the communicator (row-major over its axes).
+
+    Only valid inside a shard_map region where the axes are bound manual.
+    """
+    if not info.axes:
+        return 0
+    rank = lax.axis_index(info.axes[0])
+    for a in info.axes[1:]:
+        rank = rank * lax.axis_size(a) + lax.axis_index(a)
+    return rank
+
+
+def comm_size_static(info: CommInfo) -> int:
+    return info.size

@@ -1,0 +1,88 @@
+"""Error codes and error classes of the PAX ABI.
+
+``PAX_SUCCESS`` is 0 (the MPI requirement the paper leans on for the
+translation fast path: *"success is the common case, so static inline it"*
+— §6.2 Mukautuva listing, ``RETURN_CODE_IMPL_TO_MUK``).
+
+Error *classes* are small positive ints below ``PAX_INT_CONSTANT_MAX``.
+Foreign backends (``backends/ompix.py``) use their own numbering; the
+Mukautuva layer translates through :func:`ErrorTranslator.to_abi` with the
+same shape as the paper's listing: a ``static inline`` zero check followed by
+an out-of-line table lookup.
+"""
+from __future__ import annotations
+
+from typing import Mapping
+
+PAX_SUCCESS = 0
+PAX_ERR_BUFFER = 1
+PAX_ERR_COUNT = 2
+PAX_ERR_TYPE = 3
+PAX_ERR_TAG = 4
+PAX_ERR_COMM = 5
+PAX_ERR_RANK = 6
+PAX_ERR_REQUEST = 7
+PAX_ERR_ROOT = 8
+PAX_ERR_GROUP = 9
+PAX_ERR_OP = 10
+PAX_ERR_TOPOLOGY = 11
+PAX_ERR_DIMS = 12
+PAX_ERR_ARG = 13
+PAX_ERR_UNKNOWN = 14
+PAX_ERR_TRUNCATE = 15
+PAX_ERR_OTHER = 16
+PAX_ERR_INTERN = 17
+PAX_ERR_PENDING = 18
+PAX_ERR_IN_STATUS = 19
+PAX_ERR_KEYVAL = 20
+PAX_ERR_NO_MEM = 21
+PAX_ERR_INFO = 22
+PAX_ERR_UNSUPPORTED_OPERATION = 23
+PAX_ERR_LASTCODE = 64
+
+_ERROR_NAMES = {
+    value: name
+    for name, value in list(globals().items())
+    if name.startswith("PAX_ERR_") or name == "PAX_SUCCESS"
+}
+
+
+def error_string(code: int) -> str:
+    """``MPI_Error_string`` analogue."""
+    return _ERROR_NAMES.get(code, f"PAX_ERR_UNKNOWN({code})")
+
+
+class PaxError(RuntimeError):
+    """Raised where C MPI would return a nonzero error code.
+
+    The ABI surface (``core/abi.py``) converts backend error codes into this
+    exception when the installed error handler is ``PAX_ERRORS_ARE_FATAL``
+    (the default, as in MPI on PAX_COMM_WORLD-equivalents), and returns codes
+    when it is ``PAX_ERRORS_RETURN``.
+    """
+
+    def __init__(self, code: int, detail: str = "") -> None:
+        self.code = code
+        msg = error_string(code)
+        if detail:
+            msg = f"{msg}: {detail}"
+        super().__init__(msg)
+
+
+class ErrorTranslator:
+    """IMPL→ABI error-code translation (paper §6.2 listing).
+
+    The zero fast path is inlined at every call site by construction (a
+    Python ``if`` — the analogue of the paper's ``static inline`` wrapper);
+    the table lookup happens only on errors.
+    """
+
+    def __init__(self, impl_to_abi: Mapping[int, int]) -> None:
+        if any(k == 0 for k in impl_to_abi):
+            raise ValueError("0 is PAX_SUCCESS in every convention")
+        self._table = dict(impl_to_abi)
+
+    def to_abi(self, impl_code: int) -> int:
+        if impl_code == 0:  # success fast path
+            return PAX_SUCCESS
+        return self._table.get(impl_code, PAX_ERR_UNKNOWN)

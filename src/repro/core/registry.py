@@ -1,0 +1,90 @@
+"""Backend discovery and context initialization — the ``dlopen``/``dlsym``
+analogue (paper §6.2: "the first shared library determines which
+implementation will be used, and activates it via dlopen and dlsym").
+
+Selection order: explicit ``impl=`` argument, else ``PAX_ABI_IMPL``
+environment variable, else the native default ``paxi`` — mirroring how
+Mukautuva picks the IMPL shared object at runtime.
+
+Names:
+
+* ``paxi``       — native ABI implementation (zero-overhead path, §6.3);
+* ``ring``       — second native implementation, explicit ring schedules;
+* ``ring-int8`` / ``ring-bf16`` — ring with wire compression;
+* ``ompix``      — foreign implementation, automatically wrapped in the
+  Mukautuva translation layer (§6.2);
+* ``muk:paxi``   — the trampoline wrapped around a *native* library:
+  isolates pure translation-layer overhead (the "+ Mukautuva" rows of
+  Table 1).
+"""
+from __future__ import annotations
+
+import os
+from typing import Callable, Optional, Sequence
+
+import jax
+
+from .abi import PaxABI
+from .backends.base import Backend
+from .backends.ompix import OmpixLib
+from .backends.paxi import PaxiBackend
+from .backends.ring import RingBackend
+from .mukautuva import MukBackend
+
+ENV_VAR = "PAX_ABI_IMPL"
+DEFAULT_IMPL = "paxi"
+
+_FACTORIES: dict[str, Callable[[Optional[jax.sharding.Mesh]], Backend]] = {}
+
+
+def register_backend(name: str, factory: Callable) -> None:
+    _FACTORIES[name] = factory
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(sorted(_FACTORIES))
+
+
+def _muk_paxi(mesh):
+    """Mukautuva over a native library: adapt paxi to the foreign protocol
+    so the full conversion path runs with identity conversions."""
+    from .backends import ompix as ox
+
+    class _PaxiAsForeign(OmpixLib):
+        name = "paxi"
+
+    return MukBackend(_PaxiAsForeign(mesh), mesh)
+
+
+register_backend("paxi", lambda mesh: PaxiBackend(mesh))
+register_backend("ring", lambda mesh: RingBackend(mesh))
+register_backend("ring-int8", lambda mesh: RingBackend(mesh, compress="int8"))
+register_backend("ring-bf16", lambda mesh: RingBackend(mesh, compress="bf16"))
+register_backend("ompix", lambda mesh: MukBackend(OmpixLib(mesh), mesh))
+register_backend("muk:paxi", _muk_paxi)
+
+
+def get_backend(name: str, mesh: Optional[jax.sharding.Mesh] = None) -> Backend:
+    try:
+        factory = _FACTORIES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown PAX ABI implementation {name!r}; available: {available_backends()}"
+        ) from None
+    return factory(mesh)
+
+
+def pax_init(
+    mesh: Optional[jax.sharding.Mesh] = None,
+    impl: Optional[str] = None,
+    tools: Sequence = (),
+) -> PaxABI:
+    """``MPI_Init`` analogue: resolve the implementation, build the context.
+
+    The returned :class:`PaxABI` is the only object user code needs; user
+    code never sees backend-domain handles, so the implementation can be
+    swapped per-init without re-tracing anything built on the ABI.
+    """
+    name = impl or os.environ.get(ENV_VAR, DEFAULT_IMPL)
+    backend = get_backend(name, mesh)
+    return PaxABI(backend, mesh=mesh, tools=tools)

@@ -1,0 +1,107 @@
+"""Causal GQA flash attention — Pallas TPU kernel.
+
+TPU adaptation of the FlashAttention insight (IO-aware tiling + online
+softmax), re-thought for the TPU memory hierarchy per DESIGN.md:
+
+* tiles live in VMEM via BlockSpecs; the MXU consumes (block_q x d) @
+  (d x block_k) matmuls with d and block sizes multiples of 128 where the
+  dtype allows;
+* the kv loop is a grid dimension (minor-most, so it iterates innermost);
+  the softmax running state (m, l) and the output accumulator persist in
+  VMEM scratch across kv steps — the TPU analogue of keeping them in
+  registers/shared memory on GPU;
+* causal block-skipping: kv blocks strictly above the diagonal are skipped
+  with ``pl.when`` (halves the work — the XLA reference computes the full
+  S^2 score matrix, which is exactly the §Perf baseline gap).
+
+Layout: q (BH, S, D) where BH = batch*q_heads; k/v (BKV, S, D) where
+BKV = batch*kv_heads; GQA group = H // Hkv resolved in the index maps.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 scale: float, block_q: int, block_k: int, causal: bool):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # (bq, d)
+        k = k_ref[0].astype(jnp.float32)  # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    if causal:
+        # skip kv blocks strictly above the diagonal
+        pl.when(ki * block_k <= qi * block_q + block_q - 1)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finalize():
+        l = l_scr[...]
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """q: (BH, S, D); k/v: (BKV, S, D); BH % BKV == 0. Returns (BH, S, D)."""
+    BH, S, D = q.shape
+    BKV = k.shape[0]
+    assert BH % BKV == 0, (BH, BKV)
+    group = BH // BKV
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0
+    nq, nk = S // block_q, S // block_k
+    scale = 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, block_q=block_q, block_k=block_k, causal=causal)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, D), lambda bh, qi, ki, g=group: (bh // g, ki, 0)),
+            pl.BlockSpec((1, block_k, D), lambda bh, qi, ki, g=group: (bh // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),   # running max m
+            pltpu.VMEM((block_q,), jnp.float32),   # running denom l
+            pltpu.VMEM((block_q, D), jnp.float32), # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

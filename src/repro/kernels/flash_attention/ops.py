@@ -1,0 +1,39 @@
+"""jit'd public wrapper for the flash-attention kernel.
+
+Accepts model-layout tensors (B, S, H, D) + (B, S, Hkv, D) and handles the
+(BH, S, D) kernel layout, padding S up to the block size if needed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_mha(q, k, v, *, causal: bool = True, block_q: int = 128,
+              block_k: int = 128, interpret: bool = False):
+    """q: (B, S, H, D); k/v: (B, S, Hkv, D) -> (B, S, H, D)."""
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, S, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, S, D)
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    pad = (-S) % max(bq, bk)
+    if pad:
+        qf = jnp.pad(qf, ((0, 0), (0, pad), (0, 0)))
+        kf = jnp.pad(kf, ((0, 0), (0, pad), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad), (0, 0)))
+    # GQA interleave: head h of q maps to kv head h // (H // Hkv); the kernel
+    # index map assumes q heads of one kv group are contiguous, which the
+    # transpose-reshape above guarantees (B-major, then H).
+    out = flash_attention(qf, kf, vf, causal=causal, block_q=bq, block_k=bk,
+                          interpret=interpret)
+    if pad:
+        out = out[:, :S]
+    return out.reshape(B, H, S, D).transpose(0, 2, 1, 3)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the flash-attention kernel (same layout/semantics)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    """q: (BH, S, D); k/v: (BKV, S, D). fp32 math, returns q.dtype."""
+    BH, S, D = q.shape
+    BKV = k.shape[0]
+    group = BH // BKV
+    kx = jnp.repeat(k, group, axis=0).astype(jnp.float32)
+    vx = jnp.repeat(v, group, axis=0).astype(jnp.float32)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), kx) / math.sqrt(D)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, vx).astype(q.dtype)

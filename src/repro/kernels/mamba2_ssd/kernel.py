@@ -1,0 +1,83 @@
+"""Mamba2 SSD chunked scan — Pallas TPU kernel.
+
+Intra-chunk: segment-sum log decays (scalar per step per head) build the
+causal decay matrix; (C B^T) masks it into the token-mixing matrix M; two
+MXU matmuls produce the intra-chunk output.  The (P x N) state is carried
+in VMEM scratch across the chunk grid dimension; inter-chunk output and the
+state update are MXU matmuls as well.
+
+Layout (one head per grid row): x (BH, T, P); dt (BH, T); b/c (BH, T, N)
+(B/C are shared across heads in Mamba2 — the wrapper broadcasts); A (BH,),
+D (BH,).  Output (BH, T, P), fp32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, o_ref, state_scr):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0]        # (c, P)
+    dt = dt_ref[0]      # (c,)
+    b = b_ref[0]        # (c, N)
+    c = c_ref[0]        # (c, N)
+    a = a_ref[0]        # scalar (negative)
+    dd = d_ref[0]       # scalar
+
+    wl = dt * a                                 # per-step log decay (c,)
+    la = jnp.cumsum(wl)                         # inclusive
+    seg = la[:, None] - la[None, :]             # S[t,s] = sum (s..t]
+    cc = x.shape[0]
+    ti = jax.lax.broadcasted_iota(jnp.int32, (cc, cc), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (cc, cc), 1)
+    decay = jnp.where(ti >= si, jnp.exp(seg), 0.0)
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (t, s)
+    M = cb * decay * dt[None, :]
+    y = jax.lax.dot_general(M, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    # inter-chunk: y_t += (C_t * exp(la_t)) . S_in^T   (S: (P, N))
+    q = c * jnp.exp(la)[:, None]                # (c, N)
+    y = y + jax.lax.dot_general(q, state_scr[...], (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y = y + x * dd
+    o_ref[0] = y.astype(o_ref.dtype)
+
+    # state update: S_out = exp(la_end) S_in + sum_s exp(la_end - la_s) dt_s x_s b_s^T
+    k = b * (jnp.exp(la[-1] - la) * dt)[:, None]    # (c, N)
+    state_scr[...] = jnp.exp(la[-1]) * state_scr[...] + jax.lax.dot_general(
+        x, k, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+
+def ssd(x, dt, b, c, a, d, *, chunk: int = 64, interpret: bool = False):
+    """x: (BH,T,P); dt: (BH,T); b/c: (BH,T,N); a/d: (BH,). -> (BH,T,P) fp32."""
+    BH, T, P = x.shape
+    N = b.shape[-1]
+    assert T % chunk == 0
+    nc = T // chunk
+    return pl.pallas_call(
+        _ssd_kernel,
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, P), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk), lambda bh, ci: (bh, ci)),
+            pl.BlockSpec((1, chunk, N), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, N), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1,), lambda bh, ci: (bh,)),
+            pl.BlockSpec((1,), lambda bh, ci: (bh,)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, P), lambda bh, ci: (bh, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, T, P), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, b, c, a, d)

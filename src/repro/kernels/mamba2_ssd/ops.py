@@ -1,0 +1,25 @@
+"""jit'd wrapper: model layout -> per-(batch, head) kernel layout."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_apply(x, dt, A, B, C, D, *, chunk: int = 64, interpret: bool = False):
+    """x: (Bb,T,H,P); dt: (Bb,T,H); A,D: (H,); B,C: (Bb,T,N) (shared across
+    heads, as in Mamba2 ngroups=1). Returns (Bb,T,H,P) fp32."""
+    Bb, T, H, P = x.shape
+    N = B.shape[-1]
+    xf = x.transpose(0, 2, 1, 3).reshape(Bb * H, T, P).astype(jnp.float32)
+    dtf = dt.transpose(0, 2, 1).reshape(Bb * H, T).astype(jnp.float32)
+    bf = jnp.broadcast_to(B[:, None], (Bb, H, T, N)).reshape(Bb * H, T, N).astype(jnp.float32)
+    cf = jnp.broadcast_to(C[:, None], (Bb, H, T, N)).reshape(Bb * H, T, N).astype(jnp.float32)
+    af = jnp.tile(A[None], (Bb, 1)).reshape(Bb * H).astype(jnp.float32)
+    df = jnp.tile(D[None], (Bb, 1)).reshape(Bb * H).astype(jnp.float32)
+    out = ssd(xf, dtf, bf, cf, af, df, chunk=chunk, interpret=interpret)
+    return out.reshape(Bb, H, T, P).transpose(0, 2, 1, 3)

@@ -1,0 +1,31 @@
+"""Sequential ground-truth oracle for the Mamba2 SSD recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, b, c, a, d):
+    """x: (BH,T,P); dt: (BH,T); b/c: (BH,T,N); a,d: (BH,).
+
+        S[p,n] <- exp(dt_t a) S[p,n] + dt_t x_t[p] b_t[n]
+        y_t[p]  = S[p,n] . c_t[n] + d x_t[p]
+    """
+    BH, T, P = x.shape
+    N = b.shape[-1]
+
+    def step(S, xs):
+        xt, dtt, bt, ct = xs
+        decay = jnp.exp(dtt * a)                       # (BH,)
+        upd = (xt * dtt[:, None])[:, :, None] * bt[:, None, :]
+        S = decay[:, None, None] * S + upd
+        y = jnp.einsum("bpn,bn->bp", S, ct) + x_d(xt)
+        return S, y
+
+    def x_d(xt):
+        return xt * d[:, None]
+
+    S0 = jnp.zeros((BH, P, N), jnp.float32)
+    xs = (x.swapaxes(0, 1), dt.swapaxes(0, 1), b.swapaxes(0, 1), c.swapaxes(0, 1))
+    _, ys = jax.lax.scan(step, S0, xs)
+    return ys.swapaxes(0, 1)

@@ -1,0 +1,80 @@
+"""RWKV6 chunked WKV scan — Pallas TPU kernel.
+
+The WKV6 recurrence (data-dependent per-channel decay) in chunked matmul
+form: within a chunk the contribution matrix is built from log-space
+cumulative decays (fp32, clamped — see models/rwkv.py), the running
+(N x N) state lives in VMEM scratch and is carried across the chunk grid
+dimension (minor-most, so chunks of one (batch, head) iterate
+consecutively), the inter-chunk term is a single (chunk x N) @ (N x N)
+MXU matmul.
+
+Layout: r/k/v/wlog (BH, T, N) fp32; u (BH, N); out (BH, T, N).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, state_scr, *, chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    r = r_ref[0]   # (c, N) fp32
+    k = k_ref[0]
+    v = v_ref[0]
+    wl = w_ref[0]  # per-step log decay, < 0
+    u = u_ref[0]   # (1, N) -> broadcast
+
+    la = jnp.cumsum(wl, axis=0)          # inclusive log-decay
+    la_prev = la - wl
+    q_t = r * jnp.exp(la_prev)           # r_t * A_t
+    k_t = k * jnp.exp(-la)               # k_s / A_{s+1}
+    att = jax.lax.dot_general(q_t, k_t, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    c = r.shape[0]
+    ti = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    att = jnp.where(ti > si, att, 0.0)   # strictly lower triangle
+    diag = jnp.sum(r * (u * k), axis=1)  # bonus term
+    y = jax.lax.dot_general(att, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    y = y + diag[:, None] * v
+    y = y + jax.lax.dot_general(q_t, state_scr[...], (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    o_ref[0] = y.astype(o_ref.dtype)
+
+    a_end = jnp.exp(la[-1, :])           # (N,)
+    k_scaled = k * jnp.exp(la[-1:, :] - la)
+    state_scr[...] = a_end[:, None] * state_scr[...] + jax.lax.dot_general(
+        k_scaled, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+
+def wkv6(r, k, v, wlog, u, *, chunk: int = 32, interpret: bool = False):
+    """r/k/v/wlog: (BH, T, N) fp32; u: (BH, N). Returns (BH, T, N) fp32."""
+    BH, T, N = r.shape
+    assert T % chunk == 0, (T, chunk)
+    nc = T // chunk
+    kernel = functools.partial(_wkv_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, N), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, N), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, N), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, N), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, N), lambda bh, ci: (bh, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, N), lambda bh, ci: (bh, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, T, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((N, N), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, wlog, u)

@@ -1,0 +1,20 @@
+"""jit'd wrapper: model layout (B, T, H, N) -> kernel layout (BH, T, N)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import wkv6
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_apply(r, k, v, wlog, u, *, chunk: int = 32, interpret: bool = False):
+    """r/k/v/wlog: (B, T, H, N); u: (H, N). Returns (B, T, H, N) fp32."""
+    B, T, H, N = r.shape
+    to_flat = lambda x: x.transpose(0, 2, 1, 3).reshape(B * H, T, N).astype(jnp.float32)
+    uf = jnp.tile(u[None], (B, 1, 1)).reshape(B * H, N).astype(jnp.float32)
+    out = wkv6(to_flat(r), to_flat(k), to_flat(v), to_flat(wlog), uf,
+               chunk=chunk, interpret=interpret)
+    return out.reshape(B, H, T, N).transpose(0, 2, 1, 3)

@@ -1,0 +1,26 @@
+"""Sequential ground-truth oracle for the WKV6 recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, wlog, u):
+    """r/k/v/wlog: (BH, T, N); u: (BH, N). Sequential scan (ground truth).
+
+        y_t[j]    = sum_i r_t[i] (S[i,j] + u[i] k_t[i] v_t[j])
+        S[i,j]   <- exp(wlog_t[i]) S[i,j] + k_t[i] v_t[j]
+    """
+    BH, T, N = r.shape
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs
+        kv = kt[:, :, None] * vt[:, None, :]          # (BH, N, N)
+        y = jnp.einsum("bi,bij->bj", rt, S + u[:, :, None] * kv)
+        S = jnp.exp(wt)[:, :, None] * S + kv
+        return S, y
+
+    S0 = jnp.zeros((BH, N, N), jnp.float32)
+    xs = tuple(x.swapaxes(0, 1) for x in (r, k, v, wlog))
+    _, ys = jax.lax.scan(step, S0, xs)
+    return ys.swapaxes(0, 1)

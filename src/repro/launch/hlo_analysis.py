@@ -1,0 +1,180 @@
+"""Compiled-HLO analysis: collective-traffic extraction + roofline terms.
+
+``collective_bytes(hlo_text)`` parses the per-partition optimized HLO and
+sums the payload bytes of every collective op (all-reduce, all-gather,
+reduce-scatter, all-to-all, collective-permute, + their async -start
+forms).  Convention: bytes(op) = max(sum of operand bytes, sum of result
+bytes) — i.e. the un-sharded side of the transfer — counted once per op,
+per device.  Used by EXPERIMENTS.md §Roofline and cross-checked against
+the ABI ByteCounter tool.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Optional
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # B/s
+ICI_BW_PER_LINK = 50e9        # B/s
+ICI_LINKS = 4                 # torus links usable per chip (2D torus)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e4m3b11fnuz": 1,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*([\w\-]+)\(")
+_OPERANDS_RE = re.compile(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)")
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Bytes of 'f32[16,128]' or a tuple '(f32[2], bf16[4,4])'."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_op: dict
+    count_by_op: dict
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_op.values())
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    # first pass: result shapes of every definition (for operand lookup)
+    result_shape: dict[str, str] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            result_shape[m.group(1)] = m.group(2)
+
+    bytes_by_op: dict[str, int] = defaultdict(int)
+    count_by_op: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, shape_str, op = m.group(1), m.group(2), m.group(3)
+        base = None
+        for c in COLLECTIVE_OPS:
+            if op == c or op == c + "-start":
+                base = c
+                break
+        if base is None:
+            continue
+        out_bytes = shape_bytes(shape_str)
+        # operand bytes: resolve named operands after the op token
+        tail = line[line.index(op) + len(op):]
+        mo = _OPERANDS_RE.search(tail)
+        in_bytes = 0
+        if mo:
+            for ref in re.findall(r"%([\w.\-]+)", mo.group(1)):
+                if ref in result_shape:
+                    in_bytes += shape_bytes(result_shape[ref])
+        bytes_by_op[base] += max(out_bytes, in_bytes)
+        count_by_op[base] += 1
+    return CollectiveStats(dict(bytes_by_op), dict(count_by_op))
+
+
+# ---------------------------------------------------------------------------
+# roofline terms
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    collective_bytes_per_device: float
+    chips: int
+    model_flops_global: float = 0.0  # 6*N*D
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_device / (ICI_BW_PER_LINK * ICI_LINKS)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Lower bound assuming perfect overlap: max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPS (global): remat/redundancy waste."""
+        total = self.flops_per_device * self.chips
+        return self.model_flops_global / total if total else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Roofline-level MFU: useful FLOPs / (chips * peak * step_time)."""
+        denom = self.chips * PEAK_FLOPS_BF16 * self.step_time_s
+        return self.model_flops_global / denom if denom else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "hbm_bytes_per_device": self.hbm_bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "chips": self.chips,
+            "model_flops_global": self.model_flops_global,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "step_time_s": self.step_time_s,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def roofline_from_compiled(compiled, chips: int, model_flops_global: float) -> Roofline:
+    cost = compiled.cost_analysis()
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    stats = collective_bytes(compiled.as_text())
+    return Roofline(flops, hbm, float(stats.total_bytes), chips, model_flops_global)

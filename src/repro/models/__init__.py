@@ -1,0 +1,2 @@
+"""Model substrate: the ten assigned architectures over six families."""
+from .model import ModelApi, analytic_param_count, batch_shapes, build_model, make_batch  # noqa: F401

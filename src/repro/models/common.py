@@ -1,0 +1,201 @@
+"""Shared model building blocks: norms, activations, RoPE, embeddings,
+initializers — pure JAX (params are plain pytrees of jnp arrays).
+
+Every ``init_*`` function has a sibling ``spec_*`` producing a
+PartitionSpec tree of identical structure (checked by tests); logical axes:
+
+* ``tp``   — the tensor-parallel ("model") mesh axis
+* ``fsdp`` — the fully-sharded-data-parallel axes ("pod","data")
+
+The spec functions receive the axis names so configs can remap.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+def dense_init(key, in_dim: int, out_dim: int, dtype, scale: float = 1.0):
+    std = scale / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim)) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype):
+    return (jax.random.normal(key, (vocab, dim)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def init_norm(d: int, kind: str, dtype=jnp.float32):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def spec_norm(kind: str):
+    if kind == "rmsnorm":
+        return {"scale": P(None)}
+    return {"scale": P(None), "bias": P(None)}
+
+
+def apply_norm(params, x, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+def activation_fn(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": partial(jax.nn.gelu, approximate=True),
+        "relu": jax.nn.relu,
+        "relu2": lambda x: jnp.square(jax.nn.relu(x)),  # nemotron squared-ReLU
+    }[name]
+
+
+GLU_ACTIVATIONS = {"swiglu": "silu", "geglu": "gelu"}
+
+
+def is_glu(name: str) -> bool:
+    return name in GLU_ACTIVATIONS
+
+
+# ---------------------------------------------------------------------------
+# RoPE (full or partial fraction — chatglm applies rotary to half the dims)
+# ---------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, fraction: float, theta: float):
+    rot_dim = int(head_dim * fraction) // 2 * 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+    return inv, rot_dim
+
+
+def apply_rope(x, positions, theta: float, fraction: float = 1.0):
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    inv, rot_dim = rope_frequencies(head_dim, fraction, theta)
+    if rot_dim == 0:
+        return x
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., seq, rot/2)
+    cos = jnp.cos(ang)[..., :, None, :].astype(x.dtype)  # broadcast over heads
+    sin = jnp.sin(ang)[..., :, None, :].astype(x.dtype)
+    xr, xp = x[..., :rot_dim], x[..., rot_dim:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    xr = jnp.stack([r1, r2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([xr, xp], axis=-1) if rot_dim < head_dim else xr
+
+
+def sinusoidal_positions(length: int, dim: int):
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, dim, 2, dtype=jnp.float32) * (-math.log(10000.0) / dim))
+    pe = jnp.zeros((length, dim), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+def init_embedding(key, vocab: int, d: int, dtype, tie: bool):
+    p = {"tok": embed_init(key, vocab, d, dtype)}
+    if not tie:
+        p["unembed"] = dense_init(jax.random.fold_in(key, 1), d, vocab, dtype)
+    return p
+
+
+def spec_embedding(tie: bool, tp: str, fsdp, vocab: int = 0, tp_size: int = 0):
+    # vocab over tp only when even (e.g. whisper's 51865 is not)
+    v_tp = tp if not tp_size or (vocab and vocab % tp_size == 0) else None
+    p = {"tok": P(v_tp, fsdp)}  # vocab over tp, embed over fsdp
+    if not tie:
+        p["unembed"] = P(fsdp, v_tp)
+    return p
+
+
+def embed_tokens(params, tokens, d_model: int, compute_dtype):
+    return params["tok"].astype(compute_dtype)[tokens] * 1.0
+
+
+def unembed(params, x, tie: bool):
+    w = params["tok"].T if tie else params["unembed"]
+    return x @ w.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+def softmax_cross_entropy(logits, targets, ignore_id: int = -1, z_loss: float = 1e-4):
+    """Token-mean CE with optional z-loss; fp32 reduction."""
+    logits = logits.astype(jnp.float32)
+    mask = (targets != ignore_id).astype(jnp.float32)
+    tclip = jnp.maximum(targets, 0)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, tclip[..., None], axis=-1)[..., 0]
+    nll = (lse - ll) * mask
+    zl = z_loss * jnp.square(lse) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return (nll.sum() + zl.sum()) / denom
+
+
+# ---------------------------------------------------------------------------
+# remat policies
+# ---------------------------------------------------------------------------
+def remat_policy(name: str):
+    if name == "none":
+        return None
+    if name == "dots":
+        return jax.checkpoint_policies.checkpoint_dots
+    if name == "full":
+        return jax.checkpoint_policies.nothing_saveable
+    raise ValueError(name)
+
+
+def maybe_remat(fn, name: str):
+    policy = remat_policy(name)
+    if name == "none":
+        return fn
+    return jax.checkpoint(fn, policy=policy, prevent_cse=False)
+
+
+def scan_layers(scan_fn, init, xs, length: int, use_scan: bool):
+    """lax.scan over stacked layers, or a Python unroll with identical
+    semantics.  The dry-run unrolls because XLA cost analysis does not
+    multiply while-body FLOPs by trip count (see launch/dryrun.py)."""
+    if use_scan:
+        return jax.lax.scan(scan_fn, init, xs)
+    carry = init
+    ys = []
+    for i in range(length):
+        xs_i = jax.tree.map(lambda v: v[i], xs)
+        carry, y = scan_fn(carry, xs_i)
+        ys.append(y)
+    if ys and all(y is None for y in ys):
+        return carry, None
+    stacked = jax.tree.map(lambda *vals: jnp.stack(vals), *ys)
+    return carry, stacked

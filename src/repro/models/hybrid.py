@@ -1,0 +1,231 @@
+"""Zamba2-style hybrid: a Mamba2 backbone with a single SHARED attention
+block applied every k layers (cfg.hybrid.shared_attn_every).
+
+Faithful structural points (deviations noted in DESIGN.md):
+* the shared block's weights are one parameter set reused at every
+  application (Zamba's parameter-efficiency trick);
+* its input is concat(hidden, initial_embedding) (2*d wide), projected into
+  the attention block, output added back to the residual stream.
+
+The backbone scans over stacked Mamba2 layers; the shared block fires via
+``lax.cond`` on the layer index so the scan stays compact.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..runtime.sharding import shard
+from .attention import KVCache, attention, init_attention, spec_attention
+from .common import (
+    apply_norm,
+    scan_layers,
+    dense_init,
+    dtype_of,
+    embed_tokens,
+    init_embedding,
+    init_norm,
+    maybe_remat,
+    softmax_cross_entropy,
+    spec_embedding,
+    spec_norm,
+    unembed,
+)
+from .mamba import (
+    MambaState,
+    init_mamba_layer,
+    init_mamba_state,
+    mamba_block,
+    mamba_state_specs,
+    spec_mamba_layer,
+)
+from .mlp import init_mlp, mlp, spec_mlp
+
+
+class HybridState(NamedTuple):
+    mamba: MambaState        # stacked (L, ...)
+    attn_kv: KVCache         # single shared-block cache (B, S, H, D)
+
+
+def _attn_cfg(cfg):
+    """The shared block attends at d_model with cfg's head counts."""
+    return cfg
+
+
+def init_lm(key, cfg):
+    dtype = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    layer_keys = jax.random.split(ks[0], cfg.num_layers)
+    layers = jax.vmap(lambda k: init_mamba_layer(k, cfg))(layer_keys)
+    d = cfg.d_model
+    shared_in = 2 * d if cfg.hybrid.concat_embedding else d
+    shared = {
+        "in_proj": dense_init(ks[1], shared_in, d, dtype),
+        "ln1": init_norm(d, cfg.norm),
+        "attn": init_attention(ks[2], _attn_cfg(cfg)),
+        "ln2": init_norm(d, cfg.norm),
+        "mlp": init_mlp(ks[3], d, cfg.d_ff, cfg.activation, dtype),
+        "out_proj": dense_init(ks[4], d, d, dtype, scale=0.5),
+    }
+    return {
+        "embed": init_embedding(ks[5], cfg.vocab_size, d, dtype, cfg.tie_embeddings),
+        "layers": layers,
+        "shared": shared,
+        "final_norm": init_norm(d, cfg.norm),
+    }
+
+
+def spec_lm(cfg, fsdp="data", tp="model"):
+    layer = spec_mamba_layer(cfg, fsdp, tp)
+    stacked = jax.tree.map(lambda s: P(None, *s), layer,
+                           is_leaf=lambda v: isinstance(v, P))
+    shared = {
+        "in_proj": P(fsdp, tp),
+        "ln1": spec_norm(cfg.norm),
+        "attn": spec_attention(cfg, fsdp, tp),
+        "ln2": spec_norm(cfg.norm),
+        "mlp": spec_mlp(cfg.activation, fsdp, tp),
+        "out_proj": P(fsdp, tp),
+    }
+    return {
+        "embed": spec_embedding(cfg.tie_embeddings, tp, fsdp,
+                                 vocab=cfg.vocab_size, tp_size=cfg.parallelism.tp_size),
+        "layers": stacked,
+        "shared": shared,
+        "final_norm": spec_norm(cfg.norm),
+    }
+
+
+def _shared_block(p, x, emb0, positions, cfg, kv_cache=None, cache_index=None):
+    inp = jnp.concatenate([x, emb0], axis=-1) if cfg.hybrid.concat_embedding else x
+    h = inp @ p["in_proj"].astype(x.dtype)
+    a, new_cache = attention(
+        p["attn"], apply_norm(p["ln1"], h, cfg.norm), cfg,
+        positions=positions, causal=True, kv_cache=kv_cache, cache_index=cache_index,
+    )
+    h = h + a
+    h = h + mlp(p["mlp"], apply_norm(p["ln2"], h, cfg.norm), cfg.activation)
+    return x + h @ p["out_proj"].astype(x.dtype), new_cache
+
+
+def forward(params, tokens, cfg, dist=None, last_only=False):
+    cdt = dtype_of(cfg.compute_dtype)
+    B, S = tokens.shape
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, 0)
+    emb0 = embed_tokens(params["embed"], tokens, cfg.d_model, cdt)
+    x = shard(emb0, "batch", "seq", "embed")
+    every = cfg.hybrid.shared_attn_every
+
+    def body(pl_and_idx, xx):
+        pl, idx = pl_and_idx
+        y, _ = mamba_block(pl, xx, cfg)
+        xx = xx + y
+
+        def with_attn(v):
+            out, _ = _shared_block(params["shared"], v, emb0, positions, cfg)
+            return out
+
+        xx = jax.lax.cond((idx + 1) % every == 0, with_attn, lambda v: v, xx)
+        return shard(xx, "batch", "seq", "embed")
+
+    wrapped = maybe_remat(lambda pli, xx: (body(pli, xx), 0.0), cfg.parallelism.remat)
+
+    def scan_fn(carry, pli):
+        y, _ = wrapped(pli, carry)
+        return y, jnp.zeros((), jnp.float32)
+
+    idxs = jnp.arange(cfg.num_layers)
+    x, _ = scan_layers(scan_fn, x, (params["layers"], idxs), cfg.num_layers,
+                       cfg.parallelism.scan_layers)
+    if last_only:
+        x = x[:, -1:]
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = unembed(params["embed"], x, cfg.tie_embeddings)
+    return shard(logits, "batch", "seq", "vocab"), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, batch, cfg, dist=None):
+    logits, aux = forward(params, batch["tokens"], cfg, dist)
+    return softmax_cross_entropy(logits, batch["targets"]) + aux
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+def num_firings(cfg) -> int:
+    return cfg.num_layers // cfg.hybrid.shared_attn_every
+
+
+def init_state(cfg, batch: int, max_seq: int) -> HybridState:
+    one = init_mamba_state(cfg, batch)
+    stacked = jax.tree.map(
+        lambda v: jnp.zeros((cfg.num_layers,) + v.shape, v.dtype), one
+    )
+    hd = cfg.resolved_head_dim
+    F = num_firings(cfg)  # each shared-block firing depth has its own cache
+    kv = KVCache(
+        jnp.zeros((F, batch, max_seq, cfg.num_kv_heads, hd), jnp.bfloat16),
+        jnp.zeros((F, batch, max_seq, cfg.num_kv_heads, hd), jnp.bfloat16),
+    )
+    return HybridState(stacked, kv)
+
+
+def state_specs(cfg) -> HybridState:
+    ms = mamba_state_specs(cfg)
+    stacked = jax.tree.map(lambda s: P(None, *s), ms,
+                           is_leaf=lambda v: isinstance(v, P))
+    kv = KVCache(P(None, ("pod", "data"), None, "model", None),
+                 P(None, ("pod", "data"), None, "model", None))
+    return HybridState(stacked, kv)
+
+
+def decode_step(params, token, state: HybridState, index, cfg, dist=None):
+    cdt = dtype_of(cfg.compute_dtype)
+    B = token.shape[0]
+    positions = jnp.full((B, 1), index, dtype=jnp.int32)
+    emb0 = embed_tokens(params["embed"], token, cfg.d_model, cdt)
+    x = emb0
+    every = cfg.hybrid.shared_attn_every
+
+    # each firing depth f has its own KV cache slice kv[f]; the stack is
+    # threaded through the scan carry
+    def scan_fn(carry, xs):
+        xx, kv = carry
+        pl, ms_l, idx = xs
+        y, new_ms = mamba_block(pl, xx, cfg, state=MambaState(*ms_l))
+        xx = xx + y
+        f = (idx + 1) // every - 1  # firing index when (idx+1) % every == 0
+
+        def with_attn(operands):
+            v, kv_stack = operands
+            kv_in = KVCache(
+                jax.lax.dynamic_index_in_dim(kv_stack.k, f, 0, keepdims=False),
+                jax.lax.dynamic_index_in_dim(kv_stack.v, f, 0, keepdims=False),
+            )
+            out, kv_out = _shared_block(
+                params["shared"], v, emb0, positions, cfg,
+                kv_cache=kv_in, cache_index=index,
+            )
+            kv_stack = KVCache(
+                jax.lax.dynamic_update_index_in_dim(kv_stack.k, kv_out.k, f, 0),
+                jax.lax.dynamic_update_index_in_dim(kv_stack.v, kv_out.v, f, 0),
+            )
+            return out, kv_stack
+
+        xx, kv = jax.lax.cond(
+            (idx + 1) % every == 0, with_attn, lambda o: o, (xx, kv)
+        )
+        return (xx, kv), tuple(new_ms)
+
+    idxs = jnp.arange(cfg.num_layers)
+    (x, kv), new_ms = scan_layers(
+        scan_fn, (x, state.attn_kv), (params["layers"], tuple(state.mamba), idxs),
+        cfg.num_layers, cfg.parallelism.scan_layers,
+    )
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = unembed(params["embed"], x, cfg.tie_embeddings)
+    return logits[:, 0, :], HybridState(MambaState(*new_ms), kv)

@@ -1,0 +1,204 @@
+"""Mamba2 (SSD — state-space duality) block, chunked-scan training form and
+O(1) recurrent decode, as used by zamba2-2.7b.
+
+Per head h (scalar decay a_t = exp(dt_t * A_h), A_h < 0):
+
+    state[p, n] <- a_t * state[p, n] + dt_t * x_t[p] * B_t[n]
+    y_t[p]      =  state[p, n] . C_t[n]  + D_h * x_t[p]
+
+Training uses the chunked SSD algorithm (segment-sum log decays inside a
+chunk; inter-chunk state carried by scan) — matmul form for the MXU.
+``repro.kernels.mamba2_ssd`` is the Pallas kernel of the intra-chunk math.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..runtime.sharding import shard
+from .common import apply_norm, dense_init, dtype_of, init_norm, spec_norm
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array  # (B, K-1, conv_channels) rolling conv input window
+    ssm: jax.Array   # (B, H, P, N)
+
+
+def _dims(cfg):
+    d = cfg.d_model
+    s = cfg.ssm
+    d_inner = s.expand * d
+    H = d_inner // s.head_dim
+    return d, d_inner, H, s.head_dim, s.state_size
+
+
+def init_mamba_layer(key, cfg):
+    d, d_inner, H, Pdim, N = _dims(cfg)
+    dtype = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    conv_ch = d_inner + 2 * N  # x, B, C all go through the causal conv
+    return {
+        "norm": init_norm(d, cfg.norm),
+        # in_proj -> [z (gate), x, B, C, dt]
+        "in_proj": dense_init(ks[0], d, 2 * d_inner + 2 * N + H, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm.conv_kernel, conv_ch)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),  # A = -exp
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), math.log(math.e - 1), jnp.float32),
+        "out_norm": init_norm(d_inner, "rmsnorm"),
+        "out_proj": dense_init(ks[2], d_inner, d, dtype,
+                               scale=1.0 / math.sqrt(2 * cfg.num_layers)),
+    }
+
+
+def spec_mamba_layer(cfg, fsdp, tp):
+    return {
+        "norm": spec_norm(cfg.norm),
+        "in_proj": P(fsdp, tp),
+        "conv_w": P(None, tp),
+        "conv_b": P(tp),
+        "A_log": P(None),
+        "D": P(None),
+        "dt_bias": P(None),
+        "out_norm": spec_norm("rmsnorm"),
+        "out_proj": P(tp, fsdp),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv via shifts. x: (B,T,C); w: (K,C)."""
+    K = w.shape[0]
+    y = x * w[K - 1]
+    for i in range(1, K):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        y = y + shifted * w[K - 1 - i]
+    return jax.nn.silu(y + b)
+
+
+def _segsum(wlog):
+    """wlog: (..., c). Returns (..., c, c) with S[t,s] = sum_{r=s+1..t} wlog_r
+    for s<t, 0 on diag, -inf above."""
+    c = wlog.shape[-1]
+    cs = jnp.cumsum(wlog, axis=-1)
+    S = cs[..., :, None] - cs[..., None, :]
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    return jnp.where(tri, S, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, D, state, chunk: int):
+    """x: (B,T,H,P); dt: (B,T,H) (softplus'd); A: (H,) negative; B,C: (B,T,N);
+    state: (B,H,P,N).  Returns (y, final_state)."""
+    Bb, T, Hh, Pd = x.shape
+    N = B.shape[-1]
+    assert T % chunk == 0
+    nc = T // chunk
+
+    xr = x.reshape(Bb, nc, chunk, Hh, Pd)
+    dtr = dt.reshape(Bb, nc, chunk, Hh)
+    Br = B.reshape(Bb, nc, chunk, N)
+    Cr = C.reshape(Bb, nc, chunk, N)
+    # per-step log decay: dt_t * A_h  (negative)
+    wlog = dtr * A[None, None, None, :]  # (B,nc,c,H)
+
+    def one_chunk(S, xs):
+        xc, dtc, Bc, Cc, wl = xs  # (B,c,H,P),(B,c,H),(B,c,N),(B,c,N),(B,c,H)
+        wl_h = wl.transpose(0, 2, 1)  # (B,H,c)
+        seg = _segsum(wl_h)           # (B,H,t,s) = sum of log decays (s..t]
+        decay = jnp.exp(seg)
+        cb = jnp.einsum("btn,bsn->bts", Cc, Bc)  # (B,t,s)
+        M = cb[:, None] * decay * dtc.transpose(0, 2, 1)[:, :, None, :]  # (B,H,t,s)
+        y_intra = jnp.einsum("bhts,bshp->bthp", M, xc)
+        # inter-chunk: y_t += C_t . exp(la_incl[t]) S_in
+        la = jnp.cumsum(wl_h, axis=-1)  # (B,H,c), inclusive of step t
+        y_inter = jnp.einsum("bhtn,bhpn->bthp",
+                             Cc[:, None, :, :] * jnp.exp(la)[..., None], S)
+        y = y_intra + y_inter + xc * D[None, None, :, None]
+        # state update: S_out = exp(la_end) S_in + sum_s exp(la_end-la_s) dt_s x_s B_s^T
+        a_end = jnp.exp(la[..., -1])  # (B,H)
+        k = (Bc[:, None, :, :] * jnp.exp(la[..., -1:, None] - la[..., None])
+             * dtc.transpose(0, 2, 1)[..., None])
+        S_new = a_end[..., None, None] * S + jnp.einsum("bhtn,bthp->bhpn", k, xc)
+        return S_new, y
+
+    xs = (
+        xr.transpose(1, 0, 2, 3, 4),
+        dtr.transpose(1, 0, 2, 3),
+        Br.transpose(1, 0, 2, 3),
+        Cr.transpose(1, 0, 2, 3),
+        wlog.transpose(1, 0, 2, 3),
+    )
+    state, ys = jax.lax.scan(one_chunk, state, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bb, T, Hh, Pd)
+    return y, state
+
+
+def ssd_step(x, dt, A, B, C, D, state):
+    """x: (B,H,P); dt: (B,H); B,C: (B,N); state: (B,H,P,N)."""
+    a = jnp.exp(dt * A[None, :])  # (B,H)
+    upd = jnp.einsum("bhp,bn->bhpn", x * dt[..., None], B)
+    state = a[..., None, None] * state + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, C) + x * D[None, :, None]
+    return y, state
+
+
+def mamba_block(p, x, cfg, state: MambaState = None, chunk=None):
+    """x: (B,T,d). Returns (y, new_state or None)."""
+    d, d_inner, Hh, Pd, N = _dims(cfg)
+    chunk = chunk or cfg.ssm.chunk_size
+    B_, T, _ = x.shape
+    proj = x @ p["in_proj"].astype(x.dtype)
+    z, xin, Bc, Cc, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N], axis=-1
+    )
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    if state is None:
+        conv_out = _causal_conv(conv_in, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype))
+        new_conv = None
+    else:
+        window = jnp.concatenate([state.conv, conv_in[:, :, :]], axis=1)  # (B,K,C)
+        K = p["conv_w"].shape[0]
+        y = (window * p["conv_w"].astype(x.dtype)[None]).sum(1, keepdims=True)
+        conv_out = jax.nn.silu(y + p["conv_b"].astype(x.dtype))
+        new_conv = window[:, 1:]
+    xc, Bc, Cc = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+    xh = xc.reshape(B_, T, Hh, Pd).astype(jnp.float32)
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None])
+    A = -jnp.exp(p["A_log"])
+    Bf, Cf = Bc.astype(jnp.float32), Cc.astype(jnp.float32)
+    if state is None:
+        S0 = jnp.zeros((B_, Hh, Pd, N), jnp.float32)
+        y, S = ssd_chunked(xh, dtp, A, Bf, Cf, p["D"], S0, chunk)
+        new_state = None
+    else:
+        y, S = ssd_step(xh[:, 0], dtp[:, 0], A, Bf[:, 0], Cf[:, 0], p["D"], state.ssm)
+        y = y[:, None]
+        new_state = MambaState(new_conv, S)
+    y = y.reshape(B_, T, d_inner).astype(x.dtype)
+    y = apply_norm(p["out_norm"], y, "rmsnorm") * jax.nn.silu(z)
+    y = shard(y, "batch", "seq", "ffn")
+    out = y @ p["out_proj"].astype(x.dtype)
+    if state is None:
+        return out, None
+    return out, new_state
+
+
+def init_mamba_state(cfg, batch: int) -> MambaState:
+    d, d_inner, Hh, Pd, N = _dims(cfg)
+    K = cfg.ssm.conv_kernel
+    conv_ch = d_inner + 2 * N
+    return MambaState(
+        jnp.zeros((batch, K - 1, conv_ch), dtype_of(cfg.compute_dtype)),
+        jnp.zeros((batch, Hh, Pd, N), jnp.float32),
+    )
+
+
+def mamba_state_specs(cfg) -> MambaState:
+    return MambaState(
+        P(("pod", "data"), None, "model"),
+        P(("pod", "data"), "model", None, None),
+    )

@@ -1,0 +1,40 @@
+"""Dense FFN variants: GLU (swiglu/geglu) and plain (gelu/relu²/silu)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..runtime.sharding import shard
+from .common import GLU_ACTIVATIONS, activation_fn, dense_init, dtype_of, is_glu
+
+
+def init_mlp(key, d_model: int, d_ff: int, activation: str, dtype):
+    ks = jax.random.split(key, 3)
+    if is_glu(activation):
+        return {
+            "wi": dense_init(ks[0], d_model, d_ff, dtype),
+            "wg": dense_init(ks[1], d_model, d_ff, dtype),
+            "wo": dense_init(ks[2], d_ff, d_model, dtype),
+        }
+    return {
+        "wi": dense_init(ks[0], d_model, d_ff, dtype),
+        "wo": dense_init(ks[2], d_ff, d_model, dtype),
+    }
+
+
+def spec_mlp(activation: str, fsdp, tp):
+    if is_glu(activation):
+        return {"wi": P(fsdp, tp), "wg": P(fsdp, tp), "wo": P(tp, fsdp)}
+    return {"wi": P(fsdp, tp), "wo": P(tp, fsdp)}
+
+
+def mlp(params, x, activation: str):
+    if is_glu(activation):
+        act = activation_fn(GLU_ACTIVATIONS[activation])
+        h = act(x @ params["wg"].astype(x.dtype)) * (x @ params["wi"].astype(x.dtype))
+    else:
+        act = activation_fn(activation)
+        h = act(x @ params["wi"].astype(x.dtype))
+    h = shard(h, "batch", "seq", "ffn")
+    return h @ params["wo"].astype(x.dtype)

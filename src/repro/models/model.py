@@ -1,0 +1,193 @@
+"""Model factory: one uniform API over the six architecture families.
+
+``build_model(cfg)`` returns a :class:`ModelApi` with:
+
+* ``init(key)``             -> params pytree
+* ``param_specs(fsdp, tp)`` -> PartitionSpec pytree (same structure)
+* ``loss_fn(params, batch, dist)``            (train)
+* ``forward(params, batch, dist)``            (logits)
+* ``decode_init(...)`` / ``decode_step(...)`` (serving)
+* ``input_specs(shape_cfg, ...)``             -> ShapeDtypeStructs for dry-run
+
+plus ``analytic_param_count`` for the roofline MODEL_FLOPS term.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from . import encdec, hybrid, rwkv, transformer, vlm
+from .common import is_glu
+
+
+@dataclasses.dataclass
+class ModelApi:
+    cfg: ModelConfig
+    init: Callable
+    param_specs: Callable
+    loss_fn: Callable
+    forward: Callable
+    decode_init: Optional[Callable] = None
+    decode_step: Optional[Callable] = None
+    cache_specs: Optional[Callable] = None
+
+
+def build_model(cfg: ModelConfig) -> ModelApi:
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        return ModelApi(
+            cfg,
+            init=lambda key: transformer.init_lm(key, cfg),
+            param_specs=lambda fsdp="data", tp="model": transformer.spec_lm(cfg, fsdp, tp),
+            loss_fn=lambda p, b, dist=None: transformer.loss_fn(p, b, cfg, dist),
+            forward=lambda p, b, dist=None: transformer.forward(p, b["tokens"], cfg, dist),
+            decode_init=lambda batch, max_seq: transformer.init_cache(cfg, batch, max_seq),
+            decode_step=lambda p, tok, cache, idx, dist=None: transformer.decode_step(
+                p, tok, cache, idx, cfg, dist),
+            cache_specs=lambda: transformer.cache_specs(cfg),
+        )
+    if fam == "ssm":
+        return ModelApi(
+            cfg,
+            init=lambda key: rwkv.init_lm(key, cfg),
+            param_specs=lambda fsdp="data", tp="model": rwkv.spec_lm(cfg, fsdp, tp),
+            loss_fn=lambda p, b, dist=None: rwkv.loss_fn(p, b, cfg, dist),
+            forward=lambda p, b, dist=None: rwkv.forward(p, b["tokens"], cfg, dist),
+            decode_init=lambda batch, max_seq: rwkv.init_state(cfg, batch),
+            decode_step=lambda p, tok, st, idx, dist=None: rwkv.decode_step(
+                p, tok, st, idx, cfg, dist),
+            cache_specs=lambda: rwkv.state_specs(cfg),
+        )
+    if fam == "hybrid":
+        return ModelApi(
+            cfg,
+            init=lambda key: hybrid.init_lm(key, cfg),
+            param_specs=lambda fsdp="data", tp="model": hybrid.spec_lm(cfg, fsdp, tp),
+            loss_fn=lambda p, b, dist=None: hybrid.loss_fn(p, b, cfg, dist),
+            forward=lambda p, b, dist=None: hybrid.forward(p, b["tokens"], cfg, dist),
+            decode_init=lambda batch, max_seq: hybrid.init_state(cfg, batch, max_seq),
+            decode_step=lambda p, tok, st, idx, dist=None: hybrid.decode_step(
+                p, tok, st, idx, cfg, dist),
+            cache_specs=lambda: hybrid.state_specs(cfg),
+        )
+    if fam == "encdec":
+        return ModelApi(
+            cfg,
+            init=lambda key: encdec.init_lm(key, cfg),
+            param_specs=lambda fsdp="data", tp="model": encdec.spec_lm(cfg, fsdp, tp),
+            loss_fn=lambda p, b, dist=None: encdec.loss_fn(p, b, cfg, dist),
+            forward=lambda p, b, dist=None: encdec.forward(p, b, cfg, dist),
+            decode_init=None,  # cache needs frames: use encdec.init_cache directly
+            decode_step=lambda p, tok, cache, idx, dist=None: encdec.decode_step(
+                p, tok, cache, idx, cfg, dist),
+            cache_specs=lambda: encdec.cache_specs(cfg),
+        )
+    if fam == "vlm":
+        return ModelApi(
+            cfg,
+            init=lambda key: vlm.init_lm(key, cfg),
+            param_specs=lambda fsdp="data", tp="model": vlm.spec_lm(cfg, fsdp, tp),
+            loss_fn=lambda p, b, dist=None: vlm.loss_fn(p, b, cfg, dist),
+            forward=lambda p, b, dist=None: vlm.forward(p, b, cfg, dist),
+            decode_init=lambda batch, max_seq: vlm.init_cache(cfg, batch, max_seq),
+            decode_step=lambda p, tok, cache, idx, dist=None: vlm.decode_step(
+                p, tok, cache, idx, cfg, dist),
+            cache_specs=lambda: vlm.cache_specs(cfg),
+        )
+    raise ValueError(f"unknown family {fam!r}")
+
+
+# ---------------------------------------------------------------------------
+# batch construction (concrete for smoke/examples; ShapeDtypeStruct for dryrun)
+# ---------------------------------------------------------------------------
+def batch_shapes(cfg: ModelConfig, batch: int, seq: int) -> dict[str, Any]:
+    shapes = {
+        "tokens": ((batch, seq), jnp.int32),
+        "targets": ((batch, seq), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        shapes["frames"] = ((batch, cfg.encdec.encoder_frames, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm":
+        shapes["patches"] = ((batch, cfg.vlm.num_patches, cfg.vlm.patch_embed_dim), jnp.bfloat16)
+    return shapes
+
+
+def make_batch(key, cfg: ModelConfig, batch: int, seq: int) -> dict[str, Any]:
+    ks = jax.random.split(key, 3)
+    out = {
+        "tokens": jax.random.randint(ks[0], (batch, seq), 0, cfg.vocab_size, jnp.int32),
+    }
+    out["targets"] = jnp.roll(out["tokens"], -1, axis=1)
+    if cfg.family == "encdec":
+        out["frames"] = jax.random.normal(
+            ks[1], (batch, cfg.encdec.encoder_frames, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm":
+        out["patches"] = jax.random.normal(
+            ks[2], (batch, cfg.vlm.num_patches, cfg.vlm.patch_embed_dim), jnp.bfloat16)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# analytic parameter counts (roofline MODEL_FLOPS = 6*N*D)
+# ---------------------------------------------------------------------------
+def _mlp_params(d: int, f: int, activation: str) -> int:
+    return d * f * (3 if is_glu(activation) else 2)
+
+
+def analytic_param_count(cfg: ModelConfig, active_only: bool = False) -> int:
+    d, f, V, L = cfg.d_model, cfg.d_ff, cfg.vocab_size, cfg.num_layers
+    hd = cfg.resolved_head_dim
+    n = V * d * (1 if cfg.tie_embeddings else 2)  # embed + unembed
+
+    def attn_params():
+        return d * hd * cfg.num_heads * 2 + d * hd * cfg.num_kv_heads * 2
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        per_layer = attn_params()
+        if cfg.moe is not None:
+            m = cfg.moe
+            e_all = m.num_experts
+            e_act = m.top_k
+            expert = _mlp_params(d, m.expert_d_ff, cfg.activation)
+            per_layer += (e_act if active_only else e_all) * expert
+            per_layer += d * m.num_experts  # router
+            if m.num_shared_experts:
+                per_layer += _mlp_params(d, m.num_shared_experts * m.expert_d_ff,
+                                         cfg.activation) + d
+        else:
+            per_layer += _mlp_params(d, f, cfg.activation)
+        n += L * per_layer
+        if cfg.family == "vlm":
+            n += cfg.vlm.patch_embed_dim * d + d * d
+        return n
+
+    if cfg.family == "ssm":  # rwkv6
+        per_layer = 5 * d * d + d * 32 * 5 * 2  # time-mix mats + lora
+        per_layer += d * f * 2 + d * d  # channel mix
+        return n + L * per_layer
+
+    if cfg.family == "hybrid":
+        s = cfg.ssm
+        d_inner = s.expand * d
+        H = d_inner // s.head_dim
+        N = s.state_size
+        per_layer = d * (2 * d_inner + 2 * N + H) + d_inner * d  # in/out proj
+        shared = (2 * d) * d + attn_params() + _mlp_params(d, f, cfg.activation) + d * d
+        return n + L * per_layer + shared
+
+    if cfg.family == "encdec":
+        enc = cfg.encdec.encoder_layers * (attn_params() + _mlp_params(d, f, cfg.activation))
+        dec = L * (attn_params() * 2 + _mlp_params(d, f, cfg.activation))
+        return n + enc + dec + cfg.max_seq_len * d
+
+    raise ValueError(cfg.family)
+
+
+def model_flops_per_token(cfg: ModelConfig) -> int:
+    """6*N_active per token (standard training-FLOPs approximation)."""
+    return 6 * analytic_param_count(cfg, active_only=True)

@@ -1,0 +1,259 @@
+"""Mixture-of-Experts block with two parallelism modes.
+
+* ``ep`` (expert parallelism — qwen2-moe): tokens are sequence-split over the
+  ``model`` axis inside a nested manual ``shard_map``; dispatch uses a
+  sort-based (MegaBlocks-style) layout into a capacity-padded ``(E, C, d)``
+  buffer; the exchange is an **explicit ABI alltoall** (the paper's technique
+  carrying real traffic), experts compute locally, a second alltoall returns
+  tokens.  Router aux loss is reduced through ``abi.allreduce``.
+
+* ``tp`` (grok-1, whose 8 experts don't divide the 16-way model axis):
+  experts stay unsharded on the expert dim; each expert's ``d_ff`` is
+  tensor-parallel over ``model`` via GSPMD; dispatch/combine stay local.
+
+Token dropping beyond capacity follows GShard/Switch semantics.
+EP divisibility padding (qwen: 60 -> 64) gives padded experts -inf router
+logits, so they receive only capacity slack, never real probability mass.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..runtime.sharding import shard
+from .common import GLU_ACTIVATIONS, activation_fn, dense_init, is_glu
+from .mlp import init_mlp, mlp, spec_mlp
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+def init_moe(key, cfg, dtype):
+    m = cfg.moe
+    E = m.padded_experts or m.num_experts
+    f = m.expert_d_ff
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    ew = {
+        "wi": _stack_init(ks[0], E, d, f, dtype),
+        "wo": _stack_init(ks[2], E, f, d, dtype),
+    }
+    if is_glu(cfg.activation):
+        ew["wg"] = _stack_init(ks[1], E, d, f, dtype)
+    p = {
+        "router": dense_init(ks[3], d, m.num_experts, jnp.float32),
+        "experts": ew,
+    }
+    if m.num_shared_experts:
+        p["shared"] = init_mlp(ks[4], d, m.num_shared_experts * f, cfg.activation, dtype)
+        p["shared_gate"] = dense_init(ks[5], d, 1, dtype)
+    return p
+
+
+def _stack_init(key, E, din, dout, dtype):
+    std = 1.0 / math.sqrt(din)
+    return (jax.random.normal(key, (E, din, dout)) * std).astype(dtype)
+
+
+def spec_moe(cfg, fsdp, tp):
+    m = cfg.moe
+    if m.parallelism == "ep":
+        # expert dim over tp axis; within-expert dims over fsdp
+        ew = {"wi": P(tp, fsdp, None), "wo": P(tp, None, fsdp)}
+        if is_glu(cfg.activation):
+            ew["wg"] = P(tp, fsdp, None)
+    else:  # tp: d_ff over tp axis, experts unsharded, fsdp on d_model dims
+        ew = {"wi": P(None, fsdp, tp), "wo": P(None, tp, fsdp)}
+        if is_glu(cfg.activation):
+            ew["wg"] = P(None, fsdp, tp)
+    p = {"router": P(None, None), "experts": ew}
+    if m.num_shared_experts:
+        p["shared"] = spec_mlp(cfg.activation, fsdp, tp)
+        p["shared_gate"] = P(None, None)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# routing (shared by both modes)
+# ---------------------------------------------------------------------------
+def _route(params, xf, m):
+    """xf: (T, d) fp32-ish. Returns (gates (T,k), experts (T,k), aux_loss)."""
+    logits = xf.astype(jnp.float32) @ params["router"]  # (T, E_real)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(probs, m.top_k)  # (T, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # Switch/GShard load-balance loss over REAL experts
+    E = m.num_experts
+    onehot = jax.nn.one_hot(experts[..., 0], E)  # primary assignment
+    load = onehot.mean(0)
+    importance = probs.mean(0)
+    aux = E * jnp.sum(load * importance) * m.aux_loss_weight
+    return gates, experts, aux
+
+
+def _expert_ffn(w, x, activation):
+    """w: dict of (din,dout) mats for ONE expert; x: (C, d)."""
+    if is_glu(activation):
+        act = activation_fn(GLU_ACTIVATIONS[activation])
+        h = act(x @ w["wg"].astype(x.dtype)) * (x @ w["wi"].astype(x.dtype))
+    else:
+        h = activation_fn(activation)(x @ w["wi"].astype(x.dtype))
+    return h @ w["wo"].astype(x.dtype)
+
+
+def _dispatch_sort(x, experts, gates, E_pad, C):
+    """Sort-based dispatch of (T,d) tokens into an (E_pad, C, d) buffer.
+
+    Returns (buffer, combine_info) where combine_info lets us scatter expert
+    outputs back and apply gate weights.  Tokens beyond capacity are dropped.
+    """
+    T, d = x.shape
+    k = experts.shape[1]
+    flat_e = experts.reshape(-1)  # (T*k,)
+    flat_g = gates.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T), k)
+    order = jnp.argsort(flat_e, stable=True)
+    se, sg, st = flat_e[order], flat_g[order], flat_t[order]
+    # position within expert group
+    ones = jnp.ones_like(se)
+    pos_total = jnp.cumsum(ones) - 1
+    seg_start = jnp.searchsorted(se, jnp.arange(E_pad), side="left")
+    pos_in_e = pos_total - seg_start[se]
+    keep = pos_in_e < C
+    slot = se * C + jnp.where(keep, pos_in_e, 0)
+    buffer = jnp.zeros((E_pad * C, d), x.dtype)
+    buffer = buffer.at[slot].add(jnp.where(keep[:, None], x[st], 0))
+    return buffer.reshape(E_pad, C, d), (st, sg, slot, keep)
+
+
+def _combine_sort(expert_out, combine, T, d):
+    st, sg, slot, keep = combine
+    flat = expert_out.reshape(-1, d)
+    vals = flat[slot] * jnp.where(keep, sg, 0.0)[:, None].astype(flat.dtype)
+    out = jnp.zeros((T, d), flat.dtype)
+    return out.at[st].add(vals)
+
+
+# ---------------------------------------------------------------------------
+# the block
+# ---------------------------------------------------------------------------
+def moe_block(params, x, cfg, dist=None):
+    """x: (B, S, d).  Returns (y, aux_loss).
+
+    ``dist`` is the DistContext (abi + comms + mesh); EP requires it.  The
+    EP path auto-falls-back to TP dispatch when S doesn't divide the model
+    axis (decode) or no dist is given (pure-CPU smoke tests).
+    """
+    m = cfg.moe
+    B, S, d = x.shape
+    use_ep = (
+        m.parallelism == "ep"
+        and dist is not None
+        and S % dist.tp_size == 0
+        and dist.tp_size > 1
+    )
+    y_shared = _shared_path(params, x, cfg)
+    if use_ep:
+        y, aux = _moe_ep(params, x, cfg, dist)
+    else:
+        y, aux = _moe_local(params, x, cfg)
+    if y_shared is not None:
+        y = y + y_shared
+    return y, aux
+
+
+def _shared_path(params, x, cfg):
+    if not cfg.moe.num_shared_experts:
+        return None
+    g = jax.nn.sigmoid(x @ params["shared_gate"].astype(x.dtype))
+    return mlp(params["shared"], x, cfg.activation) * g
+
+
+def _capacity(T, k, E, factor):
+    return max(int(math.ceil(T * k / E * factor)), 4)
+
+
+def _moe_local(params, x, cfg):
+    """TP mode (and smoke fallback): dispatch local, expert FFNs vmapped;
+    GSPMD shards d_ff over the model axis per spec_moe."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    xf = x.reshape(T, d)
+    gates, experts, aux = _route(params, xf, m)
+    E_pad = m.padded_experts or m.num_experts
+    C = _capacity(T, m.top_k, m.num_experts, m.capacity_factor)
+    buf, combine = _dispatch_sort(xf, experts, gates, E_pad, C)
+    buf = shard(buf, None, None, None)
+    out = jax.vmap(lambda w, t: _expert_ffn(w, t, cfg.activation))(params["experts"], buf)
+    y = _combine_sort(out, combine, T, d)
+    return y.reshape(B, S, d), aux
+
+
+def _moe_ep(params, x, cfg, dist):
+    """EP mode: nested manual shard_map over the model axis; explicit ABI
+    alltoall dispatch (DESIGN.md §Arch-applicability)."""
+    m = cfg.moe
+    abi = dist.abi
+    R = dist.tp_size
+    B, S, d = x.shape
+    E_pad = m.padded_experts or m.num_experts
+    assert E_pad % R == 0, f"EP needs {R} | {E_pad}"
+    E_local = E_pad // R
+    T_local = B * (S // R)
+    C = _capacity(T_local, m.top_k, m.num_experts, m.capacity_factor)
+
+    def body(x_slice, router, ew):
+        # x_slice: (B, S/R, d) — this rank's sequence slice
+        xf = x_slice.reshape(T_local, d)
+        gates, experts, aux = _route({"router": router}, xf, m)
+        buf, combine = _dispatch_sort(xf, experts, gates, E_pad, C)
+        # EXPLICIT ABI ALLTOALL: (E_pad, C, d) -> (E_local, R*C, d)
+        recv = abi.alltoall(buf, dist.tp_comm, split_axis=0, concat_axis=1)
+        out = jax.vmap(lambda w, t: _expert_ffn(w, t, cfg.activation))(ew, recv)
+        back = abi.alltoall(out, dist.tp_comm, split_axis=1, concat_axis=0)
+        y = _combine_sort(back, combine, T_local, d)
+        # mean aux over EP ranks with exact gradient weight 1/R per rank
+        # (without vma tracking psum transposes to psum, which would scale
+        # router gradients by R — split value/grad via stop_gradient)
+        sg = jax.lax.stop_gradient(aux)
+        mean = abi.allreduce(sg, _sum_handle(), dist.tp_comm) / R
+        aux = aux / R + (mean - sg / R)
+        return y.reshape(B, S // R, d), aux
+
+    # when nested inside a partial-manual region (the ABI train step), the
+    # context mesh already has Manual dp axes — shard_map must receive it
+    mesh = dist.mesh
+    try:
+        ctx = jax.sharding.get_abstract_mesh()
+        if ctx is not None and dist.tp_axis in (ctx.axis_names or ()):
+            mesh = ctx
+    except Exception:
+        pass
+    f = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(None, dist.tp_axis, None), P(None, None),
+                  _ep_expert_specs(cfg, dist.tp_axis)),
+        out_specs=(P(None, dist.tp_axis, None), P()),
+        axis_names={dist.tp_axis},
+        check_vma=False,
+    )
+    return f(x, params["router"], params["experts"])
+
+
+def _ep_expert_specs(cfg, tp_axis):
+    specs = {"wi": P(tp_axis, None, None), "wo": P(tp_axis, None, None)}
+    if is_glu(cfg.activation):
+        specs["wg"] = P(tp_axis, None, None)
+    return specs
+
+
+def _sum_handle():
+    from ..core import handles as H
+
+    return H.PAX_SUM

@@ -1,0 +1,322 @@
+"""RWKV6 "Finch" — attention-free LM with data-dependent per-channel decay.
+
+Time-mix: data-dependent token-shift (ddlerp with a low-rank adapter), the
+WKV6 recurrence
+
+    y_t[j] = sum_i r_t[i] * (S[i,j] + u[i] k_t[i] v_t[j])
+    S[i,j] <- w_t[i] * S[i,j] + k_t[i] * v_t[j]
+
+computed in **chunked** matmul form (MXU-friendly; log-space cumulative
+decays, clamped for fp32 stability), with the chunk state carried by
+``lax.scan``.  ``repro.kernels.rwkv6_scan`` is the Pallas TPU kernel of the
+same math; its ref.py sequential scan is the ground truth both are tested
+against.  Channel-mix: relu^2 FFN with token-shift gates (v6).
+
+Decode uses the O(1) recurrent state — this is why rwkv6-7b runs the
+long_500k cell (no KV cache; state is (H, N, N) per sequence).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..runtime.sharding import shard
+from .common import (
+    apply_norm,
+    scan_layers,
+    dense_init,
+    dtype_of,
+    embed_tokens,
+    init_embedding,
+    init_norm,
+    maybe_remat,
+    softmax_cross_entropy,
+    spec_embedding,
+    spec_norm,
+    unembed,
+)
+
+LORA_DIM = 32
+WLOG_MIN, WLOG_MAX = -5.0, -1e-4  # per-step log-decay clamp (fp32-stable chunks)
+
+
+class RwkvState(NamedTuple):
+    """Recurrent decode state per layer-stack: token-shift + WKV state."""
+
+    shift_tm: jax.Array  # (L, B, d)   last input to time-mix
+    shift_cm: jax.Array  # (L, B, d)   last input to channel-mix
+    wkv: jax.Array       # (L, B, H, N, N)
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+def init_rwkv_layer(key, cfg):
+    d = cfg.d_model
+    dtype = dtype_of(cfg.param_dtype)
+    N = cfg.ssm.head_dim
+    H = d // N
+    ks = jax.random.split(key, 12)
+    branches = ("r", "k", "v", "w", "g")
+    p = {
+        "ln1": init_norm(d, cfg.norm),
+        "ln2": init_norm(d, cfg.norm),
+        "mu_base": jnp.zeros((d,), jnp.float32),
+        "mu": jnp.zeros((len(branches), d), jnp.float32),
+        "lora_a": dense_init(ks[0], d, LORA_DIM * len(branches), jnp.float32),
+        "lora_b": (jax.random.normal(ks[1], (len(branches), LORA_DIM, d)) * 0.01).astype(jnp.float32),
+        "wr": dense_init(ks[2], d, d, dtype),
+        "wk": dense_init(ks[3], d, d, dtype),
+        "wv": dense_init(ks[4], d, d, dtype),
+        "wg": dense_init(ks[5], d, d, dtype),
+        "wo": dense_init(ks[6], d, d, dtype, scale=1.0 / math.sqrt(2 * cfg.num_layers)),
+        "w0": jnp.full((d,), -2.0, jnp.float32),  # base log-log decay
+        "u": (jax.random.normal(ks[7], (d,)) * 0.1).astype(jnp.float32),
+        "ln_x": init_norm(N, "layernorm"),  # per-head group norm
+        # channel mix
+        "cm_mu_k": jnp.zeros((d,), jnp.float32),
+        "cm_mu_r": jnp.zeros((d,), jnp.float32),
+        "cm_wk": dense_init(ks[8], d, cfg.d_ff, dtype),
+        "cm_wv": dense_init(ks[9], cfg.d_ff, d, dtype),
+        "cm_wr": dense_init(ks[10], d, d, dtype),
+    }
+    return p
+
+
+def spec_rwkv_layer(cfg, fsdp, tp):
+    return {
+        "ln1": spec_norm(cfg.norm),
+        "ln2": spec_norm(cfg.norm),
+        "mu_base": P(None),
+        "mu": P(None, None),
+        "lora_a": P(fsdp, None),
+        "lora_b": P(None, None, fsdp),
+        "wr": P(fsdp, tp),
+        "wk": P(fsdp, tp),
+        "wv": P(fsdp, tp),
+        "wg": P(fsdp, tp),
+        "wo": P(tp, fsdp),
+        "w0": P(None),
+        "u": P(None),
+        "ln_x": spec_norm("layernorm"),
+        "cm_mu_k": P(None),
+        "cm_mu_r": P(None),
+        "cm_wk": P(fsdp, tp),
+        "cm_wv": P(tp, fsdp),
+        "cm_wr": P(fsdp, tp),
+    }
+
+
+# ---------------------------------------------------------------------------
+# chunked WKV6 (matmul form, log-space decays)
+# ---------------------------------------------------------------------------
+def wkv6_chunked(r, k, v, wlog, u, state, chunk: int):
+    """r,k,v: (B,T,H,N); wlog: (B,T,H,N) per-step log decay (clamped <0);
+    u: (H,N); state: (B,H,N,N).  Returns (y, final_state)."""
+    B, T, Hh, N = r.shape
+    assert T % chunk == 0, (T, chunk)
+    nc = T // chunk
+    rc = r.reshape(B, nc, chunk, Hh, N).transpose(1, 0, 3, 2, 4)  # (nc,B,H,c,N)
+    kc = k.reshape(B, nc, chunk, Hh, N).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(B, nc, chunk, Hh, N).transpose(1, 0, 3, 2, 4)
+    wc = wlog.reshape(B, nc, chunk, Hh, N).transpose(1, 0, 3, 2, 4)
+
+    def one_chunk(S, xs):
+        rr, kk, vv, ww = xs  # (B,H,c,N)
+        la = jnp.cumsum(ww, axis=2)            # log A_{t+1} = sum_{s<=t} log w_s
+        la_incl = la                            # after step t
+        la_prev = la - ww                       # before step t (log A_t)
+        q_t = rr * jnp.exp(la_prev)             # r_t * A_t
+        k_t = kk * jnp.exp(-la_incl)            # k_s / A_{s+1}
+        att = jnp.einsum("bhtn,bhsn->bhts", q_t, k_t)
+        tri = jnp.tril(jnp.ones((rr.shape[2], rr.shape[2]), bool), k=-1)
+        att = jnp.where(tri[None, None], att, 0.0)
+        diag = jnp.einsum("bhtn,bhtn->bht", rr, u[None, :, None, :] * kk)
+        y = jnp.einsum("bhts,bhsn->bhtn", att, vv) + diag[..., None] * vv
+        y = y + jnp.einsum("bhtn,bhnm->bhtm", q_t, S)  # inter-chunk
+        a_end = jnp.exp(la_incl[:, :, -1:, :])          # (B,H,1,N) total decay
+        k_scaled = kk * jnp.exp(la_incl[:, :, -1:, :] - la_incl)
+        S_new = a_end.squeeze(2)[..., None] * S + jnp.einsum(
+            "bhtn,bhtm->bhnm", k_scaled, vv
+        )
+        return S_new, y
+
+    state, ys = jax.lax.scan(one_chunk, state, (rc, kc, vc, wc))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, T, Hh, N)
+    return y, state
+
+
+def wkv6_step(r, k, v, wlog, u, state):
+    """Single-token recurrence. r..: (B,H,N); state: (B,H,N,N)."""
+    kv = jnp.einsum("bhi,bhj->bhij", k, v)
+    y = jnp.einsum("bhi,bhij->bhj", r, state + u[None, :, :, None] * kv)
+    state = jnp.exp(wlog)[..., None] * state + kv
+    return y, state
+
+
+# ---------------------------------------------------------------------------
+# time-mix / channel-mix
+# ---------------------------------------------------------------------------
+def _ddlerp(p, x, x_prev):
+    """Data-dependent token-shift (v6). Returns the 5 mixed branches."""
+    xx = x_prev - x
+    base = x + xx * p["mu_base"].astype(x.dtype)
+    lora = jnp.tanh(base.astype(jnp.float32) @ p["lora_a"])
+    lora = lora.reshape(*lora.shape[:-1], 5, LORA_DIM)
+    dyn = jnp.einsum("...kl,kld->...kd", lora, p["lora_b"])
+    mixes = p["mu"][None, None] + dyn  # (..., 5, d)
+    return [x + xx * mixes[..., i, :].astype(x.dtype) for i in range(5)]
+
+
+def time_mix(p, x, x_prev, cfg, state=None, chunk=32):
+    """x: (B,T,d) (chunked path, x_prev = shifted x) or (B,1,d) with state."""
+    d = cfg.d_model
+    N = cfg.ssm.head_dim
+    Hh = d // N
+    xr, xk, xv, xw, xg = _ddlerp(p, x, x_prev)
+    r = (xr @ p["wr"].astype(x.dtype)).reshape(*x.shape[:2], Hh, N).astype(jnp.float32)
+    k = (xk @ p["wk"].astype(x.dtype)).reshape(*x.shape[:2], Hh, N).astype(jnp.float32)
+    v = (xv @ p["wv"].astype(x.dtype)).reshape(*x.shape[:2], Hh, N).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["wg"].astype(x.dtype))
+    wlog_raw = p["w0"][None, None] + (xw.astype(jnp.float32) @ p["lora_a"][:, :LORA_DIM]) @ p["lora_b"][3]
+    wlog = jnp.clip(-jnp.exp(wlog_raw), WLOG_MIN, WLOG_MAX)
+    wlog = wlog.reshape(*x.shape[:2], Hh, N)
+    u = p["u"].reshape(Hh, N)
+
+    if state is None:
+        B = x.shape[0]
+        S0 = jnp.zeros((B, Hh, N, N), jnp.float32)
+        y, S = wkv6_chunked(r, k, v, wlog, u, S0, chunk)
+    else:
+        y, S = wkv6_step(r[:, 0], k[:, 0], v[:, 0], wlog[:, 0], u, state)
+        y = y[:, None]
+    # per-head group norm, then gate and project
+    y = apply_norm(p["ln_x"], y, "layernorm")
+    y = y.reshape(*x.shape[:2], d).astype(x.dtype) * g
+    return y @ p["wo"].astype(x.dtype), S
+
+
+def channel_mix(p, x, x_prev, cfg):
+    xx = x_prev - x
+    xk = x + xx * p["cm_mu_k"].astype(x.dtype)
+    xr = x + xx * p["cm_mu_r"].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(xk @ p["cm_wk"].astype(x.dtype)))
+    kk = shard(kk, "batch", "seq", "ffn")
+    return jax.nn.sigmoid(xr @ p["cm_wr"].astype(x.dtype)) * (kk @ p["cm_wv"].astype(x.dtype))
+
+
+def _shift(x):
+    """x_prev[t] = x[t-1] (zeros at t=0)."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def _layer_fwd(p, x, cfg):
+    h = apply_norm(p["ln1"], x, cfg.norm)
+    y, _ = time_mix(p, h, _shift(h), cfg, chunk=cfg.ssm.chunk_size)
+    x = x + y
+    h2 = apply_norm(p["ln2"], x, cfg.norm)
+    x = x + channel_mix(p, h2, _shift(h2), cfg)
+    return shard(x, "batch", "seq", "embed")
+
+
+def _layer_step(p, x, st_tm, st_cm, wkv, cfg):
+    """Single-token step. x: (B,1,d). Shift states are stored f32; cast to
+    the stream dtype so the scan carry dtype stays stable."""
+    h = apply_norm(p["ln1"], x, cfg.norm)
+    y, wkv = time_mix(p, h, st_tm[:, None].astype(h.dtype), cfg, state=wkv)
+    x = x + y
+    h2 = apply_norm(p["ln2"], x, cfg.norm)
+    x = x + channel_mix(p, h2, st_cm[:, None].astype(h2.dtype), cfg)
+    return x, h[:, 0].astype(jnp.float32), h2[:, 0].astype(jnp.float32), wkv
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+def init_lm(key, cfg):
+    dtype = dtype_of(cfg.param_dtype)
+    k_embed, k_layers = jax.random.split(key)
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    layers = jax.vmap(lambda k: init_rwkv_layer(k, cfg))(layer_keys)
+    return {
+        "embed": init_embedding(k_embed, cfg.vocab_size, cfg.d_model, dtype,
+                                cfg.tie_embeddings),
+        "layers": layers,
+        "final_norm": init_norm(cfg.d_model, cfg.norm),
+    }
+
+
+def spec_lm(cfg, fsdp="data", tp="model"):
+    layer = spec_rwkv_layer(cfg, fsdp, tp)
+    stacked = jax.tree.map(lambda s: P(None, *s), layer,
+                           is_leaf=lambda v: isinstance(v, P))
+    return {
+        "embed": spec_embedding(cfg.tie_embeddings, tp, fsdp,
+                                 vocab=cfg.vocab_size, tp_size=cfg.parallelism.tp_size),
+        "layers": stacked,
+        "final_norm": spec_norm(cfg.norm),
+    }
+
+
+def forward(params, tokens, cfg, dist=None, last_only=False):
+    cdt = dtype_of(cfg.compute_dtype)
+    x = embed_tokens(params["embed"], tokens, cfg.d_model, cdt)
+    x = shard(x, "batch", "seq", "embed")
+    body = maybe_remat(lambda pl, xx: (_layer_fwd(pl, xx, cfg), 0.0),
+                       cfg.parallelism.remat)
+
+    def scan_fn(carry, pl):
+        y, _ = body(pl, carry)
+        return y, jnp.zeros((), jnp.float32)
+
+    x, _ = scan_layers(scan_fn, x, params["layers"], cfg.num_layers,
+                       cfg.parallelism.scan_layers)
+    if last_only:
+        x = x[:, -1:]
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = unembed(params["embed"], x, cfg.tie_embeddings)
+    return shard(logits, "batch", "seq", "vocab"), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, batch, cfg, dist=None):
+    logits, aux = forward(params, batch["tokens"], cfg, dist)
+    return softmax_cross_entropy(logits, batch["targets"]) + aux
+
+
+def init_state(cfg, batch: int) -> RwkvState:
+    d, L = cfg.d_model, cfg.num_layers
+    N = cfg.ssm.head_dim
+    Hh = d // N
+    return RwkvState(
+        jnp.zeros((L, batch, d), jnp.float32),
+        jnp.zeros((L, batch, d), jnp.float32),
+        jnp.zeros((L, batch, Hh, N, N), jnp.float32),
+    )
+
+
+def state_specs(cfg) -> RwkvState:
+    b = P(None, ("pod", "data"), None)
+    return RwkvState(b, b, P(None, ("pod", "data"), "model", None, None))
+
+
+def decode_step(params, token, state: RwkvState, index, cfg, dist=None):
+    """One-token decode. The 'KV cache' is the O(1) recurrent state."""
+    cdt = dtype_of(cfg.compute_dtype)
+    x = embed_tokens(params["embed"], token, cfg.d_model, cdt)
+
+    def scan_fn(carry, xs):
+        pl, st_tm, st_cm, wkv = xs
+        y, tm, cm, wkv = _layer_step(pl, carry, st_tm, st_cm, wkv, cfg)
+        return y, (tm, cm, wkv)
+
+    x, (tm, cm, wkv) = scan_layers(
+        scan_fn, x, (params["layers"], state.shift_tm, state.shift_cm, state.wkv),
+        cfg.num_layers, cfg.parallelism.scan_layers,
+    )
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = unembed(params["embed"], x, cfg.tie_embeddings)
+    return logits[:, 0, :], RwkvState(tm, cm, wkv)

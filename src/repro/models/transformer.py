@@ -1,0 +1,233 @@
+"""Dense / MoE decoder-only transformer LM with scan-over-layers.
+
+Covers qwen2-0.5b, nemotron-4, gemma-7b, chatglm3 (dense) and qwen2-moe,
+grok-1 (MoE) through ModelConfig switches: GQA, QKV bias, squared-ReLU,
+GeGLU/SwiGLU, partial RoPE, tied embeddings, MoE blocks.
+
+Layers are stacked (leading dim L on every per-layer leaf) and driven by
+``jax.lax.scan`` so the HLO stays compact for the 512-device dry-run;
+``remat`` wraps the scanned body per config.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..runtime.sharding import shard
+from .attention import (
+    KVCache,
+    attention,
+    init_attention,
+    init_kv_cache,
+    spec_attention,
+)
+from .common import (
+    apply_norm,
+    scan_layers,
+    dtype_of,
+    embed_tokens,
+    init_embedding,
+    init_norm,
+    maybe_remat,
+    softmax_cross_entropy,
+    spec_embedding,
+    spec_norm,
+    unembed,
+)
+from .mlp import init_mlp, mlp, spec_mlp
+from .moe import init_moe, moe_block, spec_moe
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+def init_layer(key, cfg):
+    dtype = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": init_norm(cfg.d_model, cfg.norm),
+        "attn": init_attention(ks[0], cfg),
+        "ln2": init_norm(cfg.d_model, cfg.norm),
+    }
+    if cfg.moe is not None:
+        p["moe"] = init_moe(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.activation, dtype)
+    return p
+
+
+def spec_layer(cfg, fsdp, tp):
+    p = {
+        "ln1": spec_norm(cfg.norm),
+        "attn": spec_attention(cfg, fsdp, tp),
+        "ln2": spec_norm(cfg.norm),
+    }
+    if cfg.moe is not None:
+        p["moe"] = spec_moe(cfg, fsdp, tp)
+    else:
+        p["mlp"] = spec_mlp(cfg.activation, fsdp, tp)
+    return p
+
+
+def init_lm(key, cfg):
+    dtype = dtype_of(cfg.param_dtype)
+    k_embed, k_layers = jax.random.split(key)
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    layers = jax.vmap(lambda k: init_layer(k, cfg))(layer_keys)
+    return {
+        "embed": init_embedding(k_embed, cfg.vocab_size, cfg.d_model, dtype,
+                                cfg.tie_embeddings),
+        "layers": layers,
+        "final_norm": init_norm(cfg.d_model, cfg.norm),
+    }
+
+
+def spec_lm(cfg, fsdp="data", tp="model"):
+    """PartitionSpec tree matching init_lm; stacked layer leaves get a
+    leading None (layer) dim."""
+    layer = spec_layer(cfg, fsdp, tp)
+    stacked = jax.tree.map(lambda s: P(None, *s), layer,
+                           is_leaf=lambda v: isinstance(v, P))
+    return {
+        "embed": spec_embedding(cfg.tie_embeddings, tp, fsdp,
+                                 vocab=cfg.vocab_size, tp_size=cfg.parallelism.tp_size),
+        "layers": stacked,
+        "final_norm": spec_norm(cfg.norm),
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+def _layer_fwd(p, x, positions, cfg, dist):
+    h = apply_norm(p["ln1"], x, cfg.norm)
+    a, _ = attention(p["attn"], h, cfg, positions=positions, causal=True)
+    x = x + a
+    x = shard(x, "batch", "seq", "embed")
+    h2 = apply_norm(p["ln2"], x, cfg.norm)
+    if cfg.moe is not None:
+        f, aux = moe_block(p["moe"], h2, cfg, dist)
+    else:
+        f, aux = mlp(p["mlp"], h2, cfg.activation), jnp.zeros((), jnp.float32)
+    x = x + f
+    x = shard(x, "batch", "seq", "embed")
+    return x, aux
+
+
+def forward(params, tokens, cfg, dist=None, positions=None, last_only=False):
+    """Full-sequence forward -> logits (train / prefill-without-cache).
+    ``last_only`` slices the residual stream to the final position BEFORE the
+    unembed matmul (prefill needs one position; §Perf it2)."""
+    cdt = dtype_of(cfg.compute_dtype)
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, 0)
+    x = embed_tokens(params["embed"], tokens, cfg.d_model, cdt)
+    x = shard(x, "batch", "seq", "embed")
+
+    body = lambda pl, xx: _layer_fwd(pl, xx, positions, cfg, dist)
+    body = maybe_remat(body, cfg.parallelism.remat)
+
+    def scan_fn(carry, pl):
+        y, aux = body(pl, carry)
+        return y, aux
+
+    x, auxes = scan_layers(scan_fn, x, params["layers"], cfg.num_layers,
+                           cfg.parallelism.scan_layers)
+    aux = auxes.sum()
+
+    if last_only:
+        x = x[:, -1:]
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = unembed(params["embed"], x, cfg.tie_embeddings)
+    logits = shard(logits, "batch", "seq", "vocab")
+    return logits, aux
+
+
+def loss_fn(params, batch, cfg, dist=None):
+    logits, aux = forward(params, batch["tokens"], cfg, dist)
+    return softmax_cross_entropy(logits, batch["targets"]) + aux
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill fills the cache; decode appends one token
+# ---------------------------------------------------------------------------
+def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    hd = cfg.resolved_head_dim
+    shape = (cfg.num_layers, batch, max_seq, cfg.num_kv_heads, hd)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def cache_specs(cfg):
+    one = P(("pod", "data"), None, "model", None)
+    return KVCache(P(None, *one), P(None, *one))
+
+
+def _layer_decode(p, x, cache_l, index, positions, cfg, dist):
+    h = apply_norm(p["ln1"], x, cfg.norm)
+    a, new_cache = attention(
+        p["attn"], h, cfg, positions=positions, causal=True,
+        kv_cache=cache_l, cache_index=index,
+    )
+    x = x + a
+    h2 = apply_norm(p["ln2"], x, cfg.norm)
+    if cfg.moe is not None:
+        f, _ = moe_block(p["moe"], h2, cfg, dist)
+    else:
+        f = mlp(p["mlp"], h2, cfg.activation)
+    return x + f, new_cache
+
+
+def decode_step(params, token, cache, index, cfg, dist=None):
+    """token: (B, 1) int32; cache: stacked KVCache; index: scalar int32.
+    Returns (logits (B, vocab), new_cache)."""
+    cdt = dtype_of(cfg.compute_dtype)
+    B = token.shape[0]
+    positions = jnp.full((B, 1), index, dtype=jnp.int32)
+    x = embed_tokens(params["embed"], token, cfg.d_model, cdt)
+
+    def scan_fn(carry, xs):
+        pl, cache_l = xs
+        y, new_cache_l = _layer_decode(pl, carry, cache_l, index, positions, cfg, dist)
+        return y, new_cache_l
+
+    x, new_cache = scan_layers(scan_fn, x, (params["layers"], cache),
+                               cfg.num_layers, cfg.parallelism.scan_layers)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = unembed(params["embed"], x, cfg.tie_embeddings)
+    return logits[:, 0, :], new_cache
+
+
+def prefill(params, tokens, cfg, dist=None, max_seq: Optional[int] = None):
+    """Run the prompt, returning (last_logits, filled_cache, next_index)."""
+    cdt = dtype_of(cfg.compute_dtype)
+    B, S = tokens.shape
+    max_seq = max_seq or cfg.max_seq_len
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, 0)
+    x = embed_tokens(params["embed"], tokens, cfg.d_model, cdt)
+    cache = init_cache(cfg, B, max_seq)
+
+    def scan_fn(carry, xs):
+        pl, cache_l = xs
+        h = apply_norm(pl["ln1"], carry, cfg.norm)
+        a, new_cache_l = attention(
+            pl["attn"], h, cfg, positions=positions, causal=True,
+            kv_cache=cache_l, cache_index=0,
+        )
+        y = carry + a
+        h2 = apply_norm(pl["ln2"], y, cfg.norm)
+        if cfg.moe is not None:
+            f, _ = moe_block(pl["moe"], h2, cfg, dist)
+        else:
+            f = mlp(pl["mlp"], h2, cfg.activation)
+        return y + f, new_cache_l
+
+    x, cache = scan_layers(scan_fn, x, (params["layers"], cache),
+                           cfg.num_layers, cfg.parallelism.scan_layers)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = unembed(params["embed"], x[:, -1:, :], cfg.tie_embeddings)
+    return logits[:, 0, :], cache, jnp.int32(S)

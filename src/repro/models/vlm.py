@@ -1,0 +1,134 @@
+"""Phi-3-vision: phi3-mini transformer backbone + CLIP frontend STUB.
+
+Per the harness rules the modality frontend is a stub: ``input_specs()``
+provides precomputed patch embeddings (B, num_patches, clip_dim).  This
+module adds the projector (clip_dim -> d_model MLP, as in the real model)
+and prepends the projected image tokens to the text sequence; everything
+downstream is the dense transformer from transformer.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..runtime.sharding import shard
+from .common import (
+    apply_norm,
+    dense_init,
+    dtype_of,
+    embed_tokens,
+    softmax_cross_entropy,
+    unembed,
+)
+from . import transformer as tfm
+
+
+def init_lm(key, cfg):
+    k_proj, k_base = jax.random.split(key)
+    dtype = dtype_of(cfg.param_dtype)
+    v = cfg.vlm
+    base = tfm.init_lm(k_base, cfg)
+    ks = jax.random.split(k_proj, 2)
+    base["projector"] = {
+        "w1": dense_init(ks[0], v.patch_embed_dim, cfg.d_model, dtype),
+        "w2": dense_init(ks[1], cfg.d_model, cfg.d_model, dtype),
+    }
+    return base
+
+
+def spec_lm(cfg, fsdp="data", tp="model"):
+    spec = tfm.spec_lm(cfg, fsdp, tp)
+    spec["projector"] = {"w1": P(None, fsdp), "w2": P(fsdp, tp)}
+    return spec
+
+
+def project_patches(params, patches, cfg):
+    cdt = dtype_of(cfg.compute_dtype)
+    patches = patches.astype(cdt)
+    h = jax.nn.gelu(patches @ params["projector"]["w1"].astype(cdt))
+    return h @ params["projector"]["w2"].astype(cdt)
+
+
+def forward(params, batch, cfg, dist=None, last_only=False):
+    """batch: {"tokens": (B,S), "patches": (B,Np,clip_dim), "targets": (B,S)}.
+    Image tokens are prepended; loss only on text positions."""
+    cdt = dtype_of(cfg.compute_dtype)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    img = project_patches(params, batch["patches"], cfg)  # (B, Np, d)
+    Np = img.shape[1]
+    txt = embed_tokens(params["embed"], tokens, cfg.d_model, cdt)
+    x = jnp.concatenate([img, txt], axis=1)
+    x = shard(x, "batch", "seq", "embed")
+    positions = jnp.arange(Np + S, dtype=jnp.int32)[None].repeat(B, 0)
+
+    from .common import maybe_remat
+
+    body = maybe_remat(
+        lambda pl, xx: tfm._layer_fwd(pl, xx, positions, cfg, dist),
+        cfg.parallelism.remat,
+    )
+
+    def scan_fn(carry, pl):
+        y, aux = body(pl, carry)
+        return y, aux
+
+    from .common import scan_layers as _scan
+
+    x, auxes = _scan(scan_fn, x, params["layers"], cfg.num_layers,
+                     cfg.parallelism.scan_layers)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    tail = x[:, -1:] if last_only else x[:, Np:]
+    logits = unembed(params["embed"], tail, cfg.tie_embeddings)
+    return shard(logits, "batch", "seq", "vocab"), auxes.sum()
+
+
+def loss_fn(params, batch, cfg, dist=None):
+    logits, aux = forward(params, batch, cfg, dist)
+    return softmax_cross_entropy(logits, batch["targets"]) + aux
+
+
+# decode reuses the dense-transformer cache machinery: the image prefix is
+# prefilled into the cache, then decoding proceeds token by token.
+init_cache = tfm.init_cache
+cache_specs = tfm.cache_specs
+decode_step = tfm.decode_step
+
+
+def prefill_multimodal(params, tokens, patches, cfg, dist=None, max_seq=None):
+    """Prefill with image prefix + prompt tokens; returns (logits, cache, idx)."""
+    cdt = dtype_of(cfg.compute_dtype)
+    B, S = tokens.shape
+    img = project_patches(params, patches, cfg)
+    Np = img.shape[1]
+    max_seq = max_seq or cfg.max_seq_len
+    txt = embed_tokens(params["embed"], tokens, cfg.d_model, cdt)
+    x = jnp.concatenate([img, txt], axis=1)
+    positions = jnp.arange(Np + S, dtype=jnp.int32)[None].repeat(B, 0)
+    cache = tfm.init_cache(cfg, B, max_seq)
+
+    from .attention import attention
+    from .mlp import mlp as mlp_fn
+    from .moe import moe_block
+
+    def scan_fn(carry, xs):
+        pl, cache_l = xs
+        h = apply_norm(pl["ln1"], carry, cfg.norm)
+        a, new_cache_l = attention(pl["attn"], h, cfg, positions=positions,
+                                   causal=True, kv_cache=cache_l, cache_index=0)
+        y = carry + a
+        h2 = apply_norm(pl["ln2"], y, cfg.norm)
+        if cfg.moe is not None:
+            f, _ = moe_block(pl["moe"], h2, cfg, dist)
+        else:
+            f = mlp_fn(pl["mlp"], h2, cfg.activation)
+        return y + f, new_cache_l
+
+    from .common import scan_layers as _scan
+
+    x, cache = _scan(scan_fn, x, (params["layers"], cache), cfg.num_layers,
+                     cfg.parallelism.scan_layers)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = unembed(params["embed"], x[:, -1:], cfg.tie_embeddings)
+    return logits[:, 0], cache, jnp.int32(Np + S)

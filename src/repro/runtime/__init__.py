@@ -1,0 +1,2 @@
+"""Distributed runtime: sharding rules, dist context, fault tolerance."""
+from .sharding import AxisRules, production_rules, shard, use_rules  # noqa: F401

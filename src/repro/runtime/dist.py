@@ -1,0 +1,78 @@
+"""DistContext: the distributed-runtime handle threaded through the stack.
+
+Bundles the ABI context, the mesh, the axis rules and the standard
+communicators (data-parallel group, tensor/expert-parallel group).  Model
+and training code receive this object and never touch backend internals —
+the paper's implementation-agnosticism carried through the whole framework.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+
+from ..core import PAX_COMM_WORLD, PaxABI, pax_init
+from .sharding import AxisRules, production_rules
+
+
+@dataclasses.dataclass
+class DistContext:
+    abi: PaxABI
+    mesh: jax.sharding.Mesh
+    rules: AxisRules
+    dp_axes: tuple[str, ...]
+    tp_axis: str
+    dp_comm: int
+    tp_comm: int
+    world: int = PAX_COMM_WORLD
+    # optional second context whose backend compresses on the wire
+    abi_compressed: Optional[PaxABI] = None
+
+    @property
+    def dp_size(self) -> int:
+        return math.prod(self.mesh.shape[a] for a in self.dp_axes)
+
+    @property
+    def tp_size(self) -> int:
+        return self.mesh.shape[self.tp_axis]
+
+
+def make_dist(
+    mesh: jax.sharding.Mesh,
+    *,
+    impl: Optional[str] = None,
+    tools=(),
+    sequence_parallel: bool = False,
+    compression: Optional[str] = None,
+) -> DistContext:
+    abi = pax_init(mesh, impl=impl, tools=tools)
+    names = tuple(mesh.axis_names)
+    tp_axis = "model" if "model" in names else names[-1]
+    dp_axes = tuple(a for a in names if a != tp_axis)
+    dp_comm = abi.comm_from_axes(dp_axes, "dp") if dp_axes else abi.comms.info(PAX_COMM_WORLD).handle
+    tp_comm = abi.comm_from_axes((tp_axis,), "tp")
+    rules = production_rules(
+        pod="pod" in names,
+        sequence_parallel=sequence_parallel,
+        tp_axis=tp_axis,
+        data_axes=tuple(a for a in dp_axes if a != "pod"),
+        axis_sizes=dict(mesh.shape),
+        mesh=mesh,
+    )
+    abi_c = None
+    if compression in ("int8", "bf16"):
+        abi_c = pax_init(mesh, impl=f"ring-{compression}", tools=tools)
+        abi_c.comm_from_axes(dp_axes, "dp")  # mirror handle allocation order
+    dist = DistContext(abi, mesh, rules, dp_axes, tp_axis, dp_comm, tp_comm,
+                       abi_compressed=abi_c)
+    return dist
+
+
+def dp_comm_of(dist: DistContext, compressed: bool) -> tuple[PaxABI, int]:
+    """The (abi, comm) pair to use for gradient traffic."""
+    if compressed and dist.abi_compressed is not None:
+        # handles are allocated in the same order in both contexts
+        return dist.abi_compressed, dist.dp_comm
+    return dist.abi, dist.dp_comm

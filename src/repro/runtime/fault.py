@@ -1,0 +1,124 @@
+"""Fault tolerance: supervised training with checkpoint/restart, step-time
+watchdog, and bounded-retry restart on failure.
+
+What 1000-node SPMD reality allows (DESIGN.md §9): a rank failure kills the
+step; recovery = restart from the latest checkpoint, possibly on a resized
+mesh (elastic resharding via Checkpointer.restore(mesh=new_mesh)).  This
+module provides the in-process skeleton of that supervisor:
+
+* :class:`StepWatchdog` — records step latencies, flags stragglers
+  (> k * rolling median), and exposes the restart decision hook;
+* :func:`run_supervised` — drives (step_fn, state, batches) with periodic
+  async checkpoints; on exception it restores the latest checkpoint and
+  resumes, up to ``max_restarts`` with exponential backoff.
+
+The simulated-failure tests (tests/test_fault.py) inject exceptions at
+chosen steps and assert exactly-once-per-step semantics after recovery.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from collections import deque
+from typing import Callable, Iterable, Optional
+
+import jax
+
+from ..checkpoint.checkpointer import Checkpointer
+
+log = logging.getLogger("repro.fault")
+
+
+class StepWatchdog:
+    def __init__(self, window: int = 32, straggler_factor: float = 3.0) -> None:
+        self.times: deque[float] = deque(maxlen=window)
+        self.factor = straggler_factor
+        self.stragglers: list[tuple[int, float]] = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        """Returns True if this step was a straggler."""
+        is_straggler = False
+        if len(self.times) >= 8:
+            med = sorted(self.times)[len(self.times) // 2]
+            if dt > self.factor * med:
+                is_straggler = True
+                self.stragglers.append((step, dt))
+                log.warning("straggler: step %d took %.3fs (median %.3fs)", step, dt, med)
+        self.times.append(dt)
+        return is_straggler
+
+
+@dataclasses.dataclass
+class SupervisorReport:
+    steps_completed: int
+    restarts: int
+    stragglers: int
+    final_state: object
+    losses: list
+
+
+def run_supervised(
+    step_fn: Callable,
+    init_state,
+    batches: Iterable,
+    *,
+    checkpointer: Checkpointer,
+    total_steps: int,
+    checkpoint_every: int = 50,
+    max_restarts: int = 3,
+    backoff_s: float = 0.0,
+    state_like=None,
+) -> SupervisorReport:
+    """Run ``total_steps`` of ``state, metrics = step_fn(state, batch)`` with
+    checkpoint/restart fault tolerance.
+
+    ``batches`` must be restartable by step index: we require a callable
+    ``batches(step) -> batch`` or an indexable; iterables are materialized
+    per step via the callable protocol to keep data/step alignment across
+    restarts (exactly-once consumption per completed step).
+    """
+    get_batch = batches if callable(batches) else (lambda i: batches[i])
+    watchdog = StepWatchdog()
+    restarts = 0
+    losses = []
+
+    state = init_state
+    step = 0
+    # resume from an existing checkpoint if present
+    latest = checkpointer.latest_step()
+    if latest is not None:
+        state, step = checkpointer.restore(state_like or init_state)
+        log.info("resuming from checkpoint step %d", step)
+
+    while step < total_steps:
+        try:
+            t0 = time.time()
+            state, metrics = step_fn(state, get_batch(step))
+            loss = getattr(metrics, "loss", None)
+            if loss is not None:
+                losses.append(float(loss))
+            watchdog.observe(step, time.time() - t0)
+            step += 1
+            if step % checkpoint_every == 0 or step == total_steps:
+                checkpointer.save_async(step, state)
+        except KeyboardInterrupt:  # pragma: no cover
+            raise
+        except Exception as e:
+            restarts += 1
+            if restarts > max_restarts:
+                raise RuntimeError(
+                    f"exceeded {max_restarts} restarts at step {step}") from e
+            log.warning("step %d failed (%s); restart %d/%d", step, e, restarts,
+                        max_restarts)
+            if backoff_s:
+                time.sleep(backoff_s * (2 ** (restarts - 1)))
+            checkpointer.wait()
+            latest = checkpointer.latest_step()
+            if latest is not None:
+                state, step = checkpointer.restore(state_like or init_state)
+            else:
+                state, step = init_state, 0
+
+    checkpointer.wait()
+    return SupervisorReport(step, restarts, len(watchdog.stragglers), state, losses)

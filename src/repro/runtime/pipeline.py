@@ -1,0 +1,136 @@
+"""Pipeline parallelism: GPipe-style microbatch schedule over explicit ABI
+``sendrecv`` (collective_permute) hops.
+
+The pipeline runs inside a manual ``shard_map`` over the stage axis (the
+``pod`` axis of the multi-pod mesh is the natural choice: stage hops are
+the only inter-pod traffic, matching the slow-link topology).  Layers are
+split into S contiguous stages; each device holds only its stage's layer
+stack (params sharded over the stage axis on the layer dim).  The schedule
+is the classic GPipe loop of ``M + S - 1`` ticks:
+
+    tick t: every stage computes on its current microbatch (real or bubble)
+            then activations hop stage i -> i+1 via ONE ppermute
+
+Autodiff differentiates straight through the ppermute hops (its transpose
+is the reverse permutation), so ``jax.grad`` of the pipelined loss yields
+the standard GPipe backward with bubbles — no custom VJP needed.
+
+Bubble fraction = (S-1)/(M+S-1); the §Perf log records the collective
+bytes of the hop schedule from the lowered HLO.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..core import PAX_SUM
+
+
+def pipeline_forward(
+    layer_stack_fn: Callable,   # (stage_params, x) -> x  (one stage's layers)
+    stage_params,               # pytree, leaves (S*L_per_stage, ...) split over stage axis
+    x_microbatches,             # (M, mb, ...) microbatched input activations
+    *,
+    dist,
+    stage_axis: str = "pod",
+    broadcast_out: bool = True,
+):
+    """Returns (M, mb, ...) outputs as produced by the LAST stage (replicated
+    to all stages when ``broadcast_out``; otherwise valid only on the last
+    stage — the training path).
+
+    Must be called inside a shard_map region where ``stage_axis`` is manual;
+    ``stage_params`` leaves are the local stage's slice, ``x_microbatches``
+    are replicated across stages (only stage 0 consumes them).
+    """
+    S = dist.mesh.shape[stage_axis]
+    M = x_microbatches.shape[0]
+    stage = jax.lax.axis_index(stage_axis)
+    fwd_perm = [(i, i + 1) for i in range(S - 1)]
+
+    mb_shape = x_microbatches.shape[1:]
+    buf = jnp.zeros(mb_shape, x_microbatches.dtype)      # current activation
+    outs = jnp.zeros((M,) + mb_shape, x_microbatches.dtype)
+
+    def tick(t, carry):
+        buf, outs = carry
+        # stage 0 ingests microbatch t (if any); others keep what arrived
+        def ingest():
+            idx = jnp.clip(t, 0, M - 1)
+            return jax.lax.dynamic_index_in_dim(x_microbatches, idx, 0, keepdims=False)
+
+        buf = jnp.where(stage == 0, jnp.where(t < M, ingest(), buf), buf)
+        y = layer_stack_fn(stage_params, buf)
+        # last stage emits microbatch (t - (S-1)) when it is real
+        out_idx = t - (S - 1)
+
+        def emit(outs):
+            idx = jnp.clip(out_idx, 0, M - 1)
+            return jax.lax.cond(
+                (out_idx >= 0) & (out_idx < M) & (stage == S - 1),
+                lambda o: jax.lax.dynamic_update_index_in_dim(o, y, idx, 0),
+                lambda o: o,
+                outs,
+            )
+
+        outs = emit(outs)
+        # hop: stage i -> i+1 (one collective_permute per tick)
+        buf = dist.abi.sendrecv(y, fwd_perm, dist.pp_comm)
+        return buf, outs
+
+    buf, outs = jax.lax.fori_loop(0, M + S - 1, tick, (buf, outs))
+    if broadcast_out:
+        # inference: replicate the last stage's outputs everywhere.  NOTE:
+        # do NOT differentiate through this path — bcast transposes to a
+        # psum over stages, scaling gradients by S.  Training uses
+        # ``pipelined_loss`` (masked-loss pattern) instead.
+        outs = dist.abi.bcast(outs, S - 1, dist.pp_comm)
+    return outs
+
+
+def make_pp_dist(dist, stage_axis: str = "pod"):
+    """Attach a pipeline communicator to an existing DistContext."""
+    if not hasattr(dist, "pp_comm") or dist.pp_comm is None:
+        dist.pp_comm = dist.abi.comm_from_axes((stage_axis,), "pp")
+    return dist
+
+
+def pipelined_loss(layer_stack_fn, stage_params, x_microbatches, loss_of_out,
+                   *, dist, stage_axis: str = "pod"):
+    """Differentiation-safe pipelined loss: the loss is evaluated on the last
+    stage only and all-reduced with a stage mask, so the gradient is exact
+    (no bcast-transpose double counting)."""
+    S = dist.mesh.shape[stage_axis]
+    stage = jax.lax.axis_index(stage_axis)
+    ym = pipeline_forward(layer_stack_fn, stage_params, x_microbatches,
+                          dist=dist, stage_axis=stage_axis, broadcast_out=False)
+    local = loss_of_out(ym)
+    masked = jnp.where(stage == S - 1, local, 0.0)
+    # value = replicated total; gradient flows ONLY through the local masked
+    # term (without vma tracking, psum transposes to psum and would scale
+    # gradients by S — the stop_gradient split sidesteps that)
+    total = dist.abi.allreduce(jax.lax.stop_gradient(masked), PAX_SUM, dist.pp_comm)
+    return masked + (total - jax.lax.stop_gradient(masked))
+
+
+def pipelined_loss_fn(embed_fn, layer_stack_fn, head_fn, stage_params,
+                      batch, *, dist, n_microbatches: int,
+                      stage_axis: str = "pod"):
+    """Convenience: embed -> pipeline(stages) -> head/loss, fully inside the
+    caller's shard_map region.  ``embed_fn``/``head_fn`` run replicated on
+    every stage (cheap); the layer stacks are the pipelined part."""
+    x = embed_fn(batch)  # (B, S, d)
+    B = x.shape[0]
+    M = n_microbatches
+    assert B % M == 0
+    xm = x.reshape((M, B // M) + x.shape[1:])
+
+    def loss_of_out(ym):
+        y = ym.reshape(x.shape)
+        return head_fn(y, batch)
+
+    return pipelined_loss(layer_stack_fn, stage_params, xm, loss_of_out,
+                          dist=dist, stage_axis=stage_axis)

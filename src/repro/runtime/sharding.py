@@ -1,0 +1,197 @@
+"""Logical-axis sharding rules (MaxText-style) + constraint helper.
+
+Model code annotates activations with *logical* axes:
+
+    x = shard(x, "batch", "seq", "embed")
+
+and the active :class:`AxisRules` maps logical -> mesh axes.  The default
+production mapping:
+
+    batch   -> ("pod", "data")     (data parallel, incl. the pod axis)
+    seq     -> "model" IF sequence_parallel else None
+    heads   -> "model"             (tensor parallel)
+    ffn     -> "model"
+    vocab   -> "model"
+    embed   -> None                (replicated; FSDP shards the *params*)
+    experts -> "model"             (expert parallel)
+    kv      -> "model"             (decode-time KV-head sharding)
+
+Param shardings combine FSDP (over ``fsdp`` axes) with TP (over ``tp``):
+see the per-module ``spec_*`` functions in repro.models.*.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+Axis = Union[None, str, tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    rules: dict[str, Axis]
+    enabled: bool = True
+    # concrete mesh for plain-jit contexts (bare-P constraints need an
+    # ambient mesh; under jit-without-set_mesh we build a NamedSharding)
+    mesh: object = None
+    # mesh axis sizes; when known, constraints that would shard a dimension
+    # unevenly are dropped (uneven shardings inside partial-manual shard_map
+    # regions crash the XLA SPMD partitioner; evenness is also what a
+    # production config wants anyway)
+    axis_sizes: dict = dataclasses.field(default_factory=dict)
+
+    def to_spec(self, *logical: Optional[str]) -> P:
+        return P(*(self.rules.get(name) if name else None for name in logical))
+
+    def _axes_size(self, axes: Axis) -> int:
+        if axes is None:
+            return 1
+        if isinstance(axes, str):
+            return self.axis_sizes.get(axes, 1)
+        out = 1
+        for a in axes:
+            out *= self.axis_sizes.get(a, 1)
+        return out
+
+    def to_spec_for(self, shape: tuple, *logical: Optional[str]) -> P:
+        parts = []
+        used: set = set()
+        for dim, name in zip(shape, logical):
+            axes = self.rules.get(name) if name else None
+            if axes is not None and self.axis_sizes:
+                size = self._axes_size(axes)
+                if size <= 1 or dim % size != 0:
+                    axes = None
+            # a mesh axis may appear at most once per spec (e.g. with
+            # sequence parallelism both 'seq' and 'heads' map to the tp
+            # axis: the earlier dimension wins)
+            if axes is not None:
+                flat = (axes,) if isinstance(axes, str) else tuple(axes)
+                if any(a in used for a in flat):
+                    axes = None
+                else:
+                    used.update(flat)
+            parts.append(axes)
+        return P(*parts)
+
+
+def production_rules(
+    *,
+    pod: bool = True,
+    sequence_parallel: bool = False,
+    tp_axis: str = "model",
+    data_axes: tuple[str, ...] = ("data",),
+    axis_sizes: Optional[dict] = None,
+    mesh=None,
+) -> AxisRules:
+    batch = (("pod",) + data_axes) if pod else data_axes
+    return AxisRules(
+        mesh=mesh,
+        rules={
+            "batch": batch,
+            "seq": tp_axis if sequence_parallel else None,
+            "kv_seq": None,
+            "heads": tp_axis,
+            "kv_heads": tp_axis,
+            "ffn": tp_axis,
+            "vocab": tp_axis,
+            "embed": None,
+            "experts": tp_axis,
+            "state": None,
+        },
+        axis_sizes=dict(axis_sizes or {}),
+    )
+
+
+_current: contextvars.ContextVar[Optional[AxisRules]] = contextvars.ContextVar(
+    "axis_rules", default=None
+)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[AxisRules]):
+    token = _current.set(rules)
+    try:
+        yield
+    finally:
+        _current.reset(token)
+
+
+def current_rules() -> Optional[AxisRules]:
+    return _current.get()
+
+
+def _manual_axes() -> frozenset:
+    """Axes that are Manual in the current abstract mesh (inside a
+    partial-manual shard_map region, the dp axes)."""
+    try:
+        ctx = jax.sharding.get_abstract_mesh()
+        if ctx is None or not ctx.axis_names:
+            return frozenset()
+        return frozenset(
+            name for name, t in zip(ctx.axis_names, ctx.axis_types)
+            if t == jax.sharding.AxisType.Manual
+        )
+    except Exception:
+        return frozenset()
+
+
+def _strip_axes(spec: P, drop: frozenset) -> P:
+    parts = []
+    for p in tuple(spec):
+        if p is None:
+            parts.append(None)
+        elif isinstance(p, tuple):
+            kept = tuple(a for a in p if a not in drop)
+            parts.append(kept if len(kept) > 1 else (kept[0] if kept else None))
+        else:
+            parts.append(None if p in drop else p)
+    return P(*parts)
+
+
+def shard(x, *logical: Optional[str]):
+    """Apply a sharding constraint if rules are active; no-op otherwise.
+
+    Uses bare PartitionSpec constraints (legal under plain jit and inside
+    partial-manual shard_map bodies).  Axes that are Manual in the ambient
+    mesh (the dp axes of the ABI train step) are stripped from the spec —
+    constraints may only reference Auto axes there; referencing a Manual
+    axis raises, which previously silently disabled ALL constraints.
+    """
+    rules = _current.get()
+    if rules is None or not rules.enabled:
+        return x
+    spec = rules.to_spec_for(x.shape, *logical)
+    manual = _manual_axes()
+    if manual:
+        spec = _strip_axes(spec, manual)
+        target = spec  # inside shard_map: bare P against the abstract mesh
+    elif rules.mesh is not None:
+        from jax.sharding import NamedSharding
+
+        target = NamedSharding(rules.mesh, spec)  # plain jit: concrete mesh
+    else:
+        target = spec
+    try:
+        return jax.lax.with_sharding_constraint(x, target)
+    except Exception:
+        # no mesh context (e.g. pure-CPU smoke test): constraints are advisory
+        return x
+
+
+def fsdp_spec(*dims: Optional[str], fsdp: Axis, tp: str) -> P:
+    """Helper for param specs: map 'fsdp'/'tp' placeholders to mesh axes."""
+    out = []
+    for d in dims:
+        if d == "fsdp":
+            out.append(fsdp)
+        elif d == "tp":
+            out.append(tp)
+        else:
+            out.append(d)
+    return P(*out)

@@ -1,0 +1,89 @@
+"""Data-parallel gradient synchronization through the PAX ABI.
+
+This is where the paper's ABI carries the framework's heaviest traffic.
+Modes (config ``parallelism.grad_sync``):
+
+* ``abi`` — explicit ZeRO-1: the flat gradient vector is **reduce-scattered**
+  over the dp communicator (each rank keeps 1/dp), the optimizer updates its
+  shard, and the updated shard is **all-gathered** back.  Collective bytes:
+  2x the parameter bytes per step (vs 2x for plain all-reduce but with 1/dp
+  optimizer memory).  Options:
+    - bucketing: the vector is split into N buckets issued as nonblocking
+      ``ireduce_scatter`` requests (XLA's latency-hiding scheduler can
+      overlap them with the optimizer math of earlier buckets);
+    - compression: ``bf16`` casts the wire payload (+error feedback);
+      ``int8`` routes through a ring backend that quantizes per hop.
+* ``gspmd`` — implicit: gradients/optimizer state are sharded by XLA via
+  in_shardings; no explicit collectives (used by the 300B-class archs whose
+  parameters are FSDP-sharded over dp).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core import PAX_SUM
+from ..optim.adamw import flatten, unflatten_like
+from ..runtime.dist import DistContext, dp_comm_of
+
+
+def pad_to(vec, multiple: int):
+    pad = (-vec.shape[0]) % multiple
+    if pad:
+        vec = jnp.concatenate([vec, jnp.zeros((pad,), vec.dtype)])
+    return vec
+
+
+def reduce_scatter_grads(
+    dist: DistContext,
+    flat_g: jax.Array,
+    *,
+    compression: Optional[str] = None,
+    buckets: int = 1,
+    ef: Optional[jax.Array] = None,
+):
+    """flat_g: (padded_n,) f32, padded_n % dp_size == 0.
+    Returns (g_shard (padded_n/dp,), new_ef).  Mean over dp ranks."""
+    dp = dist.dp_size
+    n = flat_g.shape[0]
+    assert n % dp == 0
+    if ef is not None and ef.shape[0] == n:
+        flat_g = flat_g + ef
+    wire = flat_g
+    new_ef = ef
+    if compression == "bf16":
+        wire16 = flat_g.astype(jnp.bfloat16)
+        if ef is not None and ef.shape[0] == n:
+            new_ef = flat_g - wire16.astype(jnp.float32)
+        wire = wire16
+    abi, comm = dp_comm_of(dist, compression == "int8")
+
+    if buckets <= 1:
+        shard = abi.reduce_scatter(wire, PAX_SUM, comm)
+    else:
+        assert n % (dp * buckets) == 0, "bucket count must divide the shard"
+        parts = jnp.split(wire, buckets)
+        reqs = [abi.ireduce_scatter(p, PAX_SUM, comm) for p in parts]
+        shards = abi.waitall(reqs)
+        shard = jnp.concatenate(shards)
+    shard = shard.astype(jnp.float32) / dp
+    return shard, new_ef
+
+
+def allgather_params(dist: DistContext, shard: jax.Array) -> jax.Array:
+    """Inverse of the scatter: collect every rank's updated shard."""
+    return dist.abi.allgather(shard, dist.dp_comm).astype(jnp.float32)
+
+
+def allreduce_scalar(dist: DistContext, x):
+    """Mean of a scalar metric over the dp group (loss, grad-norm²)."""
+    return dist.abi.allreduce(x, PAX_SUM, dist.dp_comm) / dist.dp_size
+
+
+def sync_tree_allreduce(dist: DistContext, grads):
+    """Plain all-reduce of a gradient pytree (non-ZeRO baseline path)."""
+    flat = flatten(grads)
+    summed = dist.abi.allreduce(flat, PAX_SUM, dist.dp_comm) / dist.dp_size
+    return unflatten_like(summed, grads)

@@ -1,0 +1,28 @@
+"""Multi-device collective semantics + the HLO-identity (zero-overhead)
+claim, via the subprocess battery (8 fake CPU devices, isolated from this
+process's single-device view)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+BATTERY = os.path.join(os.path.dirname(__file__), "multidev_battery.py")
+
+
+def test_multidev_battery():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)  # battery sets its own
+    proc = subprocess.run(
+        [sys.executable, BATTERY],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=900,
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"battery failed (rc={proc.returncode})\n--- stdout\n{proc.stdout}"
+            f"\n--- stderr\n{proc.stderr[-4000:]}"
+        )
+    assert "BATTERY PASSED" in proc.stdout

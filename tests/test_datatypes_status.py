@@ -1,0 +1,145 @@
+"""Datatype registry + status object tests (paper §5.1–§5.3, §6.1)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import handles as H
+from repro.core.datatypes import DatatypeRegistry, N_PREDEFINED, predefined_descriptors
+from repro.core.errors import PaxError
+from repro.core.status import STATUS_BYTES, Status, status_array, status_view
+
+
+@pytest.fixture()
+def reg():
+    return DatatypeRegistry()
+
+
+def test_encoded_equals_lookup_everywhere(reg):
+    """The two §6.1 strategies must agree on every predefined type."""
+    for h in predefined_descriptors():
+        assert reg.type_size_encoded(h) == reg.type_size_lookup(h), H.describe(h)
+
+
+def test_fixed_size_table_consistent_with_bits(reg):
+    """Descriptor sizes must equal the size encoded in handle bits."""
+    for h, d in predefined_descriptors().items():
+        if H.datatype_is_fixed_size(h):
+            assert d.size == H.datatype_encoded_size(h), d.name
+
+
+def test_integer_model_a64o64(reg):
+    """§5.1: Aint/Offset/Count are 8 bytes (A64O64), Count >= max(Aint, Offset)."""
+    assert reg.type_size(H.PAX_AINT) == 8
+    assert reg.type_size(H.PAX_OFFSET) == 8
+    assert reg.type_size(H.PAX_COUNT) == 8
+    assert reg.type_size(H.PAX_COUNT) >= max(
+        reg.type_size(H.PAX_AINT), reg.type_size(H.PAX_OFFSET)
+    )
+
+
+@pytest.mark.parametrize(
+    "dtype,expected",
+    [
+        ("float32", H.PAX_FLOAT32),
+        ("float16", H.PAX_FLOAT16),
+        ("bfloat16", H.PAX_BFLOAT16),
+        ("int8", H.PAX_INT8_T),
+        ("uint8", H.PAX_UINT8_T),
+        ("int32", H.PAX_INT32_T),
+    ],
+)
+def test_from_array_canonical(reg, dtype, expected):
+    x = jnp.zeros((2,), dtype=dtype)
+    h = reg.from_array(x)
+    assert h == expected
+    # roundtrip back to numpy dtype
+    assert reg.to_numpy_dtype(h) == np.dtype(x.dtype)
+
+
+@pytest.mark.parametrize(
+    "dtype,expected",
+    [
+        ("int64", H.PAX_INT64_T),
+        ("uint64", H.PAX_UINT64_T),
+        ("float64", H.PAX_FLOAT64),
+        ("complex64", H.PAX_COMPLEX64),
+        ("complex128", H.PAX_COMPLEX128),
+    ],
+)
+def test_from_array_canonical_64bit(reg, dtype, expected):
+    # 64-bit dtypes via numpy (jax x64 is disabled by default)
+    x = np.zeros((2,), dtype=dtype)
+    h = reg.from_array(x)
+    assert h == expected
+    assert reg.to_numpy_dtype(h) == np.dtype(x.dtype)
+
+
+def test_derived_contiguous(reg):
+    h = reg.type_contiguous(7, H.PAX_FLOAT32)
+    assert H.is_user_handle(h)
+    assert H.handle_kind(h) == H.HandleKind.DATATYPE
+    assert reg.type_size(h) == 28
+    h2 = reg.type_vector(3, 2, 4, H.PAX_INT16_T)
+    assert reg.type_size(h2) == 12
+    reg.type_free(h)
+    with pytest.raises(PaxError):
+        reg.descriptor(h)
+
+
+def test_bad_handle_raises_named_error(reg):
+    with pytest.raises(PaxError) as e:
+        reg.descriptor(12345)
+    assert "invalid-handle" in str(e.value)
+
+
+def test_predefined_count_under_huffman_budget():
+    """'less than 100 values are used' of the datatype half-space (§5.4)."""
+    assert N_PREDEFINED < 100
+
+
+@given(st.integers(min_value=1, max_value=64))
+@settings(max_examples=50)
+def test_contiguous_size_scales(count):
+    reg = DatatypeRegistry()
+    h = reg.type_contiguous(count, H.PAX_FLOAT64)
+    assert reg.type_size(h) == 8 * count
+
+
+# ---------------------------------------------------------------------------
+# Status (§5.2)
+# ---------------------------------------------------------------------------
+def test_status_is_32_bytes():
+    assert STATUS_BYTES == 32
+    assert Status().nbytes == 32
+
+
+def test_status_fields_and_reserved():
+    s = Status()
+    s.SOURCE, s.TAG, s.ERROR = 3, 7, 0
+    assert (s.SOURCE, s.TAG, s.ERROR) == (3, 7, 0)
+    for i in range(5):
+        s.set_reserved(i, 100 + i)
+    assert [s.get_reserved(i) for i in range(5)] == [100, 101, 102, 103, 104]
+    with pytest.raises(IndexError):
+        s.set_reserved(5, 0)  # only 5 reserved words
+
+
+def test_status_array_layout():
+    """Arrays of statuses are contiguous 32-byte records (§5.2 alignment)."""
+    arr = status_array(10)
+    assert arr.nbytes == 320
+    v = status_view(arr, 3)
+    v.SOURCE = 42
+    assert arr[3, 0] == 42  # view aliases the backing store
+
+
+def test_status_two_spare_fields_beyond_existing():
+    """§5.2: 'at least two extra fields more than current implementations'.
+    ompix (OMPI-convention) uses cancelled + ucount -> 2 hidden words; the
+    standard status has 5 reserved -> >= 2 more."""
+    from repro.core.status import N_RESERVED
+
+    assert N_RESERVED - 2 >= 2

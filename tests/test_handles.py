@@ -1,0 +1,248 @@
+"""Handle-code tests: bit-for-bit fidelity to the paper's Appendix A, plus
+hypothesis property tests on the code's invariants."""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import handles as H
+from repro.core import constants as K
+
+
+# ---------------------------------------------------------------------------
+# Appendix A spot values (exact)
+# ---------------------------------------------------------------------------
+APPENDIX_A1 = {
+    "PAX_OP_NULL": 0b0000100000,
+    "PAX_SUM": 0b0000100001,
+    "PAX_MIN": 0b0000100010,
+    "PAX_MAX": 0b0000100011,
+    "PAX_PROD": 0b0000100100,
+    "PAX_BAND": 0b0000101000,
+    "PAX_BOR": 0b0000101001,
+    "PAX_BXOR": 0b0000101010,
+    "PAX_LAND": 0b0000110000,
+    "PAX_LOR": 0b0000110001,
+    "PAX_LXOR": 0b0000110010,
+    "PAX_MINLOC": 0b0000111000,
+    "PAX_MAXLOC": 0b0000111001,
+    "PAX_REPLACE": 0b0000111100,
+    "PAX_NO_OP": 0b0000111101,
+}
+APPENDIX_A2 = {
+    "PAX_COMM_NULL": 0b0100000000,
+    "PAX_COMM_WORLD": 0b0100000001,
+    "PAX_COMM_SELF": 0b0100000010,
+    "PAX_GROUP_NULL": 0b0100000100,
+    "PAX_GROUP_EMPTY": 0b0100000101,
+    "PAX_WIN_NULL": 0b0100001000,
+    "PAX_FILE_NULL": 0b0100001100,
+    "PAX_SESSION_NULL": 0b0100010000,
+    "PAX_MESSAGE_NULL": 0b0100010100,
+    "PAX_MESSAGE_NO_PROC": 0b0100010101,
+    "PAX_ERRHANDLER_NULL": 0b0100011000,
+    "PAX_ERRORS_ARE_FATAL": 0b0100011001,
+    "PAX_ERRORS_RETURN": 0b0100011010,
+    "PAX_ERRORS_ABORT": 0b0100011011,
+    "PAX_REQUEST_NULL": 0b0100100000,
+}
+APPENDIX_A3 = {
+    "PAX_DATATYPE_NULL": 0b1000000000,
+    "PAX_AINT": 0b1000000001,
+    "PAX_COUNT": 0b1000000010,
+    "PAX_OFFSET": 0b1000000011,
+    "PAX_PACKED": 0b1000000111,
+    "PAX_SHORT": 0b1000001000,
+    "PAX_INT": 0b1000001001,
+    "PAX_LONG": 0b1000001010,
+    "PAX_LONG_LONG": 0b1000001011,
+    "PAX_UNSIGNED_SHORT": 0b1000001100,
+    "PAX_UNSIGNED_INT": 0b1000001101,
+    "PAX_UNSIGNED_LONG": 0b1000001110,
+    "PAX_UNSIGNED_LONG_LONG": 0b1000001111,
+    "PAX_FLOAT": 0b1000010000,
+    "PAX_INT8_T": 0b1001000000,
+    "PAX_UINT8_T": 0b1001000001,
+    "PAX_CHAR": 0b1001000011,
+    "PAX_SIGNED_CHAR": 0b1001000100,
+    "PAX_UNSIGNED_CHAR": 0b1001000101,
+    "PAX_BYTE": 0b1001000111,
+    "PAX_INT16_T": 0b1001001000,
+    "PAX_UINT16_T": 0b1001001001,
+    "PAX_FLOAT16": 0b1001001010,
+    "PAX_INT32_T": 0b1001010000,
+    "PAX_UINT32_T": 0b1001010001,
+    "PAX_FLOAT32": 0b1001010010,
+    "PAX_INT64_T": 0b1001011000,
+    "PAX_UINT64_T": 0b1001011001,
+    "PAX_FLOAT64": 0b1001011010,
+    "PAX_COMPLEX64": 0b1001011011,
+}
+
+
+@pytest.mark.parametrize("table", [APPENDIX_A1, APPENDIX_A2, APPENDIX_A3])
+def test_appendix_values_exact(table):
+    for name, value in table.items():
+        assert getattr(H, name) == value, name
+
+
+def test_zero_always_invalid():
+    assert H.handle_kind(0) == H.HandleKind.INVALID
+    assert not H.is_predefined(-1)
+    assert H.handle_kind(-5) == H.HandleKind.INVALID
+
+
+def test_null_handles_are_prefix_then_zeros():
+    # each null handle's low bits below its kind-range start are zero
+    for kind, null in H.NULL_HANDLES.items():
+        assert H.is_null(null)
+        assert H.handle_kind(null) == kind
+    # e.g. REQUEST_NULL = 0b0100100000: bits after the kind prefix are zero
+    assert H.PAX_REQUEST_NULL & 0b11111 == 0
+    assert H.PAX_OP_NULL & 0b11111 == 0
+    assert H.PAX_DATATYPE_NULL & 0b11111111 == 0
+
+
+def test_all_predefined_fit_zero_page():
+    for value in H.PREDEFINED_NAMES:
+        assert 0 < value < H.ZERO_PAGE_SIZE
+
+
+def test_predefined_unique():
+    values = list(H.PREDEFINED_NAMES)
+    assert len(values) == len(set(values))
+
+
+def test_kind_classification_bitmask():
+    for name, v in APPENDIX_A1.items():
+        assert H.handle_kind(v) == H.HandleKind.OP, name
+    for v in APPENDIX_A3.values():
+        assert H.handle_kind(v) == H.HandleKind.DATATYPE
+    assert H.handle_kind(H.PAX_COMM_WORLD) == H.HandleKind.COMM
+    assert H.handle_kind(H.PAX_GROUP_EMPTY) == H.HandleKind.GROUP
+    assert H.handle_kind(H.PAX_WIN_NULL) == H.HandleKind.WIN
+    assert H.handle_kind(H.PAX_FILE_NULL) == H.HandleKind.FILE
+    assert H.handle_kind(H.PAX_SESSION_NULL) == H.HandleKind.SESSION
+    assert H.handle_kind(H.PAX_MESSAGE_NO_PROC) == H.HandleKind.MESSAGE
+    assert H.handle_kind(H.PAX_ERRORS_RETURN) == H.HandleKind.ERRHANDLER
+    assert H.handle_kind(H.PAX_REQUEST_NULL) == H.HandleKind.REQUEST
+
+
+def test_op_groups():
+    """Arithmetic/bit/logical/other ops live in their Appendix A.1 ranges."""
+    arith = [H.PAX_SUM, H.PAX_MIN, H.PAX_MAX, H.PAX_PROD]
+    assert all(0b0000100001 <= v <= 0b0000100111 for v in arith)
+    bits = [H.PAX_BAND, H.PAX_BOR, H.PAX_BXOR]
+    assert all(0b0000101000 <= v <= 0b0000101111 for v in bits)
+    logic = [H.PAX_LAND, H.PAX_LOR, H.PAX_LXOR]
+    assert all(0b0000110000 <= v <= 0b0000110111 for v in logic)
+
+
+def test_datatype_size_encoding():
+    """Fixed-size types encode log2(size) in bits 3..5 (paper §5.4/A.3)."""
+    assert H.datatype_encoded_size(H.PAX_BYTE) == 1  # 2^0b000
+    assert H.datatype_encoded_size(H.PAX_INT32_T) == 4  # 2^0b010
+    assert H.datatype_encoded_size(H.PAX_INT64_T) == 8
+    assert H.datatype_encoded_size(H.PAX_FLOAT16) == 2
+    assert H.datatype_encoded_size(H.PAX_BFLOAT16) == 2  # TPU extension slot
+    assert H.datatype_encoded_size(H.PAX_FLOAT8_E4M3) == 1
+    assert H.datatype_encoded_size(H.PAX_COMPLEX128) == 16
+    # variable-size types do NOT encode size
+    assert H.datatype_is_variable_size(H.PAX_INT)
+    with pytest.raises(ValueError):
+        H.datatype_log2_size(H.PAX_INT)
+
+
+def test_describe_names_constants():
+    """'tell the user by name what constant they passed' (§5.4)."""
+    assert H.describe(H.PAX_SUM) == "PAX_SUM"
+    assert H.describe(H.PAX_COMM_WORLD) == "PAX_COMM_WORLD"
+    assert "INVALID" in H.describe(0)
+
+
+def test_room_for_extensions():
+    """The code has free space for new handle types and constants (§5.4)."""
+    used = set(H.PREDEFINED_NAMES)
+    dtype_page = [v for v in range(512, 1024)]
+    free_dtypes = [v for v in dtype_page if v not in used]
+    assert len(free_dtypes) > 400  # "less than 100 values are used"
+    op_range = [v for v in range(32, 64)]
+    assert len([v for v in op_range if v not in used]) >= 10
+
+
+# ---------------------------------------------------------------------------
+# Integer constants (§5.4)
+# ---------------------------------------------------------------------------
+def test_negative_constants_unique():
+    values = list(K.unique_negative_constants().values())
+    assert len(values) == len(set(values))
+    assert all(v < 0 for v in values)
+
+
+def test_xor_constants_powers_of_two():
+    for v in K.xor_constants().values():
+        assert v > 0 and (v & (v - 1)) == 0
+
+
+def test_constants_within_portable_int():
+    for name, v in vars(K).items():
+        if name.startswith("PAX_") and isinstance(v, int):
+            assert abs(v) <= K.PAX_INT_CONSTANT_MAX, name
+
+
+def test_string_length_constants():
+    assert K.PAX_MAX_LIBRARY_VERSION_STRING == 8192
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests
+# ---------------------------------------------------------------------------
+@given(st.integers(min_value=-(2**31), max_value=2**31 - 1))
+@settings(max_examples=300)
+def test_handle_kind_total(h):
+    """Classification is total: never raises, always returns a HandleKind."""
+    kind = H.handle_kind(h)
+    assert isinstance(kind, H.HandleKind)
+
+
+@given(
+    st.sampled_from([k for k in H.HandleKind if k != H.HandleKind.INVALID]),
+    st.integers(min_value=0, max_value=(1 << 24) - 1),
+)
+@settings(max_examples=200)
+def test_user_handle_roundtrip(kind, index):
+    h = H.make_user_handle(kind, index)
+    assert H.is_user_handle(h)
+    assert not H.is_predefined(h)
+    assert H.handle_kind(h) == kind
+    assert H.user_handle_index(h) == index
+    assert h >= H.ZERO_PAGE_SIZE  # never collides with the zero page
+
+
+@given(st.integers(min_value=0, max_value=H.ZERO_PAGE_SIZE - 1))
+@settings(max_examples=300)
+def test_zero_page_classification_consistent(h):
+    """Within the zero page, any value classified as a fixed-size datatype
+    must decode a size; nulls must classify to their kind."""
+    kind = H.handle_kind(h)
+    if kind == H.HandleKind.DATATYPE and H.datatype_is_fixed_size(h):
+        assert H.datatype_encoded_size(h) in (1, 2, 4, 8, 16, 32, 64, 128)
+    if H.is_null(h):
+        assert kind != H.HandleKind.INVALID
+
+
+@given(st.integers(min_value=1, max_value=H.ZERO_PAGE_SIZE - 1))
+@settings(max_examples=300)
+def test_predefined_kinds_match_table(h):
+    """Every named predefined handle classifies to the kind its name says."""
+    name = H.PREDEFINED_NAMES.get(h)
+    if name is None:
+        return
+    kind = H.handle_kind(h)
+    if "COMM" in name:
+        assert kind == H.HandleKind.COMM
+    elif "REQUEST" in name:
+        assert kind == H.HandleKind.REQUEST
+    elif "DATATYPE" in name or name in (
+        "PAX_AINT", "PAX_COUNT", "PAX_OFFSET", "PAX_PACKED",
+    ):
+        assert kind == H.HandleKind.DATATYPE

@@ -1,0 +1,85 @@
+"""Unit tests for the HLO collective-traffic parser + roofline math."""
+import pytest
+
+from repro.launch.hlo_analysis import (
+    CollectiveStats,
+    Roofline,
+    collective_bytes,
+    shape_bytes,
+)
+
+HLO = """
+HloModule jit_step, num_partitions=256
+
+%region_0.0 (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %add.0 = f32[] add(%a, %b)
+}
+
+ENTRY %main_spmd (p0: bf16[128,256]) -> bf16[128,256] {
+  %p0 = bf16[128,256]{1,0} parameter(0)
+  %ar = bf16[128,256]{1,0} all-reduce(%p0), channel_id=1, to_apply=%region_0.0
+  %ag = bf16[256,256]{1,0} all-gather(%ar), channel_id=2, dimensions={0}
+  %rs = bf16[16,256]{1,0} reduce-scatter(%ag), channel_id=3, to_apply=%region_0.0
+  %cp = bf16[16,256]{1,0} collective-permute(%rs), channel_id=4
+  %a2a = bf16[16,256]{1,0} all-to-all(%cp), channel_id=5
+  ROOT %out = bf16[128,256]{1,0} all-gather(%a2a), channel_id=6, dimensions={0}
+}
+"""
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[16,128]") == 16 * 128 * 4
+    assert shape_bytes("bf16[128,256]{1,0}") == 128 * 256 * 2
+    assert shape_bytes("(f32[2], bf16[4,4])") == 8 + 32
+    assert shape_bytes("pred[8]") == 8
+    assert shape_bytes("token[]") == 0
+
+
+def test_collective_bytes_parses_all_ops():
+    stats = collective_bytes(HLO)
+    assert set(stats.count_by_op) == {
+        "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+        "collective-permute",
+    }
+    assert stats.count_by_op["all-gather"] == 2
+    # all-reduce: max(in, out) = 128*256*2
+    assert stats.bytes_by_op["all-reduce"] == 128 * 256 * 2
+    # all-gather #1: out 256x256 > in 128x256 -> counts the gathered side
+    # all-gather #2: out 128x256 > in 16x256
+    assert stats.bytes_by_op["all-gather"] == (256 * 256 + 128 * 256) * 2
+    # reduce-scatter: input (256x256) is the unsharded side
+    assert stats.bytes_by_op["reduce-scatter"] == 256 * 256 * 2
+    assert stats.total_count == 6
+
+
+def test_async_start_not_double_counted():
+    hlo = """
+ENTRY %m (p0: f32[64]) -> f32[64] {
+  %p0 = f32[64]{0} parameter(0)
+  %s = f32[64]{0} all-reduce-start(%p0), channel_id=1
+  ROOT %d = f32[64]{0} all-reduce-done(%s)
+}
+"""
+    stats = collective_bytes(hlo)
+    assert stats.count_by_op == {"all-reduce": 1}
+    assert stats.bytes_by_op["all-reduce"] == 64 * 4
+
+
+def test_roofline_terms_and_bottleneck():
+    r = Roofline(
+        flops_per_device=197e12 * 0.010,          # 10 ms compute
+        hbm_bytes_per_device=819e9 * 0.020,       # 20 ms memory
+        collective_bytes_per_device=200e9 * 0.005,  # 5 ms collective
+        chips=256,
+        model_flops_global=197e12 * 0.010 * 256 * 0.5,
+    )
+    assert r.compute_s == pytest.approx(0.010)
+    assert r.memory_s == pytest.approx(0.020)
+    assert r.collective_s == pytest.approx(0.005)
+    assert r.bottleneck == "memory"
+    assert r.step_time_s == pytest.approx(0.020)
+    assert r.useful_flops_fraction == pytest.approx(0.5)
+    # MFU bound: useful flops / (chips*peak*steptime) = .5*10ms/20ms = 0.25
+    assert r.mfu_bound == pytest.approx(0.25)

@@ -1,0 +1,122 @@
+"""Per-architecture smoke tests: a REDUCED config of the same family runs
+one forward + one train-grad step on CPU; output shapes asserted, no NaNs.
+
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct, no
+allocation) — see launch/dryrun.py.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as cfgs
+from repro.models import build_model, make_batch
+from repro.models.model import analytic_param_count
+
+B, S = 2, 32
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def _count_params(params):
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+
+
+@pytest.mark.parametrize("arch", cfgs.ARCH_NAMES)
+def test_smoke_forward_and_grad(arch, key):
+    cfg = cfgs.smoke_config(arch)
+    api = build_model(cfg)
+    params = api.init(key)
+    batch = make_batch(key, cfg, B, S)
+
+    logits, aux = jax.jit(api.forward)(params, batch)
+    assert logits.shape == (B, S, cfg.vocab_size), arch
+    assert not bool(jnp.isnan(logits).any()), f"{arch}: NaN logits"
+
+    loss, grads = jax.jit(jax.value_and_grad(api.loss_fn))(params, batch)
+    assert np.isfinite(float(loss)), arch
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0, f"{arch}: bad grads"
+
+
+@pytest.mark.parametrize("arch", cfgs.ARCH_NAMES)
+def test_param_specs_match_structure(arch, key):
+    """Every param leaf must have a matching PartitionSpec leaf."""
+    cfg = cfgs.smoke_config(arch)
+    api = build_model(cfg)
+    params = jax.eval_shape(api.init, key)
+    specs = api.param_specs()
+    pleaves, ptree = jax.tree.flatten(params)
+    sleaves, stree = jax.tree.flatten(
+        specs, is_leaf=lambda v: isinstance(v, jax.sharding.PartitionSpec))
+    assert ptree == stree, f"{arch}: param/spec structure mismatch"
+    for pl, sl in zip(pleaves, sleaves):
+        assert isinstance(sl, jax.sharding.PartitionSpec)
+        assert len(sl) <= len(pl.shape), f"{arch}: spec rank exceeds param rank {sl} {pl.shape}"
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "rwkv6-7b", "zamba2-2.7b",
+                                  "whisper-tiny", "phi-3-vision-4.2b", "qwen2-moe-a2.7b"])
+def test_decode_matches_forward(arch, key):
+    """Cached single-token decode must agree with the full forward pass."""
+    cfg = cfgs.smoke_config(arch)
+    api = build_model(cfg)
+    params = api.init(key)
+    batch = make_batch(key, cfg, B, 8)
+    tokens = batch["tokens"]
+
+    if arch == "whisper-tiny":
+        from repro.models import encdec
+
+        cache = encdec.init_cache(params, batch["frames"], cfg, B, 16)
+        logits_full, _ = api.forward(params, batch)
+        # feed tokens one by one
+        for t in range(tokens.shape[1]):
+            step_logits, cache = api.decode_step(
+                params, tokens[:, t:t + 1], cache, jnp.int32(t))
+        np.testing.assert_allclose(
+            np.asarray(step_logits, np.float32),
+            np.asarray(logits_full[:, -1], np.float32), rtol=2e-2, atol=2e-2)
+        return
+
+    if arch == "phi-3-vision-4.2b":
+        from repro.models import vlm
+
+        logits_full, _ = api.forward(params, batch)
+        _, cache, idx = vlm.prefill_multimodal(
+            params, tokens[:, :-1], batch["patches"], cfg, max_seq=32)
+        step_logits, _ = api.decode_step(params, tokens[:, -1:], cache, idx)
+        np.testing.assert_allclose(
+            np.asarray(step_logits, np.float32),
+            np.asarray(logits_full[:, -1], np.float32), rtol=2e-2, atol=2e-2)
+        return
+
+    logits_full, _ = api.forward(params, batch)
+    state = api.decode_init(B, 16)
+    for t in range(tokens.shape[1]):
+        step_logits, state = api.decode_step(
+            params, tokens[:, t:t + 1], state, jnp.int32(t))
+    # MoE: tiny cache-vs-full numeric differences sit next to discrete router
+    # boundaries, so the tolerance is looser there
+    tol = 0.1 if cfg.moe is not None else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(step_logits, np.float32),
+        np.asarray(logits_full[:, -1], np.float32), rtol=tol, atol=tol)
+
+
+def test_analytic_counts_close_to_actual(key):
+    """Analytic N (used for roofline MODEL_FLOPS) tracks actual param counts
+    on the reduced configs within 25%."""
+    for arch in cfgs.ARCH_NAMES:
+        cfg = cfgs.smoke_config(arch)
+        api = build_model(cfg)
+        params = jax.eval_shape(api.init, key)
+        actual = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+        analytic = analytic_param_count(cfg)
+        assert abs(analytic - actual) / actual < 0.25, (
+            f"{arch}: analytic {analytic} vs actual {actual}")

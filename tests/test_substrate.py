@@ -1,0 +1,214 @@
+"""Substrate tests: data pipeline, optimizer, checkpointing, fault
+tolerance (simulated failures), serving engine, end-to-end mini-training."""
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as cfgs
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.data.pipeline import DataPipeline, SyntheticSource, pack_documents
+from repro.models import build_model, make_batch
+from repro.optim.adamw import AdamWConfig, warmup_cosine
+from repro.runtime.dist import make_dist
+from repro.runtime.fault import StepWatchdog, run_supervised
+from repro.serve.engine import ServeEngine
+from repro.train import train_loop
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+def test_pipeline_shapes_and_targets():
+    src = SyntheticSource(vocab_size=100, seed=1)
+    pipe = DataPipeline(src, global_batch=4, seq_len=32)
+    b = next(pipe)
+    assert b["tokens"].shape == (4, 32)
+    assert b["targets"].shape == (4, 32)
+    # next-token alignment where not padded
+    live = b["targets"] != -1
+    assert live.any()
+    pipe.close()
+
+
+def test_pipeline_host_sharding_disjoint_and_deterministic():
+    src = lambda: SyntheticSource(vocab_size=1000, seed=7)
+    a0 = next(DataPipeline(src(), global_batch=8, seq_len=16, host_id=0, num_hosts=2))
+    a1 = next(DataPipeline(src(), global_batch=8, seq_len=16, host_id=1, num_hosts=2))
+    b0 = next(DataPipeline(src(), global_batch=8, seq_len=16, host_id=0, num_hosts=2))
+    assert a0["tokens"].shape == (4, 16)  # local shard
+    np.testing.assert_array_equal(a0["tokens"], b0["tokens"])  # deterministic
+    assert not np.array_equal(a0["tokens"], a1["tokens"])      # disjoint streams
+
+
+def test_packing_no_token_loss():
+    docs = [np.arange(1, 50, dtype=np.int32), np.arange(100, 140, dtype=np.int32)]
+    out = list(pack_documents(iter(docs), batch=1, seq_len=16))
+    toks = np.concatenate([b["tokens"].ravel() for b in out])
+    assert (toks[:16] == np.arange(1, 17)).all()
+
+
+# ---------------------------------------------------------------------------
+# optimizer / schedule
+# ---------------------------------------------------------------------------
+def test_warmup_cosine_shape():
+    s = warmup_cosine(jnp.arange(0, 100), warmup=10, total=100)
+    assert float(s[0]) == 0.0
+    assert float(s[10]) == pytest.approx(1.0, abs=1e-3)
+    assert float(s[99]) < 0.2
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    ckpt = Checkpointer(tmp_path, keep=2)
+    state = {"w": jnp.arange(6.0).reshape(2, 3), "n": jnp.int32(7)}
+    for step in (1, 2, 3):
+        ckpt.save(step, jax.tree.map(lambda x: x * step, state))
+    assert ckpt.latest_step() == 3
+    restored, step = ckpt.restore(state)
+    assert step == 3
+    np.testing.assert_allclose(restored["w"], np.arange(6.0).reshape(2, 3) * 3)
+    # retention
+    assert len(list(tmp_path.glob("step_*"))) == 2
+
+
+def test_checkpoint_async_and_atomicity(tmp_path):
+    ckpt = Checkpointer(tmp_path)
+    state = {"w": jnp.ones((128, 128))}
+    ckpt.save_async(5, state)
+    ckpt.wait()
+    assert ckpt.latest_step() == 5
+    assert not list(tmp_path.glob(".tmp_*"))  # no torn temp dirs
+
+
+def test_checkpoint_elastic_reshard(tmp_path, mesh1):
+    """Restore with explicit mesh+specs (the elastic path)."""
+    from jax.sharding import PartitionSpec as P
+
+    ckpt = Checkpointer(tmp_path)
+    state = {"w": jnp.arange(16.0).reshape(4, 4)}
+    ckpt.save(1, state)
+    restored, _ = ckpt.restore(state, mesh=mesh1, specs={"w": P("data", None)})
+    np.testing.assert_allclose(np.asarray(restored["w"]), np.asarray(state["w"]))
+    assert restored["w"].sharding.spec == P("data", None)
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+def test_supervised_restart_recovers(tmp_path):
+    """Inject failures at steps 7 and 12; training must complete all 20
+    steps with consistent final state."""
+    ckpt = Checkpointer(tmp_path, keep=3)
+    failures = {7, 12}
+    seen = []
+
+    def step_fn(state, batch):
+        step = int(state["step"])
+        if step in failures and batch["attempt"][step] == 0:
+            batch["attempt"][step] += 1
+            raise RuntimeError(f"injected failure at {step}")
+        seen.append(step)
+        return {"step": state["step"] + 1, "acc": state["acc"] + batch["x"]}, None
+
+    attempts = {s: 0 for s in failures}
+    get_batch = lambda i: {"x": float(i), "attempt": attempts}
+    init = {"step": jnp.int32(0), "acc": jnp.float32(0.0)}
+    report = run_supervised(step_fn, init, get_batch, checkpointer=ckpt,
+                            total_steps=20, checkpoint_every=5, max_restarts=5)
+    assert report.steps_completed == 20
+    assert report.restarts == 2
+    assert int(report.final_state["step"]) == 20
+    # acc == sum over steps 0..19 exactly once (replays roll back to ckpt,
+    # so the acc computed from checkpointed state stays consistent)
+    assert float(report.final_state["acc"]) == sum(range(20))
+
+
+def test_supervisor_gives_up(tmp_path):
+    ckpt = Checkpointer(tmp_path)
+
+    def bad_step(state, batch):
+        raise RuntimeError("always fails")
+
+    with pytest.raises(RuntimeError):
+        run_supervised(bad_step, {"step": jnp.int32(0)}, lambda i: {},
+                       checkpointer=ckpt, total_steps=3, max_restarts=2)
+
+
+def test_watchdog_flags_stragglers():
+    wd = StepWatchdog(window=16, straggler_factor=2.0)
+    for i in range(10):
+        wd.observe(i, 0.1)
+    assert wd.observe(10, 0.5)
+    assert not wd.observe(11, 0.11)
+    assert wd.stragglers and wd.stragglers[0][0] == 10
+
+
+# ---------------------------------------------------------------------------
+# training end-to-end (tiny) + serving
+# ---------------------------------------------------------------------------
+def test_train_step_abi_runs_and_descends(mesh1):
+    cfg = cfgs.smoke_config("qwen2-0.5b")
+    api = build_model(cfg)
+    dist = make_dist(mesh1, impl="paxi")
+    key = jax.random.PRNGKey(0)
+    state = train_loop.init_state(api, key)
+    step = train_loop.make_train_step(api, dist, AdamWConfig(lr=5e-3))
+    jstep = jax.jit(step)
+    batch = make_batch(key, cfg, 4, 32)
+    losses = []
+    for _ in range(5):
+        state, metrics = jstep(state, batch)
+        losses.append(float(metrics.loss))
+    assert losses[-1] < losses[0], losses  # same batch -> must descend
+    assert int(state.step) == 5
+
+
+def test_train_modes_agree(mesh1):
+    """abi-mode and gspmd-mode steps produce the same loss trajectory on a
+    1-device mesh (where grad sync is identity)."""
+    import dataclasses as dc
+
+    key = jax.random.PRNGKey(1)
+    losses = {}
+    for mode in ("abi", "gspmd"):
+        cfg = cfgs.smoke_config("chatglm3-6b")
+        cfg = dc.replace(cfg, parallelism=dc.replace(cfg.parallelism, grad_sync=mode))
+        api = build_model(cfg)
+        dist = make_dist(mesh1, impl="paxi")
+        state = train_loop.init_state(api, key)
+        step = jax.jit(train_loop.make_train_step(api, dist, AdamWConfig()))
+        batch = make_batch(key, cfg, 2, 16)
+        ls = []
+        for _ in range(3):
+            state, m = step(state, batch)
+            ls.append(float(m.loss))
+        losses[mode] = ls
+    np.testing.assert_allclose(losses["abi"], losses["gspmd"], rtol=1e-4)
+
+
+def test_serve_engine_greedy_deterministic(mesh1):
+    cfg = cfgs.smoke_config("qwen2-0.5b")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(api, params, max_batch=2, max_seq=64)
+    prompt = np.arange(1, 9, dtype=np.int32)
+    out1 = eng.generate(prompt, max_new_tokens=8)
+    out2 = eng.generate(prompt, max_new_tokens=8)
+    assert out1.shape == (8,)
+    np.testing.assert_array_equal(out1, out2)  # greedy == deterministic
+    assert (out1 >= 0).all() and (out1 < cfg.vocab_size).all()
+
+
+def test_serve_engine_rwkv_state_path(mesh1):
+    cfg = cfgs.smoke_config("rwkv6-7b")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(api, params, max_seq=64)
+    out = eng.generate(np.arange(1, 6, dtype=np.int32), max_new_tokens=4)
+    assert out.shape == (4,)
