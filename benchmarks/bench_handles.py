@@ -11,6 +11,7 @@ import time
 import jax
 
 import repro.core as C
+from repro.core.compat import make_mesh
 from repro.core import handles as H
 
 N = 200_000
@@ -32,8 +33,7 @@ def run() -> list[tuple[str, float, str]]:
     rows.append(("handle_user_roundtrip", _ns(H.user_handle_index, users) / 1000.0,
                  "ns user-handle index extract"))
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     muk = C.pax_init(mesh, impl="ompix").backend
     ops = ([C.PAX_SUM, C.PAX_MIN, C.PAX_MAX, C.PAX_PROD] * (N // 4))[:N]
     rows.append(("muk_convert_predefined_op", _ns(muk._convert_op, ops) / 1000.0,

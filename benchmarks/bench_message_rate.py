@@ -22,14 +22,14 @@ import jax
 import jax.numpy as jnp
 
 import repro.core as C
+from repro.core.compat import make_mesh
 
 N_CALLS = 200
 N_REPS = 5
 
 
 def _mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def _rate(make_chain) -> float:

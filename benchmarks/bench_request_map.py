@@ -12,11 +12,11 @@ import jax
 import jax.numpy as jnp
 
 import repro.core as C
+from repro.core.compat import make_mesh
 
 
 def _mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def run() -> list[tuple[str, float, str]]:

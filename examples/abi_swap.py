@@ -15,13 +15,13 @@ import numpy as np
 
 import repro.configs as cfgs
 import repro.core as C
+from repro.core.compat import make_mesh
 from repro.models import build_model, make_batch
 from repro.optim.adamw import AdamWConfig
 from repro.runtime.dist import make_dist
 from repro.train import train_loop
 
-mesh = jax.make_mesh((1, 1), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((1, 1), ("data", "model"))
 cfg = cfgs.smoke_config("chatglm3-6b")
 api = build_model(cfg)
 key = jax.random.PRNGKey(0)

@@ -14,9 +14,9 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 import repro.core as C
+from repro.core.compat import make_mesh
 
-mesh = jax.make_mesh((1, 1), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((1, 1), ("data", "model"))
 
 # --- 1. init with tools stacked (works identically for any impl) -----------
 counter = C.ByteCounter()

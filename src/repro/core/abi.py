@@ -1,11 +1,30 @@
 """The PAX ABI surface — what applications and the framework link against.
 
 The design mirrors the paper's runtime structure (§6.2): at ``pax_init`` the
-context resolves a backend (the ``dlopen``/``dlsym`` analogue lives in
-``registry.py``), stacks the interposition tools (PMPI/QMPI, §4.8) around
-the backend's entry points, and exposes the standard functions.  User code
-holds only ABI handles; swapping the backend never requires re-tracing user
-code (the "recompile-free" property).
+context resolves a backend (the ``dlopen`` analogue lives in
+``registry.py``), **negotiates the standard function table against it**
+(the ``dlsym`` analogue: every entry point of
+:data:`repro.core.abi_spec.ABI_TABLE` is resolved once, and a backend
+missing an entry raises ``PAX_ERR_UNSUPPORTED_OPERATION`` at init — never
+mid-step), stacks the interposition tools (PMPI/QMPI, §4.8) around the
+resolved entries, and exposes the standard functions.
+
+**Every per-entry-point method here is generated from the declarative
+spec**, not hand-written: the blocking methods, their ``i*`` nonblocking
+twins, the handle checks (from each argument's declared domain), and the
+byte-accounting info handed to tools.  Two dispatch paths are compiled per
+entry:
+
+* a **zero-tool fast path** — handle checks + one dict lookup + the direct
+  backend call, no interposition loop and no payload-size computation
+  (``grad_sync`` drives this every training step);
+* the tool path — the PMPI chain (``before`` outer→inner, ``after``
+  inner→outer) with payload bytes computed per the entry's accounting rule.
+
+To add an ABI entry point: add one row to ``abi_spec.ABI_TABLE`` and
+implement the method on the backends that support it.  The ABI methods,
+``i*`` variants, capability negotiation, and Mukautuva translation wrappers
+are all derived.
 
 Nonblocking operations return :class:`Request` handles.  The value is
 produced eagerly in dataflow terms (XLA schedules collectives
@@ -24,11 +43,18 @@ from typing import Any, Callable, Optional, Sequence
 import jax
 import numpy as np
 
+from . import abi_spec
+from . import compat
 from . import handles as H
 from .communicator import CommTable
 from .constants import PAX_ANY_SOURCE, PAX_ANY_TAG
 from .datatypes import DatatypeRegistry
-from .errors import PAX_ERR_REQUEST, PAX_SUCCESS, PaxError
+from .errors import (
+    PAX_ERR_REQUEST,
+    PAX_ERR_UNSUPPORTED_OPERATION,
+    PAX_SUCCESS,
+    PaxError,
+)
 from .ops import OpRegistry
 from .status import Status
 
@@ -62,6 +88,20 @@ class PaxABI:
         self.comms: CommTable = getattr(backend, "comms", None) or CommTable(self.mesh)
         self.ops: OpRegistry = getattr(backend, "ops", None) or OpRegistry()
         self.datatypes: DatatypeRegistry = getattr(backend, "datatypes", None) or DatatypeRegistry()
+        # dlsym-style negotiation: resolve every function-table entry now.
+        self._table: dict[str, Callable] = {}
+        missing = []
+        for entry in abi_spec.ABI_TABLE:
+            if backend.supports(entry):
+                self._table[entry.name] = getattr(backend, entry.backend_method)
+            else:
+                missing.append(entry.name)
+        if missing:
+            raise PaxError(
+                PAX_ERR_UNSUPPORTED_OPERATION,
+                f"backend {backend.name!r} is missing function-table entry "
+                f"point(s) {missing} (init-time negotiation, paper §6.2)",
+            )
         self.tools = list(tools)
         for t in self.tools:
             t.attach(self)
@@ -70,9 +110,10 @@ class PaxABI:
         self.finalized = False
 
     # ------------------------------------------------------------------
-    # function-table dispatch with tool interposition (PMPI chain)
+    # tool-path dispatch (PMPI chain); the zero-tool fast path is inlined
+    # into each generated method and never reaches this.
     # ------------------------------------------------------------------
-    def _dispatch(self, fname: str, impl: Callable, *args, **info):
+    def _dispatch_tools(self, fname: str, impl: Callable, args: tuple, info: dict):
         for t in self.tools:
             t.before(fname, args, info)
         result = impl(*args)
@@ -86,13 +127,7 @@ class PaxABI:
             raise PaxError(PAX_ERR_REQUEST, f"{len(self._requests)} outstanding requests")
         self.finalized = True
 
-    # -- identity ----------------------------------------------------------
-    def comm_size(self, comm: int) -> int:
-        return self._dispatch("comm_size", self.backend.size, comm)
-
-    def comm_rank(self, comm: int):
-        return self._dispatch("comm_rank", self.backend.rank, comm)
-
+    # -- identity / registration (not per-collective dispatch) -------------
     def comm_from_axes(self, axes: Sequence[str], name: str = "") -> int:
         h = self.comms.comm_from_axes(axes, name)
         if self.backend.convention == "foreign":
@@ -107,10 +142,6 @@ class PaxABI:
         self.comms.comm_free(comm)
 
     # -- datatypes ----------------------------------------------------------
-    def type_size(self, datatype: int) -> int:
-        H.check_handle(datatype, H.HandleKind.DATATYPE)
-        return self._dispatch("type_size", self.backend.type_size, datatype)
-
     def type_contiguous(self, count: int, base: int) -> int:
         h = self.datatypes.type_contiguous(count, base)
         if self.backend.convention == "foreign":
@@ -130,108 +161,13 @@ class PaxABI:
     def op_free(self, op: int) -> None:
         self.ops.op_free(op)
 
-    # -- blocking collectives ------------------------------------------------
-    def allreduce(self, x, op: int, comm: int, datatype: Optional[int] = None):
-        H.check_handle(op, H.HandleKind.OP)
-        H.check_handle(comm, H.HandleKind.COMM)
-        return self._dispatch(
-            "allreduce", self.backend.allreduce, x, op, comm,
-            bytes=_nbytes(x, self, datatype), comm_handle=comm,
-        )
-
-    def reduce(self, x, op: int, root: int, comm: int):
-        H.check_handle(op, H.HandleKind.OP)
-        return self._dispatch(
-            "reduce", self.backend.reduce, x, op, root, comm, bytes=_nbytes(x, self)
-        )
-
-    def bcast(self, x, root: int, comm: int):
-        return self._dispatch(
-            "bcast", self.backend.bcast, x, root, comm, bytes=_nbytes(x, self)
-        )
-
-    def reduce_scatter(self, x, op: int, comm: int, axis: int = 0):
-        H.check_handle(op, H.HandleKind.OP)
-        return self._dispatch(
-            "reduce_scatter", self.backend.reduce_scatter, x, op, comm, axis,
-            bytes=_nbytes(x, self),
-        )
-
-    def allgather(self, x, comm: int, axis: int = 0):
-        return self._dispatch(
-            "allgather", self.backend.allgather, x, comm, axis, bytes=_nbytes(x, self)
-        )
-
-    def alltoall(self, x, comm: int, split_axis: int = 0, concat_axis: int = 0):
-        return self._dispatch(
-            "alltoall", self.backend.alltoall, x, comm, split_axis, concat_axis,
-            bytes=_nbytes(x, self),
-        )
-
-    def alltoallw(self, blocks, sendtypes: Sequence[int], recvtypes: Sequence[int], comm: int):
-        for t in list(sendtypes) + list(recvtypes):
-            H.check_handle(t, H.HandleKind.DATATYPE)
-        return self._dispatch(
-            "alltoallw", self.backend.alltoallw, blocks, tuple(sendtypes),
-            tuple(recvtypes), comm, bytes=_nbytes(blocks, self),
-        )
-
-    def sendrecv(self, x, perm: Sequence[tuple[int, int]], comm: int,
-                 status: Optional[Status] = None):
-        y = self._dispatch(
-            "sendrecv", self.backend.sendrecv, x, tuple(perm), comm,
-            bytes=_nbytes(x, self),
-        )
-        if status is not None:
-            status.SOURCE = PAX_ANY_SOURCE
-            status.TAG = PAX_ANY_TAG
-            status.ERROR = PAX_SUCCESS
-        return y
-
-    def barrier(self, comm: int):
-        return self._dispatch("barrier", self.backend.barrier, comm)
-
-    def scatter(self, x, root: int, comm: int, axis: int = 0):
-        return self._dispatch(
-            "scatter", self.backend.scatter, x, root, comm, axis, bytes=_nbytes(x, self)
-        )
-
-    def gather(self, x, root: int, comm: int, axis: int = 0):
-        return self._dispatch(
-            "gather", self.backend.gather, x, root, comm, axis, bytes=_nbytes(x, self)
-        )
-
-    # -- nonblocking --------------------------------------------------------
+    # -- nonblocking request plumbing ---------------------------------------
     def _new_request(self, value, kind: str, temp_state=None, on_complete=None) -> Request:
         handle = H.make_user_handle(H.HandleKind.REQUEST, self._next_request)
         self._next_request += 1
         req = Request(handle, value, kind, False, temp_state, on_complete)
         self._requests[handle] = req
         return req
-
-    def iallreduce(self, x, op: int, comm: int) -> Request:
-        return self._new_request(self.allreduce(x, op, comm), "iallreduce")
-
-    def iallgather(self, x, comm: int, axis: int = 0) -> Request:
-        return self._new_request(self.allgather(x, comm, axis), "iallgather")
-
-    def ireduce_scatter(self, x, op: int, comm: int, axis: int = 0) -> Request:
-        return self._new_request(self.reduce_scatter(x, op, comm, axis), "ireduce_scatter")
-
-    def ialltoall(self, x, comm: int, split_axis: int = 0, concat_axis: int = 0) -> Request:
-        return self._new_request(self.alltoall(x, comm, split_axis, concat_axis), "ialltoall")
-
-    def ialltoallw(self, blocks, sendtypes, recvtypes, comm: int) -> Request:
-        value = self.alltoallw(blocks, sendtypes, recvtypes, comm)
-        # the converted handle vectors must stay alive until completion (§6.2)
-        temp = getattr(self.backend, "last_alltoallw_temps", None)
-        return self._new_request(value, "ialltoallw", temp_state=temp)
-
-    def isendrecv(self, x, perm, comm: int) -> Request:
-        return self._new_request(self.sendrecv(x, perm, comm), "isendrecv")
-
-    def ibarrier(self, comm: int) -> Request:
-        return self._new_request(self.barrier(comm), "ibarrier")
 
     # -- completion -----------------------------------------------------------
     def wait(self, request: Request, status: Optional[Status] = None):
@@ -284,11 +220,9 @@ class PaxABI:
         """
         if self.mesh is None:
             raise PaxError(PAX_ERR_REQUEST, "no mesh bound")
-        kwargs = {"check_vma": check_vma}
-        if axis_names is not None:
-            kwargs["axis_names"] = set(axis_names)
-        return jax.shard_map(
-            fn, mesh=self.mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
+        return compat.shard_map(
+            fn, mesh=self.mesh, in_specs=in_specs, out_specs=out_specs,
+            axis_names=axis_names, check_vma=check_vma,
         )
 
 
@@ -302,3 +236,95 @@ def _nbytes(x, abi: PaxABI, datatype: Optional[int] = None) -> int:
             else:
                 total += leaf.size * np.dtype(leaf.dtype).itemsize
     return int(total)
+
+
+# ---------------------------------------------------------------------------
+# Method generation from the declarative function table.
+#
+# For each spec entry we compile (via exec, namedtuple-style) a blocking
+# method with the entry's exact signature, and — when the entry declares a
+# nonblocking variant — its ``i*`` twin.  The blocking method contains the
+# precompiled zero-tool fast path.
+# ---------------------------------------------------------------------------
+_GEN_ENV = {
+    "_nbytes": _nbytes,
+    "PAX_ANY_SOURCE": PAX_ANY_SOURCE,
+    "PAX_ANY_TAG": PAX_ANY_TAG,
+    "PAX_SUCCESS": PAX_SUCCESS,
+    "_check": H.check_handle,
+}
+_GEN_ENV.update({f"_HK_{k.name}": k for k in H.HandleKind})
+
+
+def _blocking_src(entry: abi_spec.AbiEntry) -> str:
+    params = abi_spec.signature_src(entry, extra_kwargs=True)
+    call_args = abi_spec.call_args_src(entry)
+    lines = [f"def {entry.name}(self, {params}):"]
+    # handle checks / coercions from the declared argument domains
+    for a in entry.args:
+        if a.kind == abi_spec.DATATYPE_VEC:
+            lines.append(f"    {a.name} = tuple({a.name})")
+            lines.append(f"    for _t in {a.name}:")
+            lines.append(f"        _check(_t, _HK_{a.check_kind.name})")
+        elif a.check_kind is not None:
+            lines.append(f"    _check({a.name}, _HK_{a.check_kind.name})")
+        elif a.kind in (abi_spec.PERM, abi_spec.COUNTS):
+            lines.append(f"    {a.name} = tuple({a.name})")
+    lines.append(f"    _impl = self._table[{entry.name!r}]")
+    lines.append("    if not self.tools:")
+    lines.append(f"        _res = _impl({call_args})")
+    lines.append("    else:")
+    if entry.bytes_arg:
+        dt = ", datatype" if entry.dtype_size_kwarg else ""
+        bytes_expr = f"_nbytes({entry.bytes_arg}, self{dt})"
+        comm_arg = next(a.name for a in entry.args if a.kind == abi_spec.COMM)
+        lines.append(
+            f"        _info = {{'bytes': {bytes_expr}, 'comm_handle': {comm_arg}}}"
+        )
+    else:
+        lines.append("        _info = {}")
+    lines.append(
+        f"        _res = self._dispatch_tools({entry.name!r}, _impl, "
+        f"({call_args},), _info)"
+    )
+    if entry.fills_status:
+        lines.append("    if status is not None:")
+        lines.append("        status.SOURCE = PAX_ANY_SOURCE")
+        lines.append("        status.TAG = PAX_ANY_TAG")
+        lines.append("        status.ERROR = PAX_SUCCESS")
+    lines.append("    return _res")
+    return "\n".join(lines) + "\n"
+
+
+def _nonblocking_src(entry: abi_spec.AbiEntry) -> str:
+    params = abi_spec.signature_src(entry)
+    call_args = abi_spec.call_args_src(entry)
+    lines = [f"def i{entry.name}(self, {params}):"]
+    lines.append(f"    _value = self.{entry.name}({call_args})")
+    if entry.temps:
+        # converted handle vectors stay alive until completion (§6.2)
+        lines.append(
+            f"    _temp = getattr(self.backend, {entry.temps_attr!r}, None)"
+        )
+    else:
+        lines.append("    _temp = None")
+    lines.append(
+        f"    return self._new_request(_value, 'i{entry.name}', temp_state=_temp)"
+    )
+    return "\n".join(lines) + "\n"
+
+
+def _install_generated_methods() -> None:
+    for entry in abi_spec.ABI_TABLE:
+        fn = abi_spec.compile_method(_blocking_src(entry), _GEN_ENV, entry.name)
+        fn.__qualname__ = f"PaxABI.{entry.name}"
+        setattr(PaxABI, entry.name, fn)
+        if entry.nonblocking:
+            ifn = abi_spec.compile_method(
+                _nonblocking_src(entry), _GEN_ENV, f"i{entry.name}"
+            )
+            ifn.__qualname__ = f"PaxABI.i{entry.name}"
+            setattr(PaxABI, f"i{entry.name}", ifn)
+
+
+_install_generated_methods()

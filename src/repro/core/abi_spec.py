@@ -1,0 +1,203 @@
+"""The declarative ABI function table — one spec driving the whole stack.
+
+The paper's core artifact is a *standard function table*: a fixed set of
+symbols with fixed handle semantics that any implementation can be resolved
+against at init (the ``dlopen``/``dlsym`` protocol of §6.2), and that a
+translation layer (Mukautuva) can be generated against mechanically, one
+wrapper per entry point.
+
+This module is that table, as data.  Every ABI entry point is one
+:class:`AbiEntry` row declaring:
+
+* its name and argument list, with each argument's *domain*
+  (:class:`Arg` kind) — which drives handle checking in the ABI layer and
+  handle conversion in Mukautuva;
+* its byte-accounting rule (``bytes_arg`` — which argument is the payload
+  the interposition tools should account);
+* whether a nonblocking ``i*`` variant exists (``nonblocking``);
+* the Mukautuva conversion signature: the foreign-library symbol
+  (``impl_name``), the return protocol (``muk_ret``), and whether converted
+  handle vectors must be kept alive in the request map until completion
+  (``temps`` — the §6.2 ``alltoallw`` worst case).
+
+Consumers generate their layer from the table instead of hand-writing each
+entry point four times:
+
+* :mod:`repro.core.abi` generates ``PaxABI``'s blocking and nonblocking
+  methods (with a precompiled zero-tool fast path);
+* :mod:`repro.core.backends.base` generates unsupported-operation
+  placeholders, so ``supports()`` can report a backend's capabilities;
+* :mod:`repro.core.mukautuva` generates the WRAP_* translation wrappers;
+* ``PaxABI.__init__`` performs dlsym-style *negotiation*: every entry is
+  resolved against the backend once at init, so a missing entry point is a
+  clean ``PAX_ERR_UNSUPPORTED_OPERATION`` at init time, never mid-step.
+
+Adding an entry point is one row here plus the per-backend implementation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from . import handles as H
+
+# ---------------------------------------------------------------------------
+# Argument domains.  The domain decides (a) the ABI-layer handle check and
+# (b) the Mukautuva conversion applied before the foreign library sees it.
+# ---------------------------------------------------------------------------
+PAYLOAD = "payload"        # array / pytree payload — passed through
+OP = "op"                  # op handle      -> check OP,       muk _convert_op
+COMM = "comm"              # comm handle    -> check COMM,     muk _convert_comm
+DATATYPE = "datatype"      # dtype handle   -> check DATATYPE, muk _convert_dtype
+DATATYPE_VEC = "datatype_vec"  # vector of dtype handles -> per-element both
+ROOT = "root"              # rank integer — passed through
+AXIS = "axis"              # array-axis integer — passed through
+COUNTS = "counts"          # per-peer count vector — coerced to tuple
+PERM = "perm"              # (src, dst) permutation — coerced to tuple
+
+_CHECK_KIND = {
+    OP: H.HandleKind.OP,
+    COMM: H.HandleKind.COMM,
+    DATATYPE: H.HandleKind.DATATYPE,
+    DATATYPE_VEC: H.HandleKind.DATATYPE,
+}
+
+class _NoDefault:
+    def __repr__(self) -> str:  # pragma: no cover
+        return "<required>"
+
+
+_NO_DEFAULT = _NoDefault()
+
+
+@dataclasses.dataclass(frozen=True)
+class Arg:
+    name: str
+    kind: str
+    default: object = _NO_DEFAULT
+
+    @property
+    def has_default(self) -> bool:
+        return self.default is not _NO_DEFAULT
+
+    @property
+    def check_kind(self) -> Optional[H.HandleKind]:
+        return _CHECK_KIND.get(self.kind)
+
+
+@dataclasses.dataclass(frozen=True)
+class AbiEntry:
+    """One row of the standard function table."""
+
+    name: str                      # ABI function name ("allreduce")
+    impl_name: str                 # foreign-library symbol ("Allreduce")
+    args: Tuple[Arg, ...]
+    backend_method: str = ""       # Backend method name; defaults to `name`
+    nonblocking: bool = False      # generate the i<name> variant
+    bytes_arg: Optional[str] = None  # payload arg for tool byte accounting
+    dtype_size_kwarg: bool = False   # extra `datatype=None` kwarg for bytes
+    fills_status: bool = False       # ABI-level `status=None` out-param
+    muk_ret: str = "value"           # "value" | "rc_only" | "status"
+    temps: bool = False              # stash converted vectors for the request map
+
+    def __post_init__(self):
+        if not self.backend_method:
+            object.__setattr__(self, "backend_method", self.name)
+
+    @property
+    def temps_attr(self) -> str:
+        """Backend attribute holding per-call temporaries (§6.2 request map)."""
+        return f"last_{self.name}_temps"
+
+
+def _e(name, impl_name, args, **kw) -> AbiEntry:
+    return AbiEntry(name=name, impl_name=impl_name, args=tuple(args), **kw)
+
+
+# ---------------------------------------------------------------------------
+# The standard function table.
+# ---------------------------------------------------------------------------
+ABI_TABLE: Tuple[AbiEntry, ...] = (
+    # -- queries ----------------------------------------------------------
+    _e("comm_size", "Comm_size", [Arg("comm", COMM)], backend_method="size"),
+    _e("comm_rank", "Comm_rank", [Arg("comm", COMM)], backend_method="rank"),
+    _e("type_size", "Type_size", [Arg("datatype", DATATYPE)]),
+    # -- collectives ------------------------------------------------------
+    _e("allreduce", "Allreduce",
+       [Arg("x", PAYLOAD), Arg("op", OP), Arg("comm", COMM)],
+       nonblocking=True, bytes_arg="x", dtype_size_kwarg=True),
+    _e("reduce", "Reduce",
+       [Arg("x", PAYLOAD), Arg("op", OP), Arg("root", ROOT), Arg("comm", COMM)],
+       nonblocking=True, bytes_arg="x"),
+    _e("bcast", "Bcast",
+       [Arg("x", PAYLOAD), Arg("root", ROOT), Arg("comm", COMM)],
+       nonblocking=True, bytes_arg="x"),
+    _e("reduce_scatter", "Reduce_scatter",
+       [Arg("x", PAYLOAD), Arg("op", OP), Arg("comm", COMM), Arg("axis", AXIS, 0)],
+       nonblocking=True, bytes_arg="x"),
+    _e("allgather", "Allgather",
+       [Arg("x", PAYLOAD), Arg("comm", COMM), Arg("axis", AXIS, 0)],
+       nonblocking=True, bytes_arg="x"),
+    _e("alltoall", "Alltoall",
+       [Arg("x", PAYLOAD), Arg("comm", COMM),
+        Arg("split_axis", AXIS, 0), Arg("concat_axis", AXIS, 0)],
+       nonblocking=True, bytes_arg="x"),
+    _e("alltoallv", "Alltoallv",
+       [Arg("x", PAYLOAD), Arg("sendcounts", COUNTS), Arg("recvcounts", COUNTS),
+        Arg("comm", COMM)],
+       nonblocking=True, bytes_arg="x"),
+    _e("alltoallw", "Alltoallw",
+       [Arg("blocks", PAYLOAD), Arg("sendtypes", DATATYPE_VEC),
+        Arg("recvtypes", DATATYPE_VEC), Arg("comm", COMM)],
+       nonblocking=True, bytes_arg="blocks", temps=True),
+    _e("scan", "Scan",
+       [Arg("x", PAYLOAD), Arg("op", OP), Arg("comm", COMM)],
+       nonblocking=True, bytes_arg="x"),
+    _e("exscan", "Exscan",
+       [Arg("x", PAYLOAD), Arg("op", OP), Arg("comm", COMM)],
+       nonblocking=True, bytes_arg="x"),
+    _e("sendrecv", "Sendrecv",
+       [Arg("x", PAYLOAD), Arg("perm", PERM), Arg("comm", COMM)],
+       nonblocking=True, bytes_arg="x", fills_status=True, muk_ret="status"),
+    _e("barrier", "Barrier", [Arg("comm", COMM)],
+       nonblocking=True, muk_ret="rc_only"),
+    _e("scatter", "Scatter",
+       [Arg("x", PAYLOAD), Arg("root", ROOT), Arg("comm", COMM), Arg("axis", AXIS, 0)],
+       nonblocking=True, bytes_arg="x"),
+    _e("gather", "Gather",
+       [Arg("x", PAYLOAD), Arg("root", ROOT), Arg("comm", COMM), Arg("axis", AXIS, 0)],
+       nonblocking=True, bytes_arg="x"),
+)
+
+# ---------------------------------------------------------------------------
+# Codegen helpers shared by the generating layers.
+# ---------------------------------------------------------------------------
+def signature_src(entry: AbiEntry, *, extra_kwargs: bool = False) -> str:
+    """``x, op, comm, axis=0`` source text for an entry's parameter list.
+
+    With ``extra_kwargs`` the ABI-level-only trailing kwargs are included
+    (``datatype=`` for byte accounting, ``status=`` for the out-param).
+    """
+    parts = []
+    for a in entry.args:
+        parts.append(f"{a.name}={a.default!r}" if a.has_default else a.name)
+    if extra_kwargs and entry.dtype_size_kwarg:
+        parts.append("datatype=None")
+    if extra_kwargs and entry.fills_status:
+        parts.append("status=None")
+    return ", ".join(parts)
+
+
+def call_args_src(entry: AbiEntry) -> str:
+    """``x, op, comm, axis`` — forwarding text in table order."""
+    return ", ".join(a.name for a in entry.args)
+
+
+def compile_method(src: str, env: dict, name: str):
+    """Compile generated method source; tag it for introspection."""
+    ns: dict = {}
+    code = compile(src, f"<abi_spec:{name}>", "exec")
+    exec(code, env, ns)
+    fn = ns[name]
+    fn.__generated_src__ = src
+    return fn

@@ -19,13 +19,15 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from .. import compat
+
 
 def rank(axes: Sequence[str]):
     if not axes:
         return jnp.int32(0)
     r = lax.axis_index(axes[0])
     for a in axes[1:]:
-        r = r * lax.axis_size(a) + lax.axis_index(a)
+        r = r * compat.axis_size(a) + lax.axis_index(a)
     return r
 
 
@@ -94,7 +96,7 @@ def reduce_scatter_generic(x, fn: Callable, axes: Sequence[str], axis: int = 0):
     r = rank(axes)
     import math
 
-    total = math.prod(lax.axis_size(a) for a in axes) if axes else 1
+    total = math.prod(compat.axis_size(a) for a in axes) if axes else 1
     chunk = x.shape[axis] // total
     return lax.dynamic_slice_in_dim(x, r * chunk, chunk, axis=axis)
 
@@ -106,6 +108,78 @@ def alltoall(x, axes: Sequence[str], split_axis: int, concat_axis: int, tiled: b
             f"(got axes={tuple(axes)}); split the communicator"
         )
     return lax.all_to_all(x, axes[0], split_axis, concat_axis, tiled=tiled)
+
+
+def scan_fold(x, fn: Callable, axes: Sequence[str], inclusive: bool = True):
+    """Prefix reduction over linearized communicator rank (MPI_Scan/Exscan).
+
+    Gathers every rank's contribution into a leading axis in linearized
+    (row-major) rank order, folds sequentially, and selects this rank's
+    prefix.  ``inclusive=False`` is the exscan: rank 0's result is its own
+    input unchanged (MPI leaves it undefined; this is our ABI's convention,
+    shared by every backend so results stay equivalent)."""
+    axes = tuple(axes)
+    if not axes:
+        return x
+    g = allgather(x[None], axes, axis=0)  # (S, *x.shape), linear rank order
+    r = rank(axes)
+    S = g.shape[0]
+    acc = g[0]
+    out = acc if inclusive else x
+    for j in range(1, S):
+        prev = acc
+        acc = fn(prev, g[j])
+        val = acc if inclusive else prev
+        out = jnp.where(r == j, val, out)
+    return out
+
+
+def alltoallv(x, sendcounts: Sequence[int], recvcounts: Sequence[int],
+              axes: Sequence[str]):
+    """Counted all-to-all over the leading array axis (MPI_Alltoallv).
+
+    ``x`` holds ``sum(sendcounts)`` rows: block *i* (``sendcounts[i]`` rows)
+    goes to peer *i*; ``recvcounts[j]`` rows come back from peer *j*, in
+    peer order.
+
+    **SPMD restriction:** a single static trace shares one counts vector
+    across every rank, so per-rank-varying counts are not representable —
+    rank *j* would be sending ``sendcounts[i]`` rows toward rank *i* while
+    rank *i* slices ``recvcounts[j]``, and the two only agree when all
+    counts are equal.  Non-uniform counts therefore raise ``ValueError``
+    instead of silently fabricating padding or dropping rows."""
+    axes = tuple(axes)
+    sendcounts = tuple(int(c) for c in sendcounts)
+    recvcounts = tuple(int(c) for c in recvcounts)
+    if len(sendcounts) != len(recvcounts):
+        raise ValueError("sendcounts and recvcounts must have equal length")
+    uniform = set(sendcounts) | set(recvcounts)
+    if len(uniform) != 1:
+        raise ValueError(
+            "SPMD alltoallv requires uniform counts (one static trace cannot "
+            f"express per-rank-varying counts); got sendcounts={sendcounts}, "
+            f"recvcounts={recvcounts}"
+        )
+    c = sendcounts[0]
+    S = len(sendcounts)
+    if x.shape[0] != S * c:
+        raise ValueError(
+            f"payload has {x.shape[0]} rows, counts promise {S}x{c}"
+        )
+    if not axes:
+        # group of one: the only peer is self
+        if S != 1:
+            raise ValueError("group-of-one alltoallv takes exactly one count")
+        return x
+    if len(axes) != 1:
+        raise NotImplementedError(
+            "alltoallv is defined over single-axis communicators "
+            f"(got axes={axes}); split the communicator"
+        )
+    if c == 0:
+        return x[:0]
+    out = alltoall(x.reshape((S, c) + x.shape[1:]), axes, 0, 0)
+    return out.reshape((S * c,) + x.shape[1:])
 
 
 def ppermute(x, axes: Sequence[str], perm):
@@ -147,6 +221,6 @@ def scatter_from_root(x, root: int, axes: Sequence[str], axis: int = 0):
     r = rank(axes)
     import math
 
-    total = math.prod(lax.axis_size(a) for a in axes) if axes else 1
+    total = math.prod(compat.axis_size(a) for a in axes) if axes else 1
     chunk = x.shape[axis] // total
     return lax.dynamic_slice_in_dim(x, r * chunk, chunk, axis=axis)

@@ -7,13 +7,24 @@ convention and are adapted by :mod:`repro.core.mukautuva`.
 The methods take *backend-domain* handles.  For paxi those ARE the ABI ints;
 for ompix they are its own objects.  The ABI layer never calls a foreign
 backend directly.
+
+The per-entry-point surface is **generated from the declarative function
+table** (:mod:`repro.core.abi_spec`): every entry gets an
+unsupported-operation placeholder here, and backends override the entries
+they implement.  :meth:`Backend.supports` reports exactly which entries are
+overridden — the capability answer ``PaxABI.__init__`` negotiates against
+(the ``dlsym`` analogue): a backend missing an entry point fails at *init*
+with ``PAX_ERR_UNSUPPORTED_OPERATION``, never mid-step.
 """
 from __future__ import annotations
 
 import abc
-from typing import Any, Callable, Optional, Sequence
+from typing import Any, Callable, Optional
 
 import jax
+
+from ..abi_spec import ABI_TABLE, AbiEntry
+from ..errors import PAX_ERR_UNSUPPORTED_OPERATION, PaxError
 
 
 class Backend(abc.ABC):
@@ -39,48 +50,37 @@ class Backend(abc.ABC):
     def op_is_native(self, op: Any) -> bool:
         return False
 
-    # -- queries -----------------------------------------------------------
-    @abc.abstractmethod
-    def size(self, comm: Any) -> int: ...
+    # -- capability negotiation (the dlsym answer) -------------------------
+    def supports(self, entry: AbiEntry) -> bool:
+        """Whether this backend implements a function-table entry.
 
-    @abc.abstractmethod
-    def rank(self, comm: Any): ...
+        Default: the entry's method was overridden somewhere below
+        :class:`Backend` (the generated placeholders carry a marker).
+        Foreign adapters override this to ask their library instead.
+        """
+        impl = getattr(type(self), entry.backend_method, None)
+        return impl is not None and not getattr(impl, "_pax_unsupported", False)
 
-    @abc.abstractmethod
-    def type_size(self, datatype: Any) -> int: ...
 
-    # -- collectives (values are per-device jnp arrays inside shard_map) ---
-    @abc.abstractmethod
-    def allreduce(self, x, op: Any, comm: Any): ...
+def _make_placeholder(entry: AbiEntry):
+    def placeholder(self, *args, **kwargs):
+        raise PaxError(
+            PAX_ERR_UNSUPPORTED_OPERATION,
+            f"backend {self.name!r} does not implement {entry.name!r}",
+        )
 
-    @abc.abstractmethod
-    def reduce(self, x, op: Any, root: int, comm: Any): ...
+    placeholder.__name__ = entry.backend_method
+    placeholder.__qualname__ = f"Backend.{entry.backend_method}"
+    placeholder.__doc__ = (
+        f"Function-table entry {entry.name!r}: not implemented by this backend."
+    )
+    placeholder._pax_unsupported = True
+    return placeholder
 
-    @abc.abstractmethod
-    def bcast(self, x, root: int, comm: Any): ...
 
-    @abc.abstractmethod
-    def reduce_scatter(self, x, op: Any, comm: Any, axis: int = 0): ...
-
-    @abc.abstractmethod
-    def allgather(self, x, comm: Any, axis: int = 0): ...
-
-    @abc.abstractmethod
-    def alltoall(self, x, comm: Any, split_axis: int = 0, concat_axis: int = 0): ...
-
-    @abc.abstractmethod
-    def sendrecv(self, x, perm: Sequence[tuple[int, int]], comm: Any): ...
-
-    @abc.abstractmethod
-    def barrier(self, comm: Any): ...
-
-    @abc.abstractmethod
-    def scatter(self, x, root: int, comm: Any, axis: int = 0): ...
-
-    def gather(self, x, root: int, comm: Any, axis: int = 0):
-        # SPMD gather == allgather (result defined on root, replicated
-        # elsewhere); subclasses may specialize.
-        return self.allgather(x, comm, axis=axis)
-
-    def alltoallw(self, blocks, sendtypes, recvtypes, comm: Any):
-        raise NotImplementedError(f"{self.name} does not implement alltoallw")
+# One placeholder per function-table row — the single source of what a
+# backend *may* implement.  Collective semantics live in the subclasses.
+for _entry in ABI_TABLE:
+    if _entry.backend_method not in Backend.__dict__:
+        setattr(Backend, _entry.backend_method, _make_placeholder(_entry))
+del _entry

@@ -289,6 +289,35 @@ class OmpixLib:
         ]
         return OMPIX_SUCCESS, parts
 
+    def Gather(self, x, root: int, comm: OmpixComm, axis: int = 0):
+        rc = self._check(comm)
+        if rc:
+            return rc, None
+        return OMPIX_SUCCESS, _lax.allgather(x, comm.axes, axis=axis)
+
+    def Scan(self, x, op: OmpixOp, comm: OmpixComm):
+        rc = self._check(comm, op)
+        if rc:
+            return rc, None
+        return OMPIX_SUCCESS, _lax.scan_fold(x, op.fn, comm.axes, inclusive=True)
+
+    def Exscan(self, x, op: OmpixOp, comm: OmpixComm):
+        rc = self._check(comm, op)
+        if rc:
+            return rc, None
+        return OMPIX_SUCCESS, _lax.scan_fold(x, op.fn, comm.axes, inclusive=False)
+
+    def Alltoallv(self, x, sendcounts, recvcounts, comm: OmpixComm):
+        rc = self._check(comm)
+        if rc:
+            return rc, None
+        if len(sendcounts) != len(recvcounts):
+            return OMPIX_ERR_COUNT, None
+        try:
+            return OMPIX_SUCCESS, _lax.alltoallv(x, sendcounts, recvcounts, comm.axes)
+        except NotImplementedError:
+            return OMPIX_ERR_UNSUPPORTED, None
+
     def Sendrecv(self, x, perm, comm: OmpixComm):
         rc = self._check(comm)
         if rc:

@@ -101,6 +101,20 @@ class PaxiBackend(Backend):
     def scatter(self, x, root: int, comm: int, axis: int = 0):
         return _lax.scatter_from_root(x, root, self.comm_axes(comm), axis=axis)
 
+    def gather(self, x, root: int, comm: int, axis: int = 0):
+        # SPMD gather == allgather (result defined on root, replicated
+        # elsewhere per the MPI contract).
+        return _lax.allgather(x, self.comm_axes(comm), axis=axis)
+
+    def scan(self, x, op: int, comm: int):
+        return _lax.scan_fold(x, self.op_fn(op), self.comm_axes(comm), inclusive=True)
+
+    def exscan(self, x, op: int, comm: int):
+        return _lax.scan_fold(x, self.op_fn(op), self.comm_axes(comm), inclusive=False)
+
+    def alltoallv(self, x, sendcounts: Sequence[int], recvcounts: Sequence[int], comm: int):
+        return _lax.alltoallv(x, sendcounts, recvcounts, self.comm_axes(comm))
+
     def alltoallw(self, blocks, sendtypes, recvtypes, comm: int):
         """Native path: handle vectors need no conversion (they ARE the ABI);
         per-peer recv-type casts are applied directly."""

@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from .. import compat
+
 from .. import handles as H
 from . import _lax
 from .paxi import PaxiBackend
@@ -55,7 +57,7 @@ def ring_reduce_scatter(x, axis_name: str, compress: Optional[str] = None):
 
     ``x`` must have leading dim divisible by the axis size. S-1 hops.
     """
-    S = lax.axis_size(axis_name)
+    S = compat.axis_size(axis_name)
     if S == 1:
         return x
     i = lax.axis_index(axis_name)
@@ -80,7 +82,7 @@ def ring_reduce_scatter(x, axis_name: str, compress: Optional[str] = None):
 
 def ring_allgather(x, axis_name: str):
     """Inverse of ring_reduce_scatter: collect every rank's chunk. S-1 hops."""
-    S = lax.axis_size(axis_name)
+    S = compat.axis_size(axis_name)
     if S == 1:
         return x
     i = lax.axis_index(axis_name)
@@ -94,6 +96,25 @@ def ring_allgather(x, axis_name: str):
         src = (i - 1 - t) % S  # who produced the chunk we just received
         out = lax.dynamic_update_slice_in_dim(out, travel, src * c, axis=0)
     return out
+
+
+def ring_scan_sum(x, axis_name: str, inclusive: bool = True):
+    """SUM prefix over ranks via S-1 explicit hops: every hop forwards the
+    neighbour's contribution one step; rank i accumulates the terms with
+    source index < i (masked add).  Exclusive scan leaves rank 0's input
+    unchanged — the ABI-wide exscan convention (MPI: undefined)."""
+    S = compat.axis_size(axis_name)
+    i = lax.axis_index(axis_name)
+    if S == 1:
+        return x
+    perm = [(s, (s + 1) % S) for s in range(S)]
+    acc = x if inclusive else jnp.where(i == 0, x, jnp.zeros_like(x))
+    travel = x
+    for t in range(S - 1):
+        travel = lax.ppermute(travel, axis_name, perm)
+        # after hop t, rank i holds rank (i-1-t)'s contribution
+        acc = acc + jnp.where(i >= t + 1, travel, jnp.zeros_like(travel))
+    return acc
 
 
 def _pad_to_multiple(x, m: int):
@@ -146,3 +167,15 @@ class RingBackend(PaxiBackend):
         if len(axes) != 1 or axis != 0:
             return super().allgather(x, comm, axis=axis)
         return ring_allgather(x, axes[0])
+
+    def scan(self, x, op: int, comm: int):
+        axes = self.comm_axes(comm)
+        if op != H.PAX_SUM or len(axes) != 1:
+            return super().scan(x, op, comm)
+        return ring_scan_sum(x, axes[0], inclusive=True)
+
+    def exscan(self, x, op: int, comm: int):
+        axes = self.comm_axes(comm)
+        if op != H.PAX_SUM or len(axes) != 1:
+            return super().exscan(x, op, comm)
+        return ring_scan_sum(x, axes[0], inclusive=False)

@@ -83,22 +83,29 @@ class ByteCounter(Tool):
 
 class WallClockTracer(Tool):
     """Records (fname, t_ns) pairs of host-side dispatch; the message-rate
-    benchmark uses it to attribute per-call overhead."""
+    benchmark uses it to attribute per-call overhead.
+
+    Timer state is a per-tool LIFO stack of start times: ``before``/``after``
+    pairs nest like the dispatch chain itself, so the stack is exact for
+    nested ABI calls, never keys on reusable ``id()`` values, and cannot
+    accumulate stale entries (an aborted call's start is popped by the next
+    completed ``after`` instead of leaking forever)."""
 
     tool_id = 3
 
     def __init__(self, max_events: int = 100000) -> None:
         self.events: list[tuple[str, int]] = []
-        self._t0: dict[int, int] = {}
+        self._starts: list[int] = []
         self._max = max_events
 
     def before(self, fname, args, info):
-        self._t0[id(args)] = time.perf_counter_ns()
+        self._starts.append(time.perf_counter_ns())
 
     def after(self, fname, args, info, result):
-        t0 = self._t0.pop(id(args), None)
-        if t0 is not None and len(self.events) < self._max:
-            self.events.append((fname, time.perf_counter_ns() - t0))
+        if self._starts:
+            t0 = self._starts.pop()
+            if len(self.events) < self._max:
+                self.events.append((fname, time.perf_counter_ns() - t0))
         return result
 
 

@@ -5,11 +5,23 @@ a standalone layer that makes a *foreign-convention* implementation (here
 :mod:`backends.ompix`, the Open-MPI analogue) speak the standard ABI without
 any change to the implementation itself.
 
+The paper's point is that this layer can be produced *mechanically*, one
+wrapper per entry point of the standard function table.  This module does
+exactly that: **every WRAP_* method is generated from the declarative spec**
+(:mod:`repro.core.abi_spec`) — the entry's argument domains decide the
+CONVERT_* calls, its ``muk_ret`` decides the return-code protocol, and its
+``temps`` flag decides whether converted handle vectors are stashed for the
+request map.  Nothing per-collective is hand-written; adding an entry point
+to the spec adds its translation wrapper automatically.
+
 Faithful to the paper's structure:
 
 * ``CONVERT_*`` handle conversion with inline fast paths for the predefined
   handles (the WORLD/SELF/NULL ``if`` chain of the §6.2 listing) and a table
   for user handles;
+* an **O(1) reverse map** (impl handle → ABI handle) maintained at
+  registration time, replacing a linear scan — callback trampolines hit this
+  once per reduction element;
 * return-code translation with an inlined success fast path
   (``RETURN_CODE_IMPL_TO_MUK``);
 * **callback trampolines**: a user reduction op registered against the ABI
@@ -19,12 +31,15 @@ Faithful to the paper's structure:
   vectors for ``alltoallw``) with requests until completion — including the
   paper's worst case, ``testall`` scanning many outstanding requests;
 * status-layout conversion (ompix's OMPI-style status → the standard
-  32-byte status).
+  32-byte status);
+* capability answers for init-time negotiation: :meth:`MukBackend.supports`
+  reports whether the foreign library exports an entry's symbol, so a
+  missing entry point surfaces at ``pax_init`` rather than mid-step.
 
 The measured claim (Table 1): this layer adds a small per-call overhead on
 top of the implementation.  ``benchmarks/bench_message_rate.py`` reproduces
-that measurement; ``tests/test_mukautuva.py`` checks semantics equivalence
-against the native backend.
+that measurement; the multidev battery checks semantics equivalence against
+the native backend.
 """
 from __future__ import annotations
 
@@ -33,6 +48,7 @@ from typing import Any, Callable, Optional, Sequence
 
 import jax
 
+from . import abi_spec
 from . import handles as H
 from .communicator import CommTable
 from .datatypes import DatatypeRegistry
@@ -51,6 +67,7 @@ from .errors import (
 from .ops import OpRegistry
 from .backends import ompix as ox
 from .backends.base import Backend
+from .status import Status
 
 
 class MukBackend(Backend):
@@ -75,6 +92,13 @@ class MukBackend(Backend):
         self._dtype_table: dict[int, ox.OmpixDatatype] = {}
         self._predef_ops = self._build_predef_op_map()
         self._predef_dtypes = self._build_predef_dtype_map()
+        # O(1) reverse conversion (impl dtype object -> ABI handle), kept in
+        # sync at registration; first registration wins for aliased
+        # predefined handles (PAX_CHAR and PAX_INT8_T both map to the impl's
+        # int8 — the canonical fixed-size handle is registered first).
+        self._dtype_rev: dict[ox.OmpixDatatype, int] = {}
+        for abi_h, obj in self._predef_dtypes.items():
+            self._dtype_rev.setdefault(obj, abi_h)
         self.errors = ErrorTranslator(
             {
                 ox.OMPIX_ERR_ARG: PAX_ERR_ARG,
@@ -88,6 +112,13 @@ class MukBackend(Backend):
             }
         )
         self.last_alltoallw_temps: Any = None
+        self.last_status: Optional[Status] = None
+
+    # ------------------------------------------------------------------
+    # capability negotiation: does the foreign library export the symbol?
+    # ------------------------------------------------------------------
+    def supports(self, entry: abi_spec.AbiEntry) -> bool:
+        return hasattr(self.lib, entry.impl_name)
 
     # ------------------------------------------------------------------
     # predefined-handle maps (the compile-time knowledge of both ABIs)
@@ -184,19 +215,27 @@ class MukBackend(Backend):
             raise PaxError(PAX_ERR_TYPE, H.describe(dt)) from None
 
     def _dtype_to_abi(self, impl_dt: ox.OmpixDatatype) -> int:
-        # reverse conversion, needed inside callback trampolines
-        for abi_h, obj in self._predef_dtypes.items():
-            if obj is impl_dt:
-                return abi_h
-        for abi_h, obj in self._dtype_table.items():
-            if obj is impl_dt:
-                return abi_h
-        return H.PAX_DATATYPE_NULL
+        """Reverse conversion, needed inside callback trampolines.  O(1):
+        the reverse dict is maintained at registration time."""
+        return self._dtype_rev.get(impl_dt, H.PAX_DATATYPE_NULL)
 
     def _rc(self, code: int) -> None:
         if code == 0:  # success fast path (inline)
             return
         raise PaxError(self.errors.to_abi(code), f"{self.lib.name} rc={code}")
+
+    def _store_status(self, impl_status) -> None:
+        """Status layout conversion (ompix §3.2.3 layout -> standard §5.2);
+        the converted status is attached for the ABI layer / tools."""
+        self.last_status = None
+        if impl_status is not None:
+            s = Status()
+            s.SOURCE = impl_status["MPI_SOURCE"]
+            s.TAG = impl_status["MPI_TAG"]
+            s.ERROR = self.errors.to_abi(impl_status["MPI_ERROR"])
+            s.set_reserved(0, impl_status["_cancelled"])
+            s.set_reserved(1, impl_status["_ucount"] & 0x7FFFFFFF)
+            self.last_status = s
 
     # ------------------------------------------------------------------
     # registration of ABI user handles with the foreign implementation
@@ -226,9 +265,10 @@ class MukBackend(Backend):
         code, impl = self.lib.Type_contiguous(count, self._convert_dtype(base))
         self._rc(code)
         self._dtype_table[abi_handle] = impl
+        self._dtype_rev.setdefault(impl, abi_handle)
 
     # ------------------------------------------------------------------
-    # Backend interface (WRAP_* functions of the paper listing)
+    # non-table handle queries used by native lowering helpers
     # ------------------------------------------------------------------
     def comm_axes(self, comm: int) -> tuple[str, ...]:
         return self._convert_comm(comm).axes
@@ -239,85 +279,67 @@ class MukBackend(Backend):
     def op_is_native(self, op: int) -> bool:
         return self._convert_op(op).is_native
 
-    def size(self, comm: int) -> int:
-        code, n = self.lib.Comm_size(self._convert_comm(comm))
-        self._rc(code)
-        return n
 
-    def rank(self, comm: int):
-        code, r = self.lib.Comm_rank(self._convert_comm(comm))
-        self._rc(code)
-        return r
+# ---------------------------------------------------------------------------
+# WRAP_* generation — one translation wrapper per function-table entry.
+#
+# Each argument's declared domain picks its CONVERT_*; the entry's return
+# protocol picks the rc handling; ``temps`` entries stash their converted
+# vectors for the request map (freed by ``PaxABI.wait``).
+# ---------------------------------------------------------------------------
+_CONVERT_EXPR = {
+    abi_spec.OP: "self._convert_op({a})",
+    abi_spec.COMM: "self._convert_comm({a})",
+    abi_spec.DATATYPE: "self._convert_dtype({a})",
+}
 
-    def type_size(self, datatype: int) -> int:
-        code, n = self.lib.Type_size(self._convert_dtype(datatype))
-        self._rc(code)
-        return n
 
-    def allreduce(self, x, op: int, comm: int):
-        code, v = self.lib.Allreduce(x, self._convert_op(op), self._convert_comm(comm))
-        self._rc(code)
-        return v
+def _wrap_src(entry: abi_spec.AbiEntry) -> str:
+    params = abi_spec.signature_src(entry)
+    lines = [f"def {entry.backend_method}(self, {params}):"]
+    impl_args = []
+    vec_names = []
+    for a in entry.args:
+        if a.kind == abi_spec.DATATYPE_VEC:
+            cname = f"_c_{a.name}"
+            lines.append(
+                f"    {cname} = tuple(self._convert_dtype(_t) for _t in {a.name})"
+            )
+            impl_args.append(cname)
+            vec_names.append(cname)
+        elif a.kind in _CONVERT_EXPR:
+            impl_args.append(_CONVERT_EXPR[a.kind].format(a=a.name))
+        else:
+            impl_args.append(a.name)
+    if entry.temps:
+        # §6.2: converted handle vectors must stay alive until completion
+        lines.append(f"    self.{entry.temps_attr} = ({', '.join(vec_names)},)")
+    call = f"self.lib.{entry.impl_name}({', '.join(impl_args)})"
+    if entry.muk_ret == "rc_only":
+        lines.append(f"    _code = {call}")
+        lines.append("    if _code:")
+        lines.append("        self._rc(_code)")
+        lines.append("    return None")
+    elif entry.muk_ret == "status":
+        lines.append(f"    _code, _v, _s = {call}")
+        lines.append("    if _code:")
+        lines.append("        self._rc(_code)")
+        lines.append("    self._store_status(_s)")
+        lines.append("    return _v")
+    else:
+        lines.append(f"    _code, _v = {call}")
+        lines.append("    if _code:")
+        lines.append("        self._rc(_code)")
+        lines.append("    return _v")
+    return "\n".join(lines) + "\n"
 
-    def reduce(self, x, op: int, root: int, comm: int):
-        code, v = self.lib.Reduce(x, self._convert_op(op), root, self._convert_comm(comm))
-        self._rc(code)
-        return v
 
-    def bcast(self, x, root: int, comm: int):
-        code, v = self.lib.Bcast(x, root, self._convert_comm(comm))
-        self._rc(code)
-        return v
+def _install_generated_wraps() -> None:
+    for entry in abi_spec.ABI_TABLE:
+        fn = abi_spec.compile_method(_wrap_src(entry), {}, entry.backend_method)
+        fn.__qualname__ = f"MukBackend.{entry.backend_method}"
+        fn.__doc__ = f"Generated WRAP_{entry.impl_name} (paper §6.2)."
+        setattr(MukBackend, entry.backend_method, fn)
 
-    def reduce_scatter(self, x, op: int, comm: int, axis: int = 0):
-        code, v = self.lib.Reduce_scatter(
-            x, self._convert_op(op), self._convert_comm(comm), axis
-        )
-        self._rc(code)
-        return v
 
-    def allgather(self, x, comm: int, axis: int = 0):
-        code, v = self.lib.Allgather(x, self._convert_comm(comm), axis)
-        self._rc(code)
-        return v
-
-    def alltoall(self, x, comm: int, split_axis: int = 0, concat_axis: int = 0):
-        code, v = self.lib.Alltoall(x, self._convert_comm(comm), split_axis, concat_axis)
-        self._rc(code)
-        return v
-
-    def alltoallw(self, blocks, sendtypes: Sequence[int], recvtypes: Sequence[int], comm: int):
-        # vector handle conversion (§6.2: "vectors of datatype handles must be
-        # converted from one ABI to another, and freed upon completion")
-        impl_send = tuple(self._convert_dtype(t) for t in sendtypes)
-        impl_recv = tuple(self._convert_dtype(t) for t in recvtypes)
-        self.last_alltoallw_temps = (impl_send, impl_recv)
-        code, v = self.lib.Alltoallw(blocks, impl_send, impl_recv, self._convert_comm(comm))
-        self._rc(code)
-        return v
-
-    def sendrecv(self, x, perm, comm: int):
-        code, v, impl_status = self.lib.Sendrecv(x, perm, self._convert_comm(comm))
-        self._rc(code)
-        # status layout conversion (ompix §3.2.3 layout -> standard §5.2);
-        # the converted status is attached for the ABI layer / tools.
-        self.last_status = None
-        if impl_status is not None:
-            from .status import Status
-
-            s = Status()
-            s.SOURCE = impl_status["MPI_SOURCE"]
-            s.TAG = impl_status["MPI_TAG"]
-            s.ERROR = self.errors.to_abi(impl_status["MPI_ERROR"])
-            s.set_reserved(0, impl_status["_cancelled"])
-            s.set_reserved(1, impl_status["_ucount"] & 0x7FFFFFFF)
-            self.last_status = s
-        return v
-
-    def barrier(self, comm: int):
-        self._rc(self.lib.Barrier(self._convert_comm(comm)))
-
-    def scatter(self, x, root: int, comm: int, axis: int = 0):
-        code, v = self.lib.Scatter(x, root, self._convert_comm(comm), axis)
-        self._rc(code)
-        return v
+_install_generated_wraps()

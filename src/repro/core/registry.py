@@ -6,6 +6,12 @@ Selection order: explicit ``impl=`` argument, else ``PAX_ABI_IMPL``
 environment variable, else the native default ``paxi`` — mirroring how
 Mukautuva picks the IMPL shared object at runtime.
 
+``pax_init`` is the ``dlopen`` half; the ``dlsym`` half is performed by
+``PaxABI.__init__``, which *negotiates* the declarative function table
+(:mod:`repro.core.abi_spec`) against the resolved backend: every entry
+point is looked up once, and a backend missing one raises
+``PAX_ERR_UNSUPPORTED_OPERATION`` here at init, never mid-step.
+
 Names:
 
 * ``paxi``       — native ABI implementation (zero-overhead path, §6.3);

@@ -8,22 +8,19 @@ from __future__ import annotations
 
 import jax
 
+from ..core.compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """(16,16) data x model single pod; (2,16,16) pod x data x model for two
     pods (512 chips of TPU v5e in the target deployment)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(model_axis: int = 1):
     """A mesh over whatever devices exist (tests / examples / smoke runs)."""
     n = jax.device_count()
     assert n % model_axis == 0
-    return jax.make_mesh(
-        (n // model_axis, model_axis), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_mesh((n // model_axis, model_axis), ("data", "model"))

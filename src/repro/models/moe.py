@@ -234,7 +234,9 @@ def _moe_ep(params, x, cfg, dist):
             mesh = ctx
     except Exception:
         pass
-    f = jax.shard_map(
+    from ..core.compat import shard_map as _compat_shard_map
+
+    f = _compat_shard_map(
         body,
         mesh=mesh,
         in_specs=(P(None, dist.tp_axis, None), P(None, None),

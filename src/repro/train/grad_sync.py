@@ -72,9 +72,46 @@ def reduce_scatter_grads(
     return shard, new_ef
 
 
-def allgather_params(dist: DistContext, shard: jax.Array) -> jax.Array:
-    """Inverse of the scatter: collect every rank's updated shard."""
-    return dist.abi.allgather(shard, dist.dp_comm).astype(jnp.float32)
+def allgather_params(dist: DistContext, shard: jax.Array, *, buckets: int = 1) -> jax.Array:
+    """Inverse of the scatter: collect every rank's updated shard.
+
+    With ``buckets > 1`` the shard is split and issued as nonblocking
+    ``iallgather`` requests (the spec-generated path), so the scheduler can
+    overlap the gather of early buckets with whatever consumes them; the
+    bucket-major chunks are re-interleaved into rank-major order."""
+    abi = dist.abi
+    if buckets <= 1:
+        return abi.allgather(shard, dist.dp_comm).astype(jnp.float32)
+    assert shard.shape[0] % buckets == 0, "bucket count must divide the shard"
+    parts = jnp.split(shard, buckets)
+    reqs = [abi.iallgather(p, dist.dp_comm) for p in parts]
+    outs = abi.waitall(reqs)
+    # outs[b] is rank-major over bucket b; interleave back to rank-major full,
+    # preserving any trailing dims so both bucket settings return one shape
+    rest = shard.shape[1:]
+    chunks = [o.reshape((dist.dp_size, -1) + rest) for o in outs]
+    full = jnp.concatenate(chunks, axis=1).reshape((-1,) + rest)
+    return full.astype(jnp.float32)
+
+
+def zero1_step(
+    dist: DistContext,
+    flat_g: jax.Array,
+    update_shard,
+    *,
+    buckets: int = 1,
+    compression: Optional[str] = None,
+    ef: Optional[jax.Array] = None,
+):
+    """One explicit ZeRO-1 round trip through the generated ABI surface:
+    bucketed nonblocking reduce-scatter -> per-shard optimizer update
+    (``update_shard(g_shard) -> p_shard``) -> bucketed nonblocking
+    all-gather of the updated shard.  Returns (params_full, new_ef)."""
+    g_shard, new_ef = reduce_scatter_grads(
+        dist, flat_g, compression=compression, buckets=buckets, ef=ef
+    )
+    p_shard = update_shard(g_shard)
+    return allgather_params(dist, p_shard, buckets=buckets), new_ef
 
 
 def allreduce_scalar(dist: DistContext, x):

@@ -1,0 +1,41 @@
+"""Hypothesis compatibility shim for minimal environments.
+
+When hypothesis is installed, re-exports ``given``/``settings``/``st``
+unchanged.  When it is absent, ``given`` turns the property test into a
+skip-marked stub so the rest of the suite still runs.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def shim():
+                pass
+
+            shim.__name__ = fn.__name__
+            shim.__doc__ = fn.__doc__
+            return shim
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    class _Strategies:
+        """Accepts any strategy construction; values are never drawn."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _Strategies()

@@ -16,12 +16,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 @pytest.fixture(scope="session")
 def mesh1():
     """A 1x1 mesh: degenerate but exercises every code path."""
-    import jax
+    from repro.core.compat import make_mesh
 
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_mesh((1, 1), ("data", "model"))
 
 
 @pytest.fixture(scope="session")

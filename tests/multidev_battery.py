@@ -27,10 +27,10 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 import repro.core as C
+from repro.core.compat import make_mesh, shard_map
 from repro.core import handles as H
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 
 XG = np.arange(64.0).reshape(8, 8) + 1.0  # rank-major chunks
 
@@ -40,10 +40,14 @@ def section(name):
 
 
 # ---------------------------------------------------------------------------
-section("1. backend semantics vs numpy oracles")
+section("1. backend semantics vs numpy oracles (every registered backend)")
 exp_sum, exp_max, exp_min, exp_prod = XG.sum(0), XG.max(0), XG.min(0), XG.prod(0)
+exp_scan = np.cumsum(XG, axis=0)                       # inclusive prefix, rank-major
+exp_exscan = np.concatenate([XG[:1], exp_scan[:-1]])   # rank 0: input unchanged
 
-for impl in ("paxi", "ring", "ring-bf16", "ring-int8", "ompix", "muk:paxi"):
+# the equivalence battery runs over EVERY registered implementation — the
+# spec-driven surface (including scan/exscan/alltoallv) must agree everywhere
+for impl in sorted(C.available_backends()):
     abi = C.pax_init(mesh, impl=impl)
     world = C.PAX_COMM_WORLD
     dp = abi.comm_from_axes(("data",))
@@ -57,13 +61,19 @@ for impl in ("paxi", "ring", "ring-bf16", "ring-int8", "ompix", "muk:paxi"):
             abi.allreduce(x, C.PAX_PROD, world),
             abi.allgather(x, dp),
             abi.reduce_scatter(x, C.PAX_SUM, world),
+            abi.scan(x, C.PAX_SUM, world),
+            abi.exscan(x, C.PAX_SUM, world),
+            abi.alltoallv(x, (2, 2, 2, 2), (2, 2, 2, 2), mp),
+            abi.alltoall(x.reshape(4, 2), mp, 0, 0).reshape(-1),
         )
 
     f = abi.shard_region(
         body, in_specs=P(("data", "model")),
-        out_specs=(P(), P(), P(), P(), P("model"), P(("data", "model"))),
+        out_specs=(P(), P(), P(), P(), P("model"), P(("data", "model")),
+                   P(("data", "model")), P(("data", "model")),
+                   P(("data", "model")), P(("data", "model"))),
     )
-    s, mx, mn, pr, ag, rs = jax.jit(f)(jnp.asarray(XG.reshape(-1)))
+    s, mx, mn, pr, ag, rs, sc, ex, a2av, a2a = jax.jit(f)(jnp.asarray(XG.reshape(-1)))
     tol = 0.03 if "int8" in impl else (0.01 if "bf16" in impl else 1e-5)
     np.testing.assert_allclose(np.asarray(s[:8]), exp_sum, rtol=tol)
     np.testing.assert_allclose(np.asarray(mx[:8]), exp_max)
@@ -73,6 +83,15 @@ for impl in ("paxi", "ring", "ring-bf16", "ring-int8", "ompix", "muk:paxi"):
     np.testing.assert_allclose(
         np.asarray(ag[:16]), np.concatenate([XG[0], XG[4]])
     )  # model-col 0 gathers data-ranks {0,4}
+    np.testing.assert_allclose(
+        np.asarray(sc).reshape(8, 8), exp_scan, rtol=tol
+    )  # inclusive prefix over linearized world rank
+    np.testing.assert_allclose(
+        np.asarray(ex).reshape(8, 8), exp_exscan, rtol=tol
+    )  # exclusive prefix; rank 0 keeps its input (ABI convention)
+    np.testing.assert_allclose(
+        np.asarray(a2av), np.asarray(a2a), rtol=1e-6
+    )  # uniform-count alltoallv == alltoall
     print(f"  {impl}: OK")
 
 # ---------------------------------------------------------------------------
@@ -90,8 +109,8 @@ def step_raw(g):
 
 x = jnp.ones((8, 16))
 spec = P(("data", "model"))
-f_abi = jax.jit(jax.shard_map(step_abi, mesh=mesh, in_specs=spec, out_specs=P()))
-f_raw = jax.jit(jax.shard_map(step_raw, mesh=mesh, in_specs=spec, out_specs=P()))
+f_abi = jax.jit(shard_map(step_abi, mesh=mesh, in_specs=spec, out_specs=P()))
+f_raw = jax.jit(shard_map(step_raw, mesh=mesh, in_specs=spec, out_specs=P()))
 
 
 def norm_hlo(txt: str) -> str:

@@ -1,8 +1,8 @@
 """Datatype registry + status object tests (paper §5.1–§5.3, §6.1)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from _hyp import given, settings, st
 
 import jax.numpy as jnp
 

@@ -1,8 +1,8 @@
 """Handle-code tests: bit-for-bit fidelity to the paper's Appendix A, plus
 hypothesis property tests on the code's invariants."""
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from _hyp import given, settings, st
 
 from repro.core import handles as H
 from repro.core import constants as K

@@ -13,11 +13,11 @@ sys.path.insert(0, "src")
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 import repro.core as C
+from repro.core.compat import make_mesh
 from repro.runtime.dist import make_dist
 from repro.runtime.pipeline import pipeline_forward, make_pp_dist
 
-mesh = jax.make_mesh((4, 1), ("pod", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((4, 1), ("pod", "model"))
 dist = make_dist(mesh, impl="paxi")
 dist = make_pp_dist(dist, "pod")
 
@@ -38,9 +38,10 @@ x = jax.random.normal(jax.random.PRNGKey(1), (M, MB, D))
 def pipe(w, xm):
     return pipeline_forward(layer_stack_fn, w, xm, dist=dist, stage_axis="pod")
 
-f = jax.jit(jax.shard_map(pipe, mesh=mesh,
-                          in_specs=(P("pod"), P()), out_specs=P(),
-                          axis_names={"pod"}, check_vma=False))
+from repro.core.compat import shard_map
+f = jax.jit(shard_map(pipe, mesh=mesh,
+                      in_specs=(P("pod"), P()), out_specs=P(),
+                      axis_names={"pod"}, check_vma=False))
 out = f(W, x)
 
 # reference: run all stages sequentially, no pipeline
@@ -57,7 +58,7 @@ def loss_pipe(w, xm):
     return pipelined_loss(layer_stack_fn, w, xm, lambda y: jnp.sum(y * y),
                           dist=dist, stage_axis="pod")
 
-g_pipe_f = jax.jit(jax.shard_map(
+g_pipe_f = jax.jit(shard_map(
     lambda w, xm: jax.grad(loss_pipe)(w, xm),
     mesh=mesh, in_specs=(P("pod"), P()), out_specs=P("pod"),
     axis_names={"pod"}, check_vma=False))
