@@ -4,84 +4,187 @@ The MPI measurement (osu_mbw_mr) counts host-side issue rate of small
 messages.  The JAX analogue of the per-call software path is the *dispatch
 cost of the ABI layer at trace time* (handle checks, conversions,
 interposition — everything between user code and the lax collective).  We
-report calls/second tracing a 200-call chain of 8-byte all-reduces through:
+report calls/second tracing an ``N_CALLS``-call chain of 8-byte
+all-reduces through:
 
-* raw ``jax.lax`` (no ABI)           — the hardware-path baseline,
+* raw ``jax.lax`` (no ABI)           — the hardware-path baseline.  NB the
+  raw chain emits one psum eqn per call while the ABI's SELF-comm
+  allreduce is the group-of-one identity (no eqn), so ``rel_raw`` mixes
+  jax's per-eqn tracing cost into the comparison; the regression gate
+  therefore uses the specialized/generic ratio below, and the structural
+  zero-overhead claim is checked over COMM_WORLD where both sides emit
+  the same collective,
 * ``paxi``        (native ABI)       — Table 1 row "MPICH dev ABI",
+* ``paxi_generic`` — the *unspecialized* class-level dispatch (table lookup
+  + tools branch + out-of-line handle checks per call); the
+  ``paxi``/``paxi_generic`` ratio isolates what init-time specialization
+  buys, independent of machine speed,
 * ``muk:paxi``    (trampoline+native)— Table 1 row "+ Mukautuva",
 * ``ompix``       (trampoline+foreign),
 
 plus the zero-overhead *structural* claim: the paxi-traced jaxpr has exactly
 the same equation count as the raw-lax jaxpr.
+
+Measurement notes (hard-won):
+
+* ``jax.make_jaxpr`` caches by function identity, so every rep must trace a
+  **fresh closure** — re-tracing the same function object measures the
+  tracing cache, not dispatch;
+* the chain is long (1000 calls) so per-call dispatch dominates the fixed
+  per-trace overhead;
+* reps are interleaved across all chains and the per-chain best is taken,
+  which cancels sustained load shifts on shared runners.
+
+Rows are (name, value, unit, note); ``benchmarks/run.py`` collects them
+into ``BENCH_dispatch.json``.
 """
 from __future__ import annotations
 
+import gc
 import time
 
 import jax
 import jax.numpy as jnp
 
 import repro.core as C
+from repro.core import abi_spec
 from repro.core.compat import make_mesh
 
-N_CALLS = 200
-N_REPS = 5
+N_CALLS = 1000
+N_REPS = 15
 
 
 def _mesh():
     return make_mesh((1, 1), ("data", "model"))
 
 
-def _rate(make_chain) -> float:
-    """Trace-time calls/sec of a chained collective program."""
-    x = jnp.ones((1,), jnp.float64 if False else jnp.float32)
-    best = float("inf")
-    for _ in range(N_REPS):
-        t0 = time.perf_counter()
-        jax.make_jaxpr(make_chain)(x)
-        best = min(best, time.perf_counter() - t0)
-    return N_CALLS / best
+def measure(factories: dict) -> dict[str, float]:
+    """Interleaved best-of-reps trace rate for {name: chain_factory}.
+
+    Each factory() returns a *new* function object tracing an
+    ``N_CALLS``-call chain (fresh per rep — see module docstring).
+    """
+    x = jnp.ones((1,), jnp.float32)
+    for f in factories.values():  # warm imports/caches off the clock
+        jax.make_jaxpr(f())(x)
+    best = {name: float("inf") for name in factories}
+    names = list(factories)
+    gc_was_enabled = gc.isenabled()
+    gc.disable()  # collector pauses would land on random chains
+    try:
+        for rep in range(N_REPS):
+            # rotate the round order so systematic warm-up/allocator drift
+            # does not always tax the same chain
+            for name in names[rep % len(names):] + names[:rep % len(names)]:
+                chain = factories[name]()
+                t0 = time.perf_counter()
+                jax.make_jaxpr(chain)(x)
+                best[name] = min(best[name], time.perf_counter() - t0)
+            gc.collect(0)  # drain young garbage between rounds, off the clock
+    finally:
+        if gc_was_enabled:
+            gc.enable()
+    return {name: N_CALLS / dt for name, dt in best.items()}
 
 
-def run() -> list[tuple[str, float, str]]:
-    mesh = _mesh()
-    rows = []
+def _direct_ns(call, x, number: int = 50000, rounds: int = 9) -> float:
+    """Best-of-rounds direct-call cost in ns (gc paused, callable hoisted)."""
+    op, comm = C.PAX_SUM, C.PAX_COMM_SELF
+    call(x, op, comm)  # warm
+    gc_was_enabled = gc.isenabled()
+    gc.disable()
+    try:
+        best = float("inf")
+        for _ in range(rounds):
+            t0 = time.perf_counter_ns()
+            for _ in range(number):
+                call(x, op, comm)
+            best = min(best, time.perf_counter_ns() - t0)
+            gc.collect(0)
+    finally:
+        if gc_was_enabled:
+            gc.enable()
+    return best / number
 
-    def raw_chain(x):
-        for _ in range(N_CALLS):
-            x = jax.lax.psum(x, ())  # axis-free sum == SELF-comm allreduce
-        return x
 
-    base_rate = _rate(raw_chain)
-    rows.append(("message_rate_raw_lax", 1e6 / base_rate, f"calls/s={base_rate:,.0f}"))
-
-    impl_rows = []
-    for impl in ("paxi", "ring", "muk:paxi", "ompix"):
-        abi = C.pax_init(mesh, impl=impl)
-
-        def abi_chain(x, abi=abi):
+def _abi_factory(abi):
+    def factory():
+        def chain(x):
             for _ in range(N_CALLS):
                 x = abi.allreduce(x, C.PAX_SUM, C.PAX_COMM_SELF)
             return x
+        return chain
+    return factory
 
-        r = _rate(abi_chain)
-        impl_rows.append((impl, r))
-        rows.append((f"message_rate_{impl.replace(':', '_')}",
-                     1e6 / r, f"calls/s={r:,.0f} rel={r / base_rate:.2f}"))
 
-    # structural zero-overhead claim (Table 1: MPICH ABI == MPICH)
+def run() -> list[tuple[str, float, str, str]]:
+    mesh = _mesh()
+    rows = []
+
+    def raw_factory():
+        def chain(x):
+            for _ in range(N_CALLS):
+                x = jax.lax.psum(x, ())  # axis-free sum == SELF-comm allreduce
+            return x
+        return chain
+
+    factories = {"raw_lax": raw_factory}
+    for impl in ("paxi", "ring", "muk:paxi", "ompix"):
+        factories[impl.replace(":", "_")] = _abi_factory(C.pax_init(mesh, impl=impl))
+
+    # unspecialized class-level dispatch: a paxi context with its
+    # per-instance compiled entry points removed, so ``abi.allreduce``
+    # resolves to the generic class method — the pre-specialization
+    # per-call path, with the same attribute-resolution cost as the
+    # specialized chain (a fair, load-independent ratio)
     abi = C.pax_init(mesh, impl="paxi")
+    generic_abi = C.pax_init(mesh, impl="paxi")
+    for entry in abi_spec.ABI_TABLE:
+        generic_abi.__dict__.pop(entry.name, None)
+        generic_abi.__dict__.pop(f"i{entry.name}", None)
+    factories["paxi_generic"] = _abi_factory(generic_abi)
+
+    rates = measure(factories)
+    base_rate = rates.pop("raw_lax")
+    rows.append(("message_rate_raw_lax", base_rate, "calls/s",
+                 f"us_per_call={1e6 / base_rate:.3f}"))
+    for name, r in rates.items():
+        rows.append((f"message_rate_{name}", r, "calls/s",
+                     f"us_per_call={1e6 / r:.3f} rel_raw={r / base_rate:.2f}"))
+
+    # Direct-call dispatch cost (no tracing around the measurement): the
+    # stable number the CI regression gate uses.  Trace-context timings of
+    # the same code paths swing with allocator/tracer state; the dispatch
+    # cost itself is host-side Python and is measured exactly by a direct
+    # call loop (hoisted callables, best-of-rounds).
+    x8 = jnp.ones((1,), jnp.float32)
+    spec_ns = _direct_ns(abi.allreduce, x8)          # specialized function
+    gen_ns = _direct_ns(generic_abi.allreduce, x8)   # bound generic method
+    rows.append(("dispatch_ns_specialized", spec_ns, "ns",
+                 "direct-call specialized entry point"))
+    rows.append(("dispatch_ns_generic", gen_ns, "ns",
+                 "direct-call class-level generic method"))
+    rows.append(("dispatch_specialization_speedup", gen_ns / spec_ns, "x",
+                 f"specialized {spec_ns:.0f}ns vs generic {gen_ns:.0f}ns per call"))
+
+    # structural zero-overhead claim (Table 1: MPICH ABI == MPICH),
+    # compared over a communicator with real axes so both sides emit an
+    # actual collective (over SELF both the ABI and _lax.psum are the
+    # identity and trace nothing — that would compare nothing to nothing)
+    from jax.sharding import PartitionSpec as P
 
     def abi_one(x):
-        return abi.allreduce(x, C.PAX_SUM, C.PAX_COMM_SELF)
+        return abi.allreduce(x, C.PAX_SUM, C.PAX_COMM_WORLD)
 
     def raw_one(x):
-        return jax.lax.psum(x, ())
+        return jax.lax.psum(x, ("data", "model"))
 
-    n_abi = len(jax.make_jaxpr(abi_one)(jnp.ones(4)).eqns)
-    n_raw = len(jax.make_jaxpr(raw_one)(jnp.ones(4)).eqns)
-    rows.append(("abi_jaxpr_eqn_overhead", float(n_abi - n_raw),
-                 f"eqns abi={n_abi} raw={n_raw} (0 == zero-overhead)"))
+    f_abi = abi.shard_region(abi_one, in_specs=P(), out_specs=P())
+    f_raw = abi.shard_region(raw_one, in_specs=P(), out_specs=P())
+    n_abi = len(jax.make_jaxpr(f_abi)(jnp.ones(4)).eqns)
+    n_raw = len(jax.make_jaxpr(f_raw)(jnp.ones(4)).eqns)
+    rows.append(("abi_jaxpr_eqn_overhead", float(n_abi - n_raw), "eqns",
+                 f"abi={n_abi} raw={n_raw} over COMM_WORLD (0 == zero-overhead)"))
     return rows
 
 

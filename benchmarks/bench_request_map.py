@@ -1,11 +1,19 @@
 """Paper §6.2 worst case: ``testall`` over many outstanding requests while
-nonblocking alltoallw requests hold converted-handle temporaries in the
-request map ("every call to MPI_Testall will look up every request in the
-map").  We measure testall cost vs. the number of outstanding requests and
-the per-request alltoallw conversion overhead through Mukautuva.
+nonblocking alltoallw requests hold converted-handle temporaries ("every
+call to MPI_Testall will look up every request in the map").
+
+The PR-2 request pool replaces the map with a free-list slab: liveness is
+one array index + generation compare per request, so the per-request scan
+cost must stay flat as the number of outstanding requests grows from 10 to
+1000 (the acceptance criterion checks ±20%).  We measure the flag-scan part
+of ``testall`` (not completion), the per-request cost at each population,
+and the alltoallw conversion overhead through Mukautuva.
+
+Rows are (name, value, unit, note) for ``BENCH_dispatch.json``.
 """
 from __future__ import annotations
 
+import statistics
 import time
 
 import jax
@@ -19,25 +27,59 @@ def _mesh():
     return make_mesh((1, 1), ("data", "model"))
 
 
-def run() -> list[tuple[str, float, str]]:
+def run() -> list[tuple[str, float, str, str]]:
     mesh = _mesh()
     rows = []
     x = jnp.ones((8,), jnp.float32)
 
+    POPULATIONS = (10, 100, 1000)
+    ROUNDS = 11
+
     for impl in ("paxi", "ompix"):
-        for n_out in (10, 100, 1000):
-            abi = C.pax_init(mesh, impl=impl)
-            reqs = [abi.iallreduce(x, C.PAX_SUM, C.PAX_COMM_SELF) for _ in range(n_out)]
-            # time the flag-scan part of testall (not completion)
-            t0 = time.perf_counter_ns()
-            reps = 200
-            for _ in range(reps):
-                flag = all((r.handle in abi._requests) or r.done for r in reqs)
-            scan_ns = (time.perf_counter_ns() - t0) / reps
-            assert flag
+        abi = C.pax_init(mesh, impl=impl)
+        scan = abi._scan_ready
+        pools = {n: [abi.iallreduce(x, C.PAX_SUM, C.PAX_COMM_SELF)
+                     for _ in range(n)] for n in POPULATIONS}
+        # interleaved rounds over every population (plus the empty scan,
+        # whose cost is the fixed per-call overhead).  The flatness ratio is
+        # computed *within each round* — measurements milliseconds apart, so
+        # a load burst on a shared runner taxes both sides of the ratio —
+        # and the median round is reported; per-population costs are
+        # best-of-rounds.  Subtracting the fixed cost leaves the marginal
+        # per-request cost the flatness criterion is about.
+        best = {n: float("inf") for n in (0,) + POPULATIONS}
+        round_ratios = []
+        for _ in range(ROUNDS):
+            t_round = {}
+            for n in best:
+                reqs = pools.get(n, [])
+                reps = 200 if n <= 100 else 50
+                t0 = time.perf_counter_ns()
+                for _ in range(reps):
+                    flag = scan(reqs)
+                t_round[n] = (time.perf_counter_ns() - t0) / reps
+                best[n] = min(best[n], t_round[n])
+                assert flag
+            round_ratios.append(((t_round[1000] - t_round[0]) / 1000)
+                                / ((t_round[10] - t_round[0]) / 10))
+        fixed = best[0]
+        per_request = {n: (best[n] - fixed) / n for n in POPULATIONS}
+        for n in POPULATIONS:
+            rows.append((f"testall_scan_{impl}_{n}req", best[n] / 1000.0,
+                         "us", f"marginal_ns_per_request={per_request[n]:.1f}"))
+        flat = statistics.median(round_ratios)
+        rows.append((f"testall_per_request_flatness_{impl}", flat, "x",
+                     "median per-round (1000req/10req) marginal cost ratio"))
+        for reqs in pools.values():
             abi.waitall(reqs)
-            rows.append((f"testall_scan_{impl}_{n_out}req", scan_ns / 1000.0,
-                         f"ns={scan_ns:.0f} per testall"))
+        assert abi.outstanding_requests == 0
+
+    # request-pool slot reuse: issue/wait churn must not grow the pool
+    abi = C.pax_init(mesh, impl="paxi")
+    for _ in range(2000):
+        abi.wait(abi.iallreduce(x, C.PAX_SUM, C.PAX_COMM_SELF))
+    rows.append(("request_pool_slots_after_2000_churn", float(len(abi._req_pool)),
+                 "slots", f"issued={abi.requests_issued} (free-list reuse)"))
 
     # alltoallw conversion cost through Mukautuva (vector handle conversion)
     abi = C.pax_init(mesh, impl="ompix")
@@ -57,7 +99,8 @@ def run() -> list[tuple[str, float, str]]:
     for _ in range(reps):
         jax.make_jaxpr(f)(blocks)
     per = (time.perf_counter() - t0) / reps * 1e6
-    rows.append(("ialltoallw_muk_trace", per, "us per traced op incl conversions"))
+    rows.append(("ialltoallw_muk_trace", per, "us",
+                 "per traced op incl conversions"))
     return rows
 
 

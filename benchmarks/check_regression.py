@@ -1,0 +1,84 @@
+"""CI gate: compare a fresh ``BENCH_dispatch.json`` against the checked-in
+baseline and fail on dispatch-path regressions.
+
+    PYTHONPATH=src python benchmarks/check_regression.py \
+        [--current BENCH_dispatch.json] \
+        [--baseline benchmarks/baseline_dispatch.json]
+
+Two checks, both robust to absolute machine-speed differences between the
+baseline box and the CI runner:
+
+* **dispatch gate**: the specialized/generic direct-call dispatch ratio
+  (``dispatch_specialization_speedup``, both sides measured in one
+  process, one load state, one Python build) must not fall more than the
+  tolerance below the checked-in baseline's ratio (default 30%), and must
+  never drop below 1.0 — the specialized path being no faster than the
+  generic path means init-time specialization is broken outright.
+  Absolute calls/s and raw-lax normalization were tried and rejected: the
+  former fails on any different host, the latter is dominated by
+  jax-internal per-eqn tracing cost whose load sensitivity swamps a 30%
+  band.
+* **request-scan flatness**: per-request ``testall`` scan cost at 1000
+  outstanding requests must stay within ±20% of the 10-request cost (the
+  pool's O(1) contract), as recorded by the run itself.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _index(records: list[dict]) -> dict[str, float]:
+    return {r["name"]: r["value"] for r in records}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", default="BENCH_dispatch.json")
+    ap.add_argument("--baseline", default="benchmarks/baseline_dispatch.json")
+    ap.add_argument("--tolerance", type=float, default=0.30,
+                    help="allowed relative message-rate regression")
+    ap.add_argument("--flatness", type=float, default=0.20,
+                    help="allowed request-scan per-request drift 10->1000")
+    args = ap.parse_args(argv)
+
+    cur = _index(json.load(open(args.current)))
+    base = _index(json.load(open(args.baseline)))
+    failures = []
+
+    # -- dispatch gate (specialized/generic ratio of the same run) ---------
+    try:
+        cur_rel = cur["dispatch_specialization_speedup"]
+        base_rel = base["dispatch_specialization_speedup"]
+        floor = max(base_rel * (1.0 - args.tolerance), 1.0)
+        line = (f"specialized/generic dispatch ratio: current={cur_rel:.3f} "
+                f"baseline={base_rel:.3f} floor={floor:.3f}")
+        if cur_rel < floor:
+            failures.append("REGRESSION " + line)
+        else:
+            print("OK " + line)
+    except KeyError as e:
+        failures.append(f"missing dispatch record: {e}")
+
+    # -- request-scan flatness (from the current run alone) ----------------
+    for impl in ("paxi", "ompix"):
+        name = f"testall_per_request_flatness_{impl}"
+        if name not in cur:
+            failures.append(f"missing record: {name}")
+            continue
+        flat = cur[name]
+        lo, hi = 1.0 - args.flatness, 1.0 + args.flatness
+        line = f"{name}={flat:.3f} (allowed {lo:.2f}..{hi:.2f})"
+        if not lo <= flat <= hi:
+            failures.append("REGRESSION " + line)
+        else:
+            print("OK " + line)
+
+    for f in failures:
+        print(f, file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,22 +1,40 @@
 """Benchmark harness — one section per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run
+    PYTHONPATH=src python -m benchmarks.run [--out BENCH_dispatch.json]
 
-Prints ``name,us_per_call,derived`` CSV rows:
+Prints human-readable rows and writes every measurement to a
+machine-readable ``BENCH_dispatch.json``: a list of ``{"name", "value",
+"unit", "note", "section"}`` records (the perf trajectory CI accumulates
+and gates on — see ``benchmarks/check_regression.py``).
 
 * §6.1   type_size throughput (encoded vs lookup)          bench_type_size
 * Table 1 message rate with/without ABI layers             bench_message_rate
-* §6.2   Mukautuva request-map worst case                  bench_request_map
+* §6.2   request-pool worst case                           bench_request_map
 * suppl. handle-code operation costs                       bench_handles
 * §Roofline summary from the dry-run artifacts             roofline
+
+Sections may return rows as ``(name, value, unit, note)`` or the legacy
+``(name, us_per_call, derived)`` 3-tuple, normalized here.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import traceback
 
 
-def main() -> None:
+def _normalize(row) -> dict:
+    if len(row) == 4:
+        name, value, unit, note = row
+    else:  # legacy (name, us_per_call, derived)
+        name, value, note = row
+        unit = "us_per_call"
+    return {"name": str(name), "value": float(value), "unit": str(unit),
+            "note": str(note)}
+
+
+def collect() -> tuple[list[dict], int]:
     from benchmarks import (bench_handles, bench_message_rate,
                             bench_request_map, bench_type_size, roofline)
 
@@ -27,16 +45,32 @@ def main() -> None:
         ("handle_code", bench_handles),
         ("roofline", roofline),
     ]
-    print("name,us_per_call,derived")
+    records: list[dict] = []
     failures = 0
     for title, mod in sections:
         print(f"# --- {title}")
         try:
-            for name, us, derived in mod.run():
-                print(f"{name},{us:.4f},{derived}")
+            for row in mod.run():
+                rec = _normalize(row)
+                rec["section"] = title
+                records.append(rec)
+                print(f"{rec['name']},{rec['value']:.4f},{rec['unit']},{rec['note']}")
         except Exception:
             failures += 1
             traceback.print_exc()
+    return records, failures
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_dispatch.json",
+                    help="machine-readable output path")
+    args = ap.parse_args(argv)
+
+    records, failures = collect()
+    with open(args.out, "w") as f:
+        json.dump(records, f, indent=1)
+    print(f"# wrote {len(records)} records to {args.out}")
     if failures:
         sys.exit(1)
 

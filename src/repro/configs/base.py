@@ -72,6 +72,11 @@ class ParallelismConfig:
     grad_sync: str = "abi"            # "abi" explicit | "gspmd" implicit
     grad_compression: Optional[str] = None  # None | "bf16" | "int8"
     zero1: bool = True                # shard optimizer state over fsdp axes
+    #                                   (abi mode: explicit ZeRO-1 round trip
+    #                                   through the pooled nonblocking path
+    #                                   when init_state is given the dist)
+    zero1_buckets: int = 1            # nonblocking buckets per zero1 round
+    #                                   trip (must divide the padded shard)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -12,28 +12,41 @@ resolved entries, and exposes the standard functions.
 **Every per-entry-point method here is generated from the declarative
 spec**, not hand-written: the blocking methods, their ``i*`` nonblocking
 twins, the handle checks (from each argument's declared domain), and the
-byte-accounting info handed to tools.  Two dispatch paths are compiled per
-entry:
+byte-accounting info handed to tools.
 
-* a **zero-tool fast path** — handle checks + one dict lookup + the direct
-  backend call, no interposition loop and no payload-size computation
-  (``grad_sync`` drives this every training step);
-* the tool path — the PMPI chain (``before`` outer→inner, ``after``
-  inner→outer) with payload bytes computed per the entry's accounting rule.
+**Init-time specialization.**  Because negotiation resolves the whole
+function table once, nothing about the per-call path is dynamic after
+``pax_init`` — so :meth:`PaxABI._specialize` compiles one entry-point
+function *per context instance* that closes over the resolved backend
+callable and the attached tool chain directly.  The specialized zero-tool
+path is handle checks + the direct backend call: no ``self._table[name]``
+dict lookup, no ``if not self.tools`` branch, no bound-method re-resolution
+per call.  The tool path bakes the tool tuple (``before`` outer→inner,
+``after`` inner→outer) and the entry's byte-accounting rule into the
+closure.  Attaching or detaching a tool (:meth:`attach_tool` /
+:meth:`detach_tool`) recompiles the entry points — tool membership changes
+are init-frequency events, per-call dispatch is not.  The generic
+spec-generated methods remain on the class as the uninstantiated fallback.
 
-To add an ABI entry point: add one row to ``abi_spec.ABI_TABLE`` and
-implement the method on the backends that support it.  The ABI methods,
-``i*`` variants, capability negotiation, and Mukautuva translation wrappers
-are all derived.
-
-Nonblocking operations return :class:`Request` handles.  The value is
-produced eagerly in dataflow terms (XLA schedules collectives
-asynchronously; on TPU the latency-hiding scheduler overlaps them with
-compute), and ``wait``/``test`` introduce the consumer dependency — the MPI
-overlap idiom, preserved.  The per-request temporary state (e.g. converted
-datatype vectors for ``alltoallw``) lives in the request map exactly like
-Mukautuva's ``std::map`` (§6.2), including the worst case where ``testall``
-scans many outstanding requests.
+**Free-list request pool.**  Nonblocking operations return
+:class:`Request` handles.  The value is produced eagerly in dataflow terms
+(XLA schedules collectives asynchronously; on TPU the latency-hiding
+scheduler overlaps them with compute), and ``wait``/``test`` introduce the
+consumer dependency — the MPI overlap idiom, preserved.  Requests live in a
+slab of pooled slots rather than the ever-growing map of Mukautuva's
+``std::map`` worst case (§6.2): the 24-bit user-handle index field encodes
+``(generation << 14) | slot``, so completion checks are one array index
+plus a generation compare (O(1), no hashing), a freed slot's generation
+bump makes use-after-wait an *exactly detected* ``PAX_ERR_REQUEST`` (until
+the 10-bit generation wraps, i.e. the same slot is reused 1024 times), and
+the handle space never exhausts — the old monotonically increasing index
+made ``make_user_handle`` raise after 2^24 nonblocking calls, mid-training.
+Slots also recycle their ``Request`` objects in place, so a steady-state
+workload (e.g. ``zero1_step``'s bucketed round trip) reuses one
+preallocated request batch per step instead of allocating per bucket.
+Per-request temporary state (converted datatype vectors for ``alltoallw``)
+rides in the pooled request exactly like Mukautuva's map entries, freed at
+completion.
 """
 from __future__ import annotations
 
@@ -59,9 +72,16 @@ from .ops import OpRegistry
 from .status import Status
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False, slots=True)
 class Request:
-    """An ABI request handle plus its completion payload."""
+    """An ABI request handle plus its completion payload.
+
+    ``eq=False``: requests are identity objects (the pool recycles them in
+    place), so equality and hashing are object identity — the default
+    field-wise dataclass ``__eq__`` combined with a handle-based ``__hash__``
+    would break the hash/eq contract.  ``slots=True`` keeps the pooled
+    objects compact so a 1000-request ``testall`` scan stays cache-resident.
+    """
 
     handle: int
     value: Any = None
@@ -71,11 +91,22 @@ class Request:
     temp_state: Any = None
     on_complete: Optional[Callable[["Request"], Any]] = None
 
-    def __hash__(self) -> int:
-        return self.handle
-
 
 REQUEST_NULL = Request(H.PAX_REQUEST_NULL, done=True)
+
+# ---------------------------------------------------------------------------
+# Request-pool handle layout: the 24-bit user index field splits into
+# (generation << 14) | slot.  16384 simultaneous outstanding requests,
+# 1024 generations per slot before a stale handle can alias.
+# ---------------------------------------------------------------------------
+_REQ_SLOT_BITS = 14
+_REQ_SLOT_MASK = (1 << _REQ_SLOT_BITS) - 1
+_REQ_MAX_SLOTS = 1 << _REQ_SLOT_BITS
+_REQ_GEN_BITS = H._USER_KIND_SHIFT - _REQ_SLOT_BITS
+_REQ_GEN_MASK = (1 << _REQ_GEN_BITS) - 1
+_REQ_HANDLE_BASE = H.make_user_handle(H.HandleKind.REQUEST, 0)
+_USER_INDEX_MASK = H._USER_INDEX_MASK
+_UKS = H._USER_KIND_SHIFT  # shift that exposes a user handle's kind bits
 
 
 class PaxABI:
@@ -105,13 +136,70 @@ class PaxABI:
         self.tools = list(tools)
         for t in self.tools:
             t.attach(self)
-        self._requests: dict[int, Request] = {}
-        self._next_request = 0
+        # free-list request pool (see module docstring)
+        self._req_pool: list[Request] = []
+        self._req_gen: list[int] = []
+        self._req_free: list[int] = []
+        self._req_live = 0
+        self.requests_issued = 0  # lifetime stat; NOT part of any handle
         self.finalized = False
+        # compile the per-instance specialized entry points (the init-time
+        # half of the paper's "dispatch costs nothing per call" claim)
+        self._specialize()
 
     # ------------------------------------------------------------------
-    # tool-path dispatch (PMPI chain); the zero-tool fast path is inlined
-    # into each generated method and never reaches this.
+    # init-time specialization
+    # ------------------------------------------------------------------
+    def _specialize(self) -> None:
+        """(Re)compile per-context entry points.
+
+        Called at init and again on every :meth:`attach_tool` /
+        :meth:`detach_tool` — the only events that change what a call must
+        do.  The compiled functions shadow the generic class methods via
+        instance attributes; the code objects are cached per
+        (entry, tooled?) so respecialization is an exec-with-new-globals,
+        not a recompile.
+        """
+        tools = tuple(self.tools)
+        rtools = tuple(reversed(tools))
+        tooled = bool(tools)
+        for entry in abi_spec.ABI_TABLE:
+            env = dict(_GEN_ENV)
+            env["_impl"] = self._table[entry.name]
+            env["_abi"] = self
+            env["_tools"] = tools
+            env["_rtools"] = rtools
+            fn = _compile_cached(
+                _SPEC_BLOCKING_SRC, (entry.name, tooled),
+                lambda: _spec_blocking_src(entry, tooled), entry.name, env,
+            )
+            object.__setattr__(self, entry.name, fn)
+            if entry.nonblocking:
+                ienv = {
+                    "_blocking": fn,
+                    "_new_request": self._new_request,
+                    "_backend": self.backend,
+                }
+                ifn = _compile_cached(
+                    _SPEC_NONBLOCKING_SRC, (entry.name, False),
+                    lambda: _spec_nonblocking_src(entry), f"i{entry.name}", ienv,
+                )
+                object.__setattr__(self, f"i{entry.name}", ifn)
+
+    def attach_tool(self, tool) -> None:
+        """Attach an interposition tool and respecialize the dispatch path."""
+        tool.attach(self)
+        self.tools.append(tool)
+        self._specialize()
+
+    def detach_tool(self, tool) -> None:
+        """Detach a tool; the zero-tool fast path returns when none remain."""
+        self.tools.remove(tool)
+        self._specialize()
+
+    # ------------------------------------------------------------------
+    # tool-path dispatch (PMPI chain) for the generic class-level methods;
+    # specialized instance entry points inline this loop.
     # ------------------------------------------------------------------
     def _dispatch_tools(self, fname: str, impl: Callable, args: tuple, info: dict):
         for t in self.tools:
@@ -123,8 +211,8 @@ class PaxABI:
 
     # -- init/finalize ----------------------------------------------------
     def finalize(self) -> None:
-        if self._requests:
-            raise PaxError(PAX_ERR_REQUEST, f"{len(self._requests)} outstanding requests")
+        if self._req_live:
+            raise PaxError(PAX_ERR_REQUEST, f"{self._req_live} outstanding requests")
         self.finalized = True
 
     # -- identity / registration (not per-collective dispatch) -------------
@@ -163,23 +251,69 @@ class PaxABI:
 
     # -- nonblocking request plumbing ---------------------------------------
     def _new_request(self, value, kind: str, temp_state=None, on_complete=None) -> Request:
-        handle = H.make_user_handle(H.HandleKind.REQUEST, self._next_request)
-        self._next_request += 1
-        req = Request(handle, value, kind, False, temp_state, on_complete)
-        self._requests[handle] = req
+        if self._req_free:
+            slot = self._req_free.pop()
+            req = self._req_pool[slot]
+            req.handle = _REQ_HANDLE_BASE | (self._req_gen[slot] << _REQ_SLOT_BITS) | slot
+            req.value = value
+            req.kind = kind
+            req.done = False
+            req.temp_state = temp_state
+            req.on_complete = on_complete
+        else:
+            slot = len(self._req_pool)
+            if slot >= _REQ_MAX_SLOTS:
+                raise PaxError(
+                    PAX_ERR_REQUEST,
+                    f"request pool exhausted: {_REQ_MAX_SLOTS} outstanding "
+                    "nonblocking requests (wait/test some before issuing more)",
+                )
+            req = Request(_REQ_HANDLE_BASE | slot, value, kind, False,
+                          temp_state, on_complete)
+            self._req_pool.append(req)
+            self._req_gen.append(0)
+        self._req_live += 1
+        self.requests_issued += 1
         return req
+
+    def _request_is_live(self, handle: int) -> bool:
+        """O(1) liveness: slot index + generation compare, no hashing."""
+        if not handle & H._USER_BIT:
+            return False
+        idx = handle & _USER_INDEX_MASK
+        slot = idx & _REQ_SLOT_MASK
+        return slot < len(self._req_gen) and self._req_gen[slot] == idx >> _REQ_SLOT_BITS
+
+    def _retire(self, handle: int) -> None:
+        """Free the handle's slot; bump generation so the handle goes stale."""
+        idx = handle & _USER_INDEX_MASK
+        slot = idx & _REQ_SLOT_MASK
+        self._req_gen[slot] = (self._req_gen[slot] + 1) & _REQ_GEN_MASK
+        self._req_free.append(slot)
+        self._req_live -= 1
+        pooled = self._req_pool[slot]
+        if pooled.handle == handle and not pooled.done:
+            # completion arrived through a different Request object carrying
+            # a live handle: retire the pooled twin too so nothing leaks
+            pooled.done = True
+            pooled.value = pooled.temp_state = pooled.on_complete = None
 
     # -- completion -----------------------------------------------------------
     def wait(self, request: Request, status: Optional[Status] = None):
         if request.handle == H.PAX_REQUEST_NULL:
             return None
-        live = self._requests.pop(request.handle, None)
-        if live is None and not request.done:
-            raise PaxError(PAX_ERR_REQUEST, "unknown or already-completed request")
-        request.done = True
-        if request.on_complete is not None:
-            request.value = request.on_complete(request)
-        request.temp_state = None  # free converted vectors
+        if not request.done:
+            if not self._request_is_live(request.handle):
+                raise PaxError(
+                    PAX_ERR_REQUEST,
+                    "stale, unknown or already-completed request "
+                    "(use-after-wait is detected by the generation check)",
+                )
+            request.done = True  # mark first: _retire must see the twin live
+            self._retire(request.handle)
+            if request.on_complete is not None:
+                request.value = request.on_complete(request)
+            request.temp_state = None  # free converted vectors
         if status is not None:
             status.ERROR = PAX_SUCCESS
         return request.value
@@ -188,8 +322,8 @@ class PaxABI:
         """Nonblocking completion check.  In dataflow execution the value is
         always ready once traced, so test == wait that also reports flag=True;
         the cost that matters (and that bench_request_map measures) is the
-        request-map lookup."""
-        if request.handle not in self._requests and not request.done:
+        request liveness check — now a slot index, not a map lookup."""
+        if not request.done and not self._request_is_live(request.handle):
             raise PaxError(PAX_ERR_REQUEST, "unknown request")
         return True, self.wait(request, status)
 
@@ -197,16 +331,31 @@ class PaxABI:
         return [self.wait(r, None if statuses is None else statuses[i])
                 for i, r in enumerate(requests)]
 
+    def _scan_ready(self, requests: Sequence[Request]) -> bool:
+        """The testall flag scan: N array-index + generation-compares, flat
+        per request regardless of how many are outstanding (what
+        bench_request_map measures)."""
+        gens = self._req_gen
+        for r in requests:
+            if r.done:
+                continue
+            h = r.handle
+            idx = h & _USER_INDEX_MASK
+            slot = idx & _REQ_SLOT_MASK
+            if (not h & H._USER_BIT or slot >= len(gens)
+                    or gens[slot] != idx >> _REQ_SLOT_BITS):
+                return False
+        return True
+
     def testall(self, requests: Sequence[Request], statuses=None):
-        """The §6.2 worst case: every call scans the request map."""
-        flag = all((r.handle in self._requests) or r.done for r in requests)
-        if not flag:
+        """The §6.2 worst case, de-fanged by the pool (see _scan_ready)."""
+        if not self._scan_ready(requests):
             return False, None
         return True, self.waitall(requests, statuses)
 
     @property
     def outstanding_requests(self) -> int:
-        return len(self._requests)
+        return self._req_live
 
     # -- convenience: run a function in a manual-collective region ----------
     def shard_region(self, fn: Callable, in_specs, out_specs, axis_names=None,
@@ -241,10 +390,12 @@ def _nbytes(x, abi: PaxABI, datatype: Optional[int] = None) -> int:
 # ---------------------------------------------------------------------------
 # Method generation from the declarative function table.
 #
-# For each spec entry we compile (via exec, namedtuple-style) a blocking
-# method with the entry's exact signature, and — when the entry declares a
-# nonblocking variant — its ``i*`` twin.  The blocking method contains the
-# precompiled zero-tool fast path.
+# Two layers of codegen share the helpers below:
+#
+# * class-level generic methods (installed once at import): correct for any
+#   instance, pay a table lookup + tools branch per call;
+# * instance-level specialized entry points (compiled by ``_specialize``):
+#   close over the resolved backend callable and tool tuple directly.
 # ---------------------------------------------------------------------------
 _GEN_ENV = {
     "_nbytes": _nbytes,
@@ -252,24 +403,53 @@ _GEN_ENV = {
     "PAX_ANY_TAG": PAX_ANY_TAG,
     "PAX_SUCCESS": PAX_SUCCESS,
     "_check": H.check_handle,
+    "_ZPK": H.ZERO_PAGE_KINDS,
 }
 _GEN_ENV.update({f"_HK_{k.name}": k for k in H.HandleKind})
+# a user handle's upper bits (handle >> kind-shift) are exactly
+# (USER_BIT >> shift) | kind — one shift+compare classifies it
+_GEN_ENV.update({
+    f"_UK_{k.name}": (H._USER_BIT >> H._USER_KIND_SHIFT) | int(k)
+    for k in H.HandleKind
+})
+
+
+def _check_lines(entry: abi_spec.AbiEntry, indent: str = "    ",
+                 inline: bool = False) -> list[str]:
+    """Handle checks / coercions from the declared argument domains.
+
+    With ``inline`` (the specialized path) the zero-page kind table and the
+    user-handle shift compare are emitted inline, so a well-formed handle
+    costs two integer compares and no function call; only a *failing* check
+    falls back to ``_check`` for the named-constant error message.
+    """
+    lines = []
+    for a in entry.args:
+        if a.kind == abi_spec.DATATYPE_VEC:
+            lines.append(f"{indent}{a.name} = tuple({a.name})")
+            lines.append(f"{indent}for _t in {a.name}:")
+            lines.append(f"{indent}    _check(_t, _HK_{a.check_kind.name})")
+        elif a.check_kind is not None:
+            k = a.check_kind.name
+            if inline:
+                lines.append(
+                    f"{indent}if {a.name} >> {_UKS} != _UK_{k} and ("
+                    f"{a.name} < 0 or {a.name} > 1023 "
+                    f"or _ZPK[{a.name}] is not _HK_{k}):"
+                )
+                lines.append(f"{indent}    _check({a.name}, _HK_{k})")
+            else:
+                lines.append(f"{indent}_check({a.name}, _HK_{k})")
+        elif a.kind in (abi_spec.PERM, abi_spec.COUNTS):
+            lines.append(f"{indent}{a.name} = tuple({a.name})")
+    return lines
 
 
 def _blocking_src(entry: abi_spec.AbiEntry) -> str:
     params = abi_spec.signature_src(entry, extra_kwargs=True)
     call_args = abi_spec.call_args_src(entry)
     lines = [f"def {entry.name}(self, {params}):"]
-    # handle checks / coercions from the declared argument domains
-    for a in entry.args:
-        if a.kind == abi_spec.DATATYPE_VEC:
-            lines.append(f"    {a.name} = tuple({a.name})")
-            lines.append(f"    for _t in {a.name}:")
-            lines.append(f"        _check(_t, _HK_{a.check_kind.name})")
-        elif a.check_kind is not None:
-            lines.append(f"    _check({a.name}, _HK_{a.check_kind.name})")
-        elif a.kind in (abi_spec.PERM, abi_spec.COUNTS):
-            lines.append(f"    {a.name} = tuple({a.name})")
+    lines += _check_lines(entry)
     lines.append(f"    _impl = self._table[{entry.name!r}]")
     lines.append("    if not self.tools:")
     lines.append(f"        _res = _impl({call_args})")
@@ -312,6 +492,87 @@ def _nonblocking_src(entry: abi_spec.AbiEntry) -> str:
         f"    return self._new_request(_value, 'i{entry.name}', temp_state=_temp)"
     )
     return "\n".join(lines) + "\n"
+
+
+# ---------------------------------------------------------------------------
+# Specialized (per-instance) entry-point sources.  No ``self``: the resolved
+# backend callable (``_impl``), the tool tuples and the context are free
+# variables bound into the function's globals at specialization time.
+# ---------------------------------------------------------------------------
+def _spec_blocking_src(entry: abi_spec.AbiEntry, tooled: bool) -> str:
+    params = abi_spec.signature_src(entry, extra_kwargs=True)
+    call_args = abi_spec.call_args_src(entry)
+    lines = [f"def {entry.name}({params}):"]
+    lines += _check_lines(entry, inline=True)
+    if not tooled:
+        # the fast path: checks + the direct backend call, nothing else
+        if not entry.fills_status:
+            lines.append(f"    return _impl({call_args})")
+            return "\n".join(lines) + "\n"
+        lines.append(f"    _res = _impl({call_args})")
+    else:
+        if entry.bytes_arg:
+            dt = ", datatype" if entry.dtype_size_kwarg else ""
+            bytes_expr = f"_nbytes({entry.bytes_arg}, _abi{dt})"
+            comm_arg = next(a.name for a in entry.args if a.kind == abi_spec.COMM)
+            lines.append(
+                f"    _info = {{'bytes': {bytes_expr}, 'comm_handle': {comm_arg}}}"
+            )
+        else:
+            lines.append("    _info = {}")
+        lines.append(f"    _args = ({call_args},)")
+        lines.append("    for _t in _tools:")
+        lines.append(f"        _t.before({entry.name!r}, _args, _info)")
+        lines.append(f"    _res = _impl({call_args})")
+        lines.append("    for _t in _rtools:")
+        lines.append(f"        _res = _t.after({entry.name!r}, _args, _info, _res)")
+    if entry.fills_status:
+        lines.append("    if status is not None:")
+        lines.append("        status.SOURCE = PAX_ANY_SOURCE")
+        lines.append("        status.TAG = PAX_ANY_TAG")
+        lines.append("        status.ERROR = PAX_SUCCESS")
+    lines.append("    return _res")
+    return "\n".join(lines) + "\n"
+
+
+def _spec_nonblocking_src(entry: abi_spec.AbiEntry) -> str:
+    params = abi_spec.signature_src(entry)
+    call_args = abi_spec.call_args_src(entry)
+    lines = [f"def i{entry.name}({params}):"]
+    if entry.temps:
+        lines.append(f"    _value = _blocking({call_args})")
+        lines.append(
+            f"    _temp = getattr(_backend, {entry.temps_attr!r}, None)"
+        )
+        lines.append(
+            f"    return _new_request(_value, 'i{entry.name}', temp_state=_temp)"
+        )
+    else:
+        lines.append(
+            f"    return _new_request(_blocking({call_args}), 'i{entry.name}')"
+        )
+    return "\n".join(lines) + "\n"
+
+
+# code-object caches: source depends only on (entry, tooled?), so each shape
+# compiles once per process and every context exec's it with its own globals
+_SPEC_BLOCKING_SRC: dict = {}
+_SPEC_NONBLOCKING_SRC: dict = {}
+
+
+def _compile_cached(cache: dict, key, src_fn, name: str, env: dict):
+    entry = cache.get(key)
+    if entry is None:
+        src = src_fn()
+        entry = (compile(src, f"<abi_spec:{name}:specialized>", "exec"), src)
+        cache[key] = entry
+    code, src = entry
+    ns: dict = {}
+    exec(code, env, ns)
+    fn = ns[name]
+    fn.__generated_src__ = src
+    fn.__qualname__ = f"PaxABI.{name} [specialized]"
+    return fn
 
 
 def _install_generated_methods() -> None:

@@ -44,7 +44,10 @@ class PaxiBackend(Backend):
 
     # -- handle domain ------------------------------------------------------
     def comm_axes(self, comm: int) -> tuple[str, ...]:
-        return self.comms.info(comm).axes
+        # hot path: the registration-time flat map; miss -> the checked
+        # metadata query, which raises the proper PAX_ERR_COMM
+        axes = self.comms.axes_by_handle.get(comm)
+        return axes if axes is not None else self.comms.info(comm).axes
 
     def op_fn(self, op: int) -> Callable:
         return self.ops.fn(op)
@@ -64,9 +67,13 @@ class PaxiBackend(Backend):
 
     # -- collectives ------------------------------------------------------
     def allreduce(self, x, op: int, comm: int):
-        axes = self.comm_axes(comm)
+        # heaviest-traffic entry point: comm_axes inlined (one dict index),
+        # group-of-one identity returned without touching the lax layer
+        axes = self.comms.axes_by_handle.get(comm)
+        if axes is None:
+            axes = self.comms.info(comm).axes
         if op == H.PAX_SUM:
-            return _lax.psum(x, axes)
+            return x if not axes else _lax.psum(x, axes)
         if op == H.PAX_MAX:
             return _lax.pmax(x, axes)
         if op == H.PAX_MIN:

@@ -48,12 +48,18 @@ class CommTable:
         self._mesh = mesh
         self._table: dict[int, CommInfo] = {}
         self._next_index = 0
+        # registration-time-maintained flat lookup (handle -> axes) for the
+        # per-call hot path: one dict index, no handle re-check, no CommInfo
+        # attribute chase.  `info()` stays the checked metadata query.
+        self.axes_by_handle: dict[int, tuple[str, ...]] = {}
         axes = tuple(mesh.axis_names) if mesh is not None else ()
         sizes = tuple(mesh.shape[a] for a in axes) if mesh is not None else ()
         self._table[H.PAX_COMM_WORLD] = CommInfo(
             H.PAX_COMM_WORLD, axes, sizes, "PAX_COMM_WORLD"
         )
         self._table[H.PAX_COMM_SELF] = CommInfo(H.PAX_COMM_SELF, (), (), "PAX_COMM_SELF")
+        self.axes_by_handle[H.PAX_COMM_WORLD] = axes
+        self.axes_by_handle[H.PAX_COMM_SELF] = ()
 
     @property
     def mesh(self) -> Optional[jax.sharding.Mesh]:
@@ -80,6 +86,7 @@ class CommTable:
         self._next_index += 1
         sizes = tuple(self._mesh.shape[a] for a in axes)
         self._table[handle] = CommInfo(handle, axes, sizes, name or f"axes{axes}")
+        self.axes_by_handle[handle] = axes
         return handle
 
     def comm_dup(self, handle: int) -> int:
@@ -87,12 +94,14 @@ class CommTable:
         new = H.make_user_handle(H.HandleKind.COMM, self._next_index)
         self._next_index += 1
         self._table[new] = dataclasses.replace(info, handle=new, name=info.name + "+dup")
+        self.axes_by_handle[new] = info.axes
         return new
 
     def comm_free(self, handle: int) -> None:
         if H.is_predefined(handle):
             raise PaxError(PAX_ERR_COMM, "cannot free a predefined communicator")
         self._table.pop(handle, None)
+        self.axes_by_handle.pop(handle, None)
 
 
 def comm_rank_traced(info: CommInfo):

@@ -21,6 +21,20 @@ Bit-for-bit mirror of the paper's proposal:
 
 User (non-predefined) handles live strictly above the zero page and also
 encode their kind, MPICH-style, so conversions and error checks stay O(1).
+
+**Zero-page kind table.**  Because the entire predefined constant space is
+10 bits, every per-call classification query over it can be answered by one
+index into a precomputed 1024-entry table instead of re-running the mask
+chain (and, for the ``0b01`` object page, a linear range scan) on every
+call.  :data:`ZERO_PAGE_KINDS` and :data:`ZERO_PAGE_IS_NULL` are those
+tables, materialized once at import from the same bit rules the paper
+specifies — the bitmask logic stays the *definition* (kept in
+``_classify_zero_page`` and verified against the table by the test suite);
+the table is the *dispatch* representation.  ``handle_kind``,
+``check_handle`` and ``is_null`` are therefore one list index for any
+predefined handle; user handles still decode by bitmask.  Init-time
+specialized layers (``PaxABI._specialize``, Mukautuva's predefined-handle
+pages) index these tables directly.
 """
 from __future__ import annotations
 
@@ -243,21 +257,15 @@ def is_predefined(handle: int) -> bool:
 
 
 # ---------------------------------------------------------------------------
-# Classification (pure bitmask logic, as the paper requires)
+# Classification.  The bitmask logic below is the *definition* (pure bit
+# rules, as the paper requires); the zero-page tables materialize it once at
+# import so the per-call query is a single list index.
 # ---------------------------------------------------------------------------
 
 
-def handle_kind(handle: int) -> HandleKind:
-    """Decode the kind of a handle from its bit pattern alone."""
+def _classify_zero_page(handle: int) -> HandleKind:
+    """The paper's bitmask classification of a zero-page value (0..1023)."""
     if handle <= 0:
-        return HandleKind.INVALID
-    if handle & _USER_BIT:
-        kind_bits = (handle >> _USER_KIND_SHIFT) & 0xF
-        try:
-            return HandleKind(kind_bits)
-        except ValueError:
-            return HandleKind.INVALID
-    if handle >= ZERO_PAGE_SIZE:
         return HandleKind.INVALID
     if (handle & _OP_MASK) == _OP_PREFIX:
         return HandleKind.OP
@@ -271,18 +279,45 @@ def handle_kind(handle: int) -> HandleKind:
     return HandleKind.INVALID  # reserved 0b00... space
 
 
-def is_null(handle: int) -> bool:
-    """Null handles are kind-prefix || zeros (plus MESSAGE_NO_PROC is not null)."""
-    return handle in _NULL_SET
-
+#: kind of every zero-page value, one list index per query (import-time
+#: materialization of the mask chain above)
+ZERO_PAGE_KINDS: tuple[HandleKind, ...] = tuple(
+    _classify_zero_page(h) for h in range(ZERO_PAGE_SIZE)
+)
 
 _NULL_SET = frozenset(NULL_HANDLES.values())
 
+#: null-ness of every zero-page value (all null handles are predefined)
+ZERO_PAGE_IS_NULL: tuple[bool, ...] = tuple(
+    h in _NULL_SET for h in range(ZERO_PAGE_SIZE)
+)
+
+
+def handle_kind(handle: int) -> HandleKind:
+    """Decode the kind of a handle from its bit pattern alone.
+
+    Zero-page (predefined) handles resolve through the precomputed kind
+    table; user handles decode their kind field by bitmask.
+    """
+    if 0 <= handle < ZERO_PAGE_SIZE:
+        return ZERO_PAGE_KINDS[handle]
+    if handle > 0 and handle & _USER_BIT:
+        kind_bits = (handle >> _USER_KIND_SHIFT) & 0xF
+        try:
+            return HandleKind(kind_bits)
+        except ValueError:
+            return HandleKind.INVALID
+    return HandleKind.INVALID
+
+
+def is_null(handle: int) -> bool:
+    """Null handles are kind-prefix || zeros (plus MESSAGE_NO_PROC is not null)."""
+    return 0 <= handle < ZERO_PAGE_SIZE and ZERO_PAGE_IS_NULL[handle]
+
 
 def check_handle(handle: int, expected: HandleKind) -> None:
-    """The fast error check the Huffman code enables (bitmask + compare)."""
-    kind = handle_kind(handle)
-    if kind != expected:
+    """The fast error check the Huffman code enables (table index + compare)."""
+    if handle_kind(handle) is not expected:
         from .errors import PAX_ERR_ARG, PaxError
 
         raise PaxError(

@@ -16,9 +16,11 @@ to the spec adds its translation wrapper automatically.
 
 Faithful to the paper's structure:
 
-* ``CONVERT_*`` handle conversion with inline fast paths for the predefined
-  handles (the WORLD/SELF/NULL ``if`` chain of the §6.2 listing) and a table
-  for user handles;
+* ``CONVERT_*`` handle conversion with fast paths for the predefined
+  handles — comms keep the WORLD/SELF/NULL ``if`` chain of the §6.2 listing;
+  ops and datatypes index **zero-page flat arrays** built once at init (the
+  paper's "compile-time knowledge of both ABIs", materialized) — and a dict
+  table for user (heap) handles only;
 * an **O(1) reverse map** (impl handle → ABI handle) maintained at
   registration time, replacing a linear scan — callback trampolines hit this
   once per reduction element;
@@ -92,6 +94,17 @@ class MukBackend(Backend):
         self._dtype_table: dict[int, ox.OmpixDatatype] = {}
         self._predef_ops = self._build_predef_op_map()
         self._predef_dtypes = self._build_predef_dtype_map()
+        # The §6.2 "compile-time knowledge of both ABIs", materialized:
+        # zero-page-indexed flat arrays built once at init, so a predefined
+        # handle converts with one list index (no dict hashing, no if-chain).
+        # The dict tables above remain the registration-time source of truth;
+        # the user-handle dicts stay for heap handles only.
+        self._predef_op_page: list = [None] * H.ZERO_PAGE_SIZE
+        for _h, _obj in self._predef_ops.items():
+            self._predef_op_page[_h] = _obj
+        self._predef_dtype_page: list = [None] * H.ZERO_PAGE_SIZE
+        for _h, _obj in self._predef_dtypes.items():
+            self._predef_dtype_page[_h] = _obj
         # O(1) reverse conversion (impl dtype object -> ABI handle), kept in
         # sync at registration; first registration wins for aliased
         # predefined handles (PAX_CHAR and PAX_INT8_T both map to the impl's
@@ -197,18 +210,22 @@ class MukBackend(Backend):
             raise PaxError(PAX_ERR_COMM, H.describe(comm)) from None
 
     def _convert_op(self, op: int) -> ox.OmpixOp:
-        impl = self._predef_ops.get(op)
-        if impl is not None:
-            return impl
+        if 0 <= op < H.ZERO_PAGE_SIZE:
+            impl = self._predef_op_page[op]
+            if impl is not None:
+                return impl
+            raise PaxError(PAX_ERR_OP, H.describe(op))  # reserved/null slot
         try:
             return self._op_table[op]
         except KeyError:
             raise PaxError(PAX_ERR_OP, H.describe(op)) from None
 
     def _convert_dtype(self, dt: int) -> ox.OmpixDatatype:
-        impl = self._predef_dtypes.get(dt)
-        if impl is not None:
-            return impl
+        if 0 <= dt < H.ZERO_PAGE_SIZE:
+            impl = self._predef_dtype_page[dt]
+            if impl is not None:
+                return impl
+            raise PaxError(PAX_ERR_TYPE, H.describe(dt))  # reserved slot
         try:
             return self._dtype_table[dt]
         except KeyError:

@@ -61,7 +61,8 @@ def main(argv=None):
           f"impl={dist.abi.backend.name} mode={cfg.parallelism.grad_sync}")
 
     key = jax.random.PRNGKey(0)
-    state = train_loop.init_state(api, key)
+    # dist activates the ZeRO-1 flat optimizer layout in abi mode
+    state = train_loop.init_state(api, key, dist=dist)
     n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(state.params))
     print(f"actual params: {n_params/1e6:.2f}M")
 

@@ -90,9 +90,32 @@ def unflatten_like(vec, tree):
     return jax.tree.unflatten(treedef, out)
 
 
+def zero1_padded_size(n: int, dp_size: int, buckets: int = 1) -> int:
+    """Flat-vector length padded so ``dp_size * buckets`` divides it — the
+    shared contract between ``init_flat_global``, ``grad_sync.zero1_step``
+    bucketing and the train-loop wiring."""
+    m = dp_size * max(buckets, 1)
+    return -(-n // m) * m
+
+
+def init_flat_global(params, dp_size: int, *, buckets: int = 1,
+                     with_ef: bool = False) -> FlatAdamState:
+    """Global-view flat optimizer state: (padded,) moment vectors meant to be
+    sharded over the dp axes (each rank sees its (padded/dp,) shard inside
+    the train step's shard_map region)."""
+    n = sum(int(p.size) for p in jax.tree.leaves(params))
+    padded = zero1_padded_size(n, dp_size, buckets)
+    return FlatAdamState(
+        jnp.zeros((), jnp.int32),
+        jnp.zeros((padded,), jnp.float32),
+        jnp.zeros((padded,), jnp.float32),
+        jnp.zeros((padded if with_ef else 1,), jnp.float32),
+    )
+
+
 def init_flat(params, dp_size: int, with_ef: bool) -> FlatAdamState:
     n = sum(int(p.size) for p in jax.tree.leaves(params))
-    padded = -(-n // dp_size) * dp_size
+    padded = zero1_padded_size(n, dp_size)
     shard = padded // dp_size
     return FlatAdamState(
         jnp.zeros((), jnp.int32),

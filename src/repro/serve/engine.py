@@ -100,25 +100,49 @@ class ServeEngine:
         self.stats["prefill_tokens"] += int(B * S)
 
         max_new = max(r.max_new_tokens for r in requests)
-        cur = sample(logits, self._next_key(), requests[0].temperature,
-                     requests[0].top_k)
-        for i, r in enumerate(requests):
-            r.out_tokens.append(int(cur[i]))
+        cur = self._sample_batch(logits, requests)
+        self._append_tokens(cur, requests)
         for step in range(1, max_new):
-            logits, cache = self._decode(self.params, cur[:, None], cache, idx)
-            idx = idx + 1
-            self.stats["decode_steps"] += 1
-            cur = sample(logits, self._next_key(), requests[0].temperature,
-                         requests[0].top_k)
-            for i, r in enumerate(requests):
-                if not r.done:
-                    tok = int(cur[i])
-                    r.out_tokens.append(tok)
-                    if self.eos_id is not None and tok == self.eos_id:
-                        r.done = True
             if all(r.done for r in requests):
                 break
+            logits, cache = self._decode(self.params, jnp.asarray(cur)[:, None],
+                                         cache, idx)
+            idx = idx + 1
+            self.stats["decode_steps"] += 1
+            cur = self._sample_batch(logits, requests)
+            self._append_tokens(cur, requests)
+
+    def _append_tokens(self, cur, requests: list[Request]) -> None:
+        """Record one sampled token per non-done request, applying that
+        request's own eos / max_new_tokens cutoffs (including on the very
+        first, prefill-sampled token)."""
+        for i, r in enumerate(requests):
+            if r.done:
+                continue
+            tok = int(cur[i])
+            r.out_tokens.append(tok)
+            if self.eos_id is not None and tok == self.eos_id:
+                r.done = True
+            if len(r.out_tokens) >= r.max_new_tokens:
+                r.done = True
 
     def _next_key(self):
         self._key, sub = jax.random.split(self._key)
         return sub
+
+    def _sample_batch(self, logits, requests: list[Request]) -> np.ndarray:
+        """Sample one token per request honoring *that request's* sampling
+        params.  Rows are grouped by (temperature, top_k) so the homogeneous
+        batch (the common case) stays a single device call."""
+        groups: dict[tuple[float, int], list[int]] = {}
+        for i, r in enumerate(requests):
+            groups.setdefault((float(r.temperature), int(r.top_k)), []).append(i)
+        if len(groups) == 1:
+            (temperature, top_k), _ = next(iter(groups.items()))
+            return np.asarray(sample(logits, self._next_key(), temperature, top_k))
+        out = np.zeros((len(requests),), np.int32)
+        for (temperature, top_k), idxs in sorted(groups.items()):
+            rows = sample(logits[np.asarray(idxs)], self._next_key(),
+                          temperature, top_k)
+            out[np.asarray(idxs)] = np.asarray(rows)
+        return out

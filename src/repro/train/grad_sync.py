@@ -64,7 +64,13 @@ def reduce_scatter_grads(
         shard = abi.reduce_scatter(wire, PAX_SUM, comm)
     else:
         assert n % (dp * buckets) == 0, "bucket count must divide the shard"
-        parts = jnp.split(wire, buckets)
+        # transposed split: bucket b carries every rank's b-th sub-slice, so
+        # each rank's concatenated result is its *contiguous* slice of the
+        # full vector — the same layout allgather_params reassembles and the
+        # same slice `wire[r*shard : (r+1)*shard]` an unbucketed
+        # reduce-scatter would deliver
+        blocks = wire.reshape(dp, buckets, -1)
+        parts = [blocks[:, b, :].reshape(-1) for b in range(buckets)]
         reqs = [abi.ireduce_scatter(p, PAX_SUM, comm) for p in parts]
         shards = abi.waitall(reqs)
         shard = jnp.concatenate(shards)
@@ -106,7 +112,12 @@ def zero1_step(
     """One explicit ZeRO-1 round trip through the generated ABI surface:
     bucketed nonblocking reduce-scatter -> per-shard optimizer update
     (``update_shard(g_shard) -> p_shard``) -> bucketed nonblocking
-    all-gather of the updated shard.  Returns (params_full, new_ef)."""
+    all-gather of the updated shard.  Returns (params_full, new_ef).
+
+    The ABI's free-list request pool recycles the bucket requests in place,
+    so a steady-state training loop reuses one preallocated request batch
+    per step instead of allocating per bucket (train_loop's ``body_zero1``
+    drives this every step)."""
     g_shard, new_ef = reduce_scatter_grads(
         dist, flat_g, compression=compression, buckets=buckets, ef=ef
     )

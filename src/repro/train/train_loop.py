@@ -3,14 +3,23 @@
 Two step constructions per DESIGN.md:
 
 * ``abi`` (default, ≤15B-class archs): a partial-manual ``shard_map`` over
-  the dp axes; TP stays GSPMD (auto) inside.  Gradients are synchronized
-  per-leaf through **explicit ABI collectives** — nonblocking
-  ``iallreduce`` requests issued for every bucket (leaf) and awaited
-  together, so XLA's latency-hiding scheduler can overlap them with the
-  optimizer math; optional bf16 wire compression; optional int8 via a
-  ring-compressed backend.  Optimizer moments are TP-sharded like the
-  params (GSPMD) and dp-replicated — classic DDP semantics with the ABI
-  carrying all dp traffic.
+  the dp axes; TP stays GSPMD (auto) inside.  Two gradient-sync layouts:
+
+  - **ZeRO-1 flat** (``parallelism.zero1`` and ``init_state`` given the
+    dist): the flat gradient vector is bucketed-**reduce-scattered**
+    through the pooled nonblocking ABI path, the AdamW update runs on this
+    rank's shard only (optimizer memory 1/dp), and the updated shard is
+    bucketed-**all-gathered** back.  Moments live as (padded,) flat
+    vectors sharded ``P(dp_axes)``: every rank holds its contiguous slice,
+    the same slice the (transposed-split) bucketed reduce-scatter
+    delivers.  The request pool recycles the bucket requests in place, so
+    the steady-state step allocates no request objects.
+  - **per-leaf DDP** (``init_state`` without a dist, the legacy layout):
+    nonblocking ``iallreduce`` per leaf, moments TP-sharded like the
+    params and dp-replicated.
+
+  Optional bf16 wire compression; optional int8 via a ring-compressed
+  backend.  The ABI carries all dp traffic either way.
 
 * ``gspmd`` (300B-class: grok-1, nemotron-4): plain jit; params, grads and
   moments are FSDP x TP sharded via in_shardings (ZeRO-style memory
@@ -29,11 +38,13 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..core import PAX_SUM
+from ..core.communicator import comm_rank_traced
 from ..models.model import ModelApi
 from ..optim import adamw
-from ..optim.adamw import AdamState, AdamWConfig
+from ..optim.adamw import AdamState, AdamWConfig, FlatAdamState
 from ..runtime.dist import DistContext, dp_comm_of
 from ..runtime.sharding import use_rules
+from .grad_sync import allgather_params, pad_to, reduce_scatter_grads
 
 
 class TrainState(NamedTuple):
@@ -47,9 +58,28 @@ class Metrics(NamedTuple):
     grad_norm: jax.Array
 
 
-def init_state(api: ModelApi, key) -> TrainState:
+def _flat_opt_specs(dp_axes) -> FlatAdamState:
+    """The one place the ZeRO-1 flat state's sharding is written down:
+    moments shard over the dp axes, step/ef replicated."""
+    dpP = P(tuple(dp_axes)) if dp_axes else P()
+    return FlatAdamState(P(), dpP, dpP, P())
+
+
+def init_state(api: ModelApi, key, dist: Optional[DistContext] = None) -> TrainState:
+    """Build the initial train state.
+
+    With ``dist`` provided and ``parallelism.zero1`` set in abi mode, the
+    optimizer state is the ZeRO-1 flat layout (moments for 1/dp of the
+    parameters per rank); otherwise the classic per-leaf tree layout.
+    """
     params = api.init(key)
-    return TrainState(params, adamw.init_tree(params), jnp.zeros((), jnp.int32))
+    par = api.cfg.parallelism
+    if dist is not None and par.grad_sync == "abi" and par.zero1:
+        opt = adamw.init_flat_global(
+            params, dist.dp_size, buckets=max(par.zero1_buckets, 1))
+    else:
+        opt = adamw.init_tree(params)
+    return TrainState(params, opt, jnp.zeros((), jnp.int32))
 
 
 def _microbatched_grads(loss_fn, params, batch, n_micro: int):
@@ -128,6 +158,7 @@ def make_train_step_abi(
     par = cfg.parallelism
     n_micro = max(par.microbatch, 1)
     compression = par.grad_compression
+    buckets = max(par.zero1_buckets, 1)
     # TP shardings of the gradients (== param specs without fsdp axes)
     grad_specs = api.param_specs(fsdp=None, tp=dist.tp_axis)
 
@@ -142,14 +173,49 @@ def make_train_step_abi(
             loss = dist.abi.allreduce(loss, PAX_SUM, dist.dp_comm) / dist.dp_size
         return new_params, new_opt, loss, gnorm
 
+    def body_zero1(params, opt: FlatAdamState, step, batch):
+        """Explicit ZeRO-1 round trip (the ROADMAP wiring): bucketed
+        nonblocking reduce-scatter -> shard-local AdamW -> bucketed
+        nonblocking all-gather, all through the pooled request path."""
+        dp = dist.dp_size
+        with use_rules(dist.rules):
+            loss, grads = _microbatched_grads(
+                lambda p, b: api.loss_fn(p, b, dist), params, batch, n_micro)
+            flat_g = pad_to(adamw.flatten(grads), dp * buckets)
+            n_flat = sum(int(l.size) for l in jax.tree.leaves(grads))
+            g_shard, _ = reduce_scatter_grads(
+                dist, flat_g, compression=compression, buckets=buckets)
+            # ||mean grad||²: each element lives on exactly one rank's shard
+            gnorm = jnp.sqrt(dist.abi.allreduce(
+                jnp.sum(jnp.square(g_shard)), PAX_SUM, dist.dp_comm))
+            # this rank's contiguous param slice (same layout as g_shard and
+            # as the P(dp_axes)-sharded moment vectors)
+            flat_p = pad_to(adamw.flatten(params), dp * buckets)
+            shard_len = flat_p.shape[0] // dp
+            r = comm_rank_traced(dist.abi.comms.info(dist.dp_comm))
+            p_shard = jax.lax.dynamic_slice_in_dim(flat_p, r * shard_len, shard_len)
+            lr_scale = schedule(step) if schedule is not None else jnp.float32(1.0)
+            new_p_shard, new_opt = adamw.update_flat_shard(
+                opt_cfg, g_shard, opt, p_shard, gnorm, lr_scale)
+            p_full = allgather_params(dist, new_p_shard, buckets=buckets)
+            new_params = adamw.unflatten_like(p_full[:n_flat], params)
+            loss = dist.abi.allreduce(loss, PAX_SUM, dist.dp_comm) / dp
+        return new_params, new_opt, loss, gnorm
+
+    flat_opt_specs = _flat_opt_specs(dist.dp_axes)
+
     def step_fn(state: TrainState, batch):
         rep = lambda tree: jax.tree.map(lambda _: P(), tree)
+        zero1 = isinstance(state.opt, FlatAdamState)
         f = dist.abi.shard_region(
-            body,  # step passed explicitly: closures over tracers are
-            #        illegal inside shard_map bodies
-            in_specs=(rep(state.params), rep(state.opt), P(),
+            body_zero1 if zero1 else body,
+            # step passed explicitly: closures over tracers are
+            # illegal inside shard_map bodies
+            in_specs=(rep(state.params),
+                      flat_opt_specs if zero1 else rep(state.opt), P(),
                       jax.tree.map(lambda _: P(dist.dp_axes), batch)),
-            out_specs=(rep(state.params), rep(state.opt), P(), P()),
+            out_specs=(rep(state.params),
+                       flat_opt_specs if zero1 else rep(state.opt), P(), P()),
             axis_names=set(dist.dp_axes),
         )
         new_params, new_opt, loss, gnorm = f(state.params, state.opt, state.step, batch)
@@ -193,15 +259,19 @@ def make_train_step(api: ModelApi, dist, opt_cfg: AdamWConfig, **kw):
 # ---------------------------------------------------------------------------
 # state sharding specs (for jit in_shardings / checkpoint layouts)
 # ---------------------------------------------------------------------------
-def state_specs(api: ModelApi, mode: str, fsdp="data", tp="model"):
+def state_specs(api: ModelApi, mode: str, fsdp="data", tp="model", dp_axes=None):
     """PartitionSpec pytree for TrainState.
 
-    * abi mode: params/moments TP-sharded only (dp-replicated);
+    * abi mode: params TP-sharded only (dp-replicated); moments likewise in
+      the per-leaf layout, or — with ``dp_axes`` given for the ZeRO-1 flat
+      layout — (padded,) flat vectors sharded over the dp axes;
     * gspmd mode: params/moments FSDP x TP sharded (param specs already
       carry the fsdp axes).
     """
     pspecs = api.param_specs(fsdp=fsdp, tp=tp) if mode == "gspmd" else (
         api.param_specs(fsdp=None, tp=tp))
+    if mode == "abi" and dp_axes is not None:
+        return TrainState(pspecs, _flat_opt_specs(dp_axes), P())
     return TrainState(
         pspecs,
         AdamState(P(), jax.tree.map(lambda s: s, pspecs),

@@ -1,0 +1,172 @@
+"""Free-list request pool: (slot, generation) handle encoding, exact
+use-after-wait detection, slot reuse, and the index-space regression (the
+old monotonically increasing index exhausted ``make_user_handle`` after
+2^24 nonblocking calls)."""
+import jax.numpy as jnp
+import pytest
+
+import repro.core as C
+from repro.core import handles as H
+from repro.core.abi import (
+    _REQ_GEN_MASK,
+    _REQ_MAX_SLOTS,
+    _REQ_SLOT_BITS,
+    _REQ_SLOT_MASK,
+    Request,
+)
+from repro.core.errors import PAX_ERR_REQUEST, PaxError
+
+
+@pytest.fixture()
+def abi(mesh1):
+    return C.pax_init(mesh1, impl="paxi")
+
+
+X = jnp.ones(4)
+
+
+def _slot(req):
+    return H.user_handle_index(req.handle) & _REQ_SLOT_MASK
+
+
+def _gen(req):
+    return H.user_handle_index(req.handle) >> _REQ_SLOT_BITS
+
+
+def test_handles_encode_slot_and_generation(abi):
+    r0 = abi.iallreduce(X, C.PAX_SUM, C.PAX_COMM_SELF)
+    r1 = abi.iallreduce(X, C.PAX_SUM, C.PAX_COMM_SELF)
+    assert H.handle_kind(r0.handle) == H.HandleKind.REQUEST
+    assert (_slot(r0), _gen(r0)) == (0, 0)
+    assert (_slot(r1), _gen(r1)) == (1, 0)
+    abi.waitall([r0, r1])
+
+
+def test_use_after_wait_raises_err_request(abi):
+    req = abi.iallreduce(X, C.PAX_SUM, C.PAX_COMM_SELF)
+    handle = req.handle
+    abi.wait(req)
+    # a fresh Request object with the stale handle: exactly detected
+    with pytest.raises(PaxError) as e:
+        abi.wait(Request(handle))
+    assert e.value.code == PAX_ERR_REQUEST
+    with pytest.raises(PaxError):
+        abi.test(Request(handle))
+    # the same (completed) object is idempotent, not an error
+    assert abi.wait(req) is req.value
+
+
+def test_slot_reuse_preserves_generation_safety(abi):
+    r1 = abi.iallreduce(X, C.PAX_SUM, C.PAX_COMM_SELF)
+    stale = r1.handle
+    slot1, gen1 = _slot(r1), _gen(r1)
+    abi.wait(r1)
+    r2 = abi.iallreduce(X * 2, C.PAX_SUM, C.PAX_COMM_SELF)
+    # the slot is recycled (LIFO free list), the generation advanced
+    assert _slot(r2) == slot1 == 0
+    assert _gen(r2) == gen1 + 1
+    assert r2.handle != stale
+    # the stale handle does not alias the live request
+    with pytest.raises(PaxError):
+        abi.wait(Request(stale))
+    # and the live one still completes fine
+    flag, _ = abi.testall([r2])
+    assert flag
+    assert abi.outstanding_requests == 0
+
+
+def test_pool_recycles_request_objects_in_place(abi):
+    r1 = abi.iallreduce(X, C.PAX_SUM, C.PAX_COMM_SELF)
+    abi.wait(r1)
+    r2 = abi.iallreduce(X, C.PAX_SUM, C.PAX_COMM_SELF)
+    assert r2 is r1  # steady state allocates no new Request objects
+    abi.wait(r2)
+
+
+def test_generation_wrap_keeps_pool_bounded(abi):
+    """The >16M-sequential-calls regression, exercised via generation wrap:
+    the handle index no longer grows with the lifetime call count, so the
+    24-bit field can never exhaust — 2x the full generation space on one
+    slot leaves the pool at a single slot and keeps issuing fine."""
+    cycles = 2 * (_REQ_GEN_MASK + 1) + 5
+    for i in range(cycles):
+        req = abi.iallreduce(X, C.PAX_SUM, C.PAX_COMM_SELF)
+        assert _slot(req) == 0
+        assert _gen(req) == i % (_REQ_GEN_MASK + 1)
+        abi.wait(req)
+    assert len(abi._req_pool) == 1
+    assert abi.requests_issued == cycles
+
+
+def test_lifetime_count_past_16m_does_not_exhaust_handles(abi):
+    """Pre-PR, the 16,777,216th nonblocking call raised ValueError from
+    make_user_handle mid-run.  The pool's handles are (slot, generation)
+    only; a lifetime count beyond 2^24 is irrelevant by construction."""
+    abi.requests_issued = (1 << 24) + 7  # simulate a long-lived context
+    req = abi.iallreduce(X, C.PAX_SUM, C.PAX_COMM_SELF)
+    assert H.user_handle_index(req.handle) <= H._USER_INDEX_MASK
+    abi.wait(req)
+    assert abi.requests_issued == (1 << 24) + 8
+
+
+def test_pool_exhaustion_is_a_clean_error(abi):
+    reqs = [abi.iallreduce(X, C.PAX_SUM, C.PAX_COMM_SELF)
+            for _ in range(_REQ_MAX_SLOTS)]
+    with pytest.raises(PaxError) as e:
+        abi.iallreduce(X, C.PAX_SUM, C.PAX_COMM_SELF)
+    assert e.value.code == PAX_ERR_REQUEST
+    assert "pool exhausted" in str(e.value)
+    abi.waitall(reqs)
+    assert abi.outstanding_requests == 0
+
+
+def test_testall_mixed_done_and_live(abi):
+    reqs = [abi.iallreduce(X * i, C.PAX_SUM, C.PAX_COMM_SELF) for i in range(4)]
+    abi.wait(reqs[1])  # complete one out of band
+    flag, vals = abi.testall(reqs)
+    assert flag and len(vals) == 4
+    # a foreign handle makes the scan report not-ready (old semantics)
+    live = abi.iallreduce(X, C.PAX_SUM, C.PAX_COMM_SELF)
+    flag, vals = abi.testall([live, Request(H.make_user_handle(H.HandleKind.REQUEST, 12345))])
+    assert not flag and vals is None
+    abi.wait(live)
+
+
+def test_request_identity_semantics():
+    """Satellite: eq=False — hash/eq are object identity, not field-wise."""
+    a = Request(42, value=1)
+    b = Request(42, value=1)
+    assert a != b and a == a
+    assert hash(a) != hash(b) or a is b  # identity hash, not handle hash
+    assert len({a, b}) == 2
+
+
+def test_finalize_counts_pool_live(abi):
+    req = abi.iallreduce(X, C.PAX_SUM, C.PAX_COMM_SELF)
+    with pytest.raises(PaxError):
+        abi.finalize()
+    abi.wait(req)
+    abi.finalize()
+    assert abi.finalized
+
+
+def test_temp_state_freed_on_completion(mesh1):
+    """alltoallw temporaries ride in the pooled request and are freed at
+    completion (the §6.2 request-map contract, pool edition)."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    abi = C.pax_init(mesh1, impl="ompix")
+    mp = abi.comm_from_axes(("model",))
+    seen = {}
+
+    def body(blocks):
+        req = abi.ialltoallw(blocks, [C.PAX_FLOAT32], [C.PAX_FLOAT16], mp)
+        seen["held"] = req.temp_state is not None
+        (out,) = abi.wait(req)
+        seen["freed"] = req.temp_state is None
+        return out
+
+    f = abi.shard_region(body, in_specs=P(), out_specs=P())
+    jax.jit(f)(jnp.ones((1, 4), jnp.float32))
+    assert seen == {"held": True, "freed": True}

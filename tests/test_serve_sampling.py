@@ -1,0 +1,54 @@
+"""Serve engine: per-request sampling params (satellite fix — the batch
+previously ran entirely under requests[0]'s temperature/top_k)."""
+import jax
+import numpy as np
+
+import repro.configs as cfgs
+from repro.models import build_model
+from repro.serve.engine import Request, ServeEngine
+
+
+def _engine(max_batch=2):
+    cfg = cfgs.smoke_config("qwen2-0.5b")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return ServeEngine(api, params, max_batch=max_batch, max_seq=64)
+
+
+def test_mixed_batch_honors_each_requests_params():
+    prompt = np.arange(1, 9, dtype=np.int32)
+    ref = _engine().generate(prompt, max_new_tokens=8)  # solo greedy
+
+    eng = _engine()
+    hot = Request(0, prompt, max_new_tokens=8, temperature=5.0)
+    greedy = Request(1, prompt, max_new_tokens=8, temperature=0.0)
+    eng.run([hot, greedy])
+    # the greedy row must be untouched by its neighbor's temperature —
+    # with the old batch-wide requests[0] params it would have sampled hot
+    assert greedy.out_tokens == list(ref)
+    assert len(hot.out_tokens) == 8
+
+
+def test_per_request_max_new_tokens():
+    prompt = np.arange(1, 9, dtype=np.int32)
+    eng = _engine()
+    # max_new_tokens=1 is the edge: the cap must apply to the very first
+    # (prefill-sampled) token too, not only to decode-loop tokens
+    one = Request(0, prompt, max_new_tokens=1)
+    short = Request(1, prompt, max_new_tokens=3)
+    eng.run([one, short])
+    assert len(one.out_tokens) == 1
+    assert len(short.out_tokens) == 3
+
+    eng2 = _engine()
+    long = Request(0, prompt, max_new_tokens=8)
+    eng2.run([long])
+    assert len(long.out_tokens) == 8
+
+
+def test_homogeneous_batch_single_group():
+    prompt = np.arange(1, 9, dtype=np.int32)
+    eng = _engine()
+    reqs = [Request(i, prompt, max_new_tokens=4, temperature=0.0) for i in range(2)]
+    eng.run(reqs)
+    assert reqs[0].out_tokens == reqs[1].out_tokens  # same prompt, greedy

@@ -1,0 +1,167 @@
+"""Init-time specialized dispatch: per-context compiled entry points,
+recompilation on tool attach/detach, the zero-page kind table, and
+Mukautuva's zero-page conversion arrays."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as C
+from repro.core import abi_spec
+from repro.core import handles as H
+from repro.core.abi import PaxABI
+from repro.core.errors import PAX_ERR_ARG, PAX_ERR_OP, PAX_ERR_TYPE, PaxError
+
+
+# ---------------------------------------------------------------------------
+# per-context compiled entry points
+# ---------------------------------------------------------------------------
+def test_every_entry_specialized_per_instance(mesh1):
+    abi = C.pax_init(mesh1, impl="paxi")
+    for entry in abi_spec.ABI_TABLE:
+        fn = abi.__dict__.get(entry.name)
+        assert fn is not None, f"{entry.name} not specialized"
+        assert fn is not PaxABI.__dict__[entry.name]
+        src = fn.__generated_src__
+        # no table lookup, no tools branch in the zero-tool fast path
+        assert "_table" not in src and "self." not in src, src
+        if entry.nonblocking:
+            assert f"i{entry.name}" in abi.__dict__
+
+
+def test_specialized_equals_generic_results(mesh1):
+    abi = C.pax_init(mesh1, impl="paxi")
+    x = jnp.arange(8.0)
+    spec = abi.allreduce(x, C.PAX_SUM, C.PAX_COMM_SELF)
+    gen = PaxABI.__dict__["allreduce"](abi, x, C.PAX_SUM, C.PAX_COMM_SELF)
+    assert np.allclose(spec, gen)
+
+
+def test_specialized_checks_match_generic_errors(mesh1):
+    """The inline fast-path checks must reject exactly what check_handle
+    rejects, with the same named-constant error."""
+    abi = C.pax_init(mesh1, impl="paxi")
+    x = jnp.ones(2)
+    for bad_op in (C.PAX_COMM_WORLD, 0, -3, H.make_user_handle(H.HandleKind.COMM, 4)):
+        with pytest.raises(PaxError) as e:
+            abi.allreduce(x, bad_op, C.PAX_COMM_SELF)
+        assert e.value.code == PAX_ERR_ARG
+    with pytest.raises(PaxError) as e:
+        abi.allreduce(x, C.PAX_SUM, C.PAX_SUM)
+    assert "PAX_SUM" in str(e.value)  # names the constant (§5.4)
+    # user-kind handles pass the inline shift compare
+    dp = abi.comm_from_axes(("data",))
+    assert abi.comm_size(dp) == 1
+
+
+def test_attach_tool_respecializes(mesh1):
+    abi = C.pax_init(mesh1, impl="paxi")
+    x = jnp.ones((4, 2), jnp.float32)
+    fast = abi.__dict__["allreduce"]
+    abi.allreduce(x, C.PAX_SUM, C.PAX_COMM_SELF)  # uncounted: no tools yet
+
+    cc, bc = C.CallCounter(), C.ByteCounter()
+    abi.attach_tool(cc)
+    abi.attach_tool(bc)
+    assert abi.__dict__["allreduce"] is not fast  # recompiled
+    abi.allreduce(x, C.PAX_SUM, C.PAX_COMM_SELF)
+    assert cc.counts["allreduce"] == 1
+    assert bc.bytes["allreduce"] == 4 * 2 * 4
+    # nonblocking twin routes through the tooled blocking path
+    abi.wait(abi.iallreduce(x, C.PAX_SUM, C.PAX_COMM_SELF))
+    assert cc.counts["allreduce"] == 2
+
+    abi.detach_tool(cc)
+    abi.detach_tool(bc)
+    abi.allreduce(x, C.PAX_SUM, C.PAX_COMM_SELF)
+    assert cc.counts["allreduce"] == 2  # zero-tool fast path is back
+    src = abi.__dict__["allreduce"].__generated_src__
+    assert "_tools" not in src
+
+
+def test_specialized_tool_chain_order(mesh1):
+    order = []
+
+    class Probe(C.CallCounter):
+        def __init__(self, tag):
+            super().__init__()
+            self.tag = tag
+
+        def before(self, fname, args, info):
+            order.append(("before", self.tag))
+
+        def after(self, fname, args, info, result):
+            order.append(("after", self.tag))
+            return result
+
+    abi = C.pax_init(mesh1, impl="paxi", tools=[Probe("outer"), Probe("inner")])
+    abi.allreduce(jnp.ones(2), C.PAX_SUM, C.PAX_COMM_SELF)
+    assert order == [("before", "outer"), ("before", "inner"),
+                     ("after", "inner"), ("after", "outer")]
+
+
+def test_respecialization_reuses_code_objects(mesh1):
+    a = C.pax_init(mesh1, impl="paxi")
+    b = C.pax_init(mesh1, impl="ring")
+    # same compiled code, different bound globals per context
+    assert (a.__dict__["allreduce"].__code__
+            is b.__dict__["allreduce"].__code__)
+    assert a.__dict__["allreduce"] is not b.__dict__["allreduce"]
+
+
+# ---------------------------------------------------------------------------
+# zero-page kind table (handles.py)
+# ---------------------------------------------------------------------------
+def test_kind_table_matches_bitmask_definition():
+    for h in range(H.ZERO_PAGE_SIZE):
+        assert H.ZERO_PAGE_KINDS[h] is H._classify_zero_page(h), h
+
+
+def test_kind_table_spot_checks():
+    assert H.handle_kind(C.PAX_SUM) == H.HandleKind.OP
+    assert H.handle_kind(C.PAX_COMM_WORLD) == H.HandleKind.COMM
+    assert H.handle_kind(C.PAX_FLOAT32) == H.HandleKind.DATATYPE
+    assert H.handle_kind(0) == H.HandleKind.INVALID
+    assert H.handle_kind(-1) == H.HandleKind.INVALID
+    assert H.handle_kind(H.ZERO_PAGE_SIZE) == H.HandleKind.INVALID
+    u = H.make_user_handle(H.HandleKind.WIN, 7)
+    assert H.handle_kind(u) == H.HandleKind.WIN
+
+
+def test_null_table():
+    for h, null in H.NULL_HANDLES.items():
+        assert H.is_null(null), h
+    assert not H.is_null(C.PAX_SUM)
+    assert not H.is_null(H.PAX_MESSAGE_NO_PROC)
+    assert not H.is_null(-5)
+    assert not H.is_null(H.ZERO_PAGE_SIZE + 3)
+
+
+# ---------------------------------------------------------------------------
+# Mukautuva zero-page conversion arrays
+# ---------------------------------------------------------------------------
+def test_muk_predefined_pages(mesh1):
+    muk = C.pax_init(mesh1, impl="ompix").backend
+    assert muk._convert_op(C.PAX_SUM) is muk.lib.op_globals["OMPIX_SUM"]
+    assert muk._convert_dtype(C.PAX_FLOAT32) is muk.lib.dtype_globals["OMPIX_FLOAT"]
+    # page contents mirror the registration-time dicts exactly
+    for h, obj in muk._predef_ops.items():
+        assert muk._predef_op_page[h] is obj
+    for h, obj in muk._predef_dtypes.items():
+        assert muk._predef_dtype_page[h] is obj
+
+
+def test_muk_reserved_zero_page_slots_rejected(mesh1):
+    muk = C.pax_init(mesh1, impl="ompix").backend
+    with pytest.raises(PaxError) as e:
+        muk._convert_op(37)  # reserved arithmetic-op slot
+    assert e.value.code == PAX_ERR_OP
+    with pytest.raises(PaxError) as e:
+        muk._convert_dtype(0b1000000100)  # reserved dtype slot (516)
+    assert e.value.code == PAX_ERR_TYPE
+
+
+def test_muk_user_handles_still_use_tables(mesh1):
+    abi = C.pax_init(mesh1, impl="ompix")
+    muk = abi.backend
+    derived = abi.type_contiguous(3, C.PAX_FLOAT32)
+    assert muk._convert_dtype(derived) is muk._dtype_table[derived]

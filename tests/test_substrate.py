@@ -192,6 +192,34 @@ def test_train_modes_agree(mesh1):
     np.testing.assert_allclose(losses["abi"], losses["gspmd"], rtol=1e-4)
 
 
+def test_train_step_zero1_flat_matches_per_leaf(mesh1):
+    """The ZeRO-1 flat layout (init_state given the dist) must produce the
+    same loss trajectory as the legacy per-leaf layout on dp=1, driving the
+    pooled nonblocking reduce-scatter/all-gather path."""
+    from repro.optim.adamw import FlatAdamState
+
+    cfg = cfgs.smoke_config("qwen2-0.5b")
+    api = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    batch = make_batch(key, cfg, 4, 32)
+    losses = {}
+    for layout in ("leaf", "zero1"):
+        dist = make_dist(mesh1, impl="paxi")
+        state = train_loop.init_state(api, key,
+                                      dist=dist if layout == "zero1" else None)
+        if layout == "zero1":
+            assert isinstance(state.opt, FlatAdamState)
+        step = jax.jit(train_loop.make_train_step(api, dist, AdamWConfig(lr=5e-3)))
+        ls = []
+        for _ in range(4):
+            state, m = step(state, batch)
+            ls.append(float(m.loss))
+        losses[layout] = ls
+        assert dist.abi.outstanding_requests == 0
+    np.testing.assert_allclose(losses["zero1"], losses["leaf"], rtol=1e-4)
+    assert losses["zero1"][-1] < losses["zero1"][0]
+
+
 def test_serve_engine_greedy_deterministic(mesh1):
     cfg = cfgs.smoke_config("qwen2-0.5b")
     api = build_model(cfg)
