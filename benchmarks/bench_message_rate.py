@@ -129,7 +129,7 @@ def run() -> list[tuple[str, float, str, str]]:
         return chain
 
     factories = {"raw_lax": raw_factory}
-    for impl in ("paxi", "ring", "muk:paxi", "ompix"):
+    for impl in ("paxi", "ring", "muk:paxi", "ompix", "minimal"):
         factories[impl.replace(":", "_")] = _abi_factory(C.pax_init(mesh, impl=impl))
 
     # unspecialized class-level dispatch: a paxi context with its
@@ -166,6 +166,23 @@ def run() -> list[tuple[str, float, str, str]]:
                  "direct-call class-level generic method"))
     rows.append(("dispatch_specialization_speedup", gen_ns / spec_ns, "x",
                  f"specialized {spec_ns:.0f}ns vs generic {gen_ns:.0f}ns per call"))
+
+    # Emulated vs native dispatch (tiered negotiation): the minimal
+    # backend's allreduce is the spec recipe (reduce_scatter ∘ allgather
+    # grounded in its native entries) compiled into the same specialized
+    # per-context path; its per-call cost over the native paxi entry is the
+    # dispatch price of emulation, gated by check_regression.py.  The ring
+    # row is the same recipe composed over ring's native rs/ag — the path
+    # that replaced ring's hand-written derived allreduce.
+    emu_ns = _direct_ns(C.pax_init(mesh, impl="minimal").allreduce, x8)
+    ring_ns = _direct_ns(C.pax_init(mesh, impl="ring").allreduce, x8)
+    rows.append(("dispatch_ns_allreduce_emulated", emu_ns, "ns",
+                 "minimal backend: recipe allreduce (rs+ag), specialized path"))
+    rows.append(("dispatch_ns_allreduce_ring_recipe", ring_ns, "ns",
+                 "ring backend: recipe allreduce over native ring rs/ag"))
+    rows.append(("dispatch_emulated_native_ratio", emu_ns / spec_ns, "x",
+                 f"emulated {emu_ns:.0f}ns vs native specialized "
+                 f"{spec_ns:.0f}ns per call"))
 
     # structural zero-overhead claim (Table 1: MPICH ABI == MPICH),
     # compared over a communicator with real axes so both sides emit an

@@ -3,9 +3,16 @@ baseline and fail on dispatch-path regressions.
 
     PYTHONPATH=src python benchmarks/check_regression.py \
         [--current BENCH_dispatch.json] \
-        [--baseline benchmarks/baseline_dispatch.json]
+        [--baseline benchmarks/baseline_dispatch.json] \
+        [--update-baseline]
 
-Two checks, both robust to absolute machine-speed differences between the
+``--update-baseline`` merges the current run into the baseline file instead
+of gating: records present in the current run replace their baseline
+namesakes, new records are added, and historical records absent from the
+current run (e.g. pre-PR measurement notes) are kept.  Run it after an
+intentional perf-characteristic change, commit the diff.
+
+Three checks, all robust to absolute machine-speed differences between the
 baseline box and the CI runner:
 
 * **dispatch gate**: the specialized/generic direct-call dispatch ratio
@@ -18,6 +25,13 @@ baseline box and the CI runner:
   former fails on any different host, the latter is dominated by
   jax-internal per-eqn tracing cost whose load sensitivity swamps a 30%
   band.
+* **emulated/native dispatch gate**: the per-call cost ratio of the
+  ``minimal`` backend's *emulated* allreduce (the tiered-negotiation recipe,
+  reduce-scatter ∘ all-gather, compiled through the same specialized path)
+  over the native specialized entry (``dispatch_emulated_native_ratio``,
+  both sides measured in one process) must not exceed the baseline's ratio
+  by more than the tolerance (default 50%) — emulation is allowed to cost
+  its bounded constant, not to quietly grow a new per-call layer.
 * **request-scan flatness**: per-request ``testall`` scan cost at 1000
   outstanding requests must stay within ±20% of the 10-request cost (the
   pool's O(1) contract), as recorded by the run itself.
@@ -41,7 +55,32 @@ def main(argv=None) -> int:
                     help="allowed relative message-rate regression")
     ap.add_argument("--flatness", type=float, default=0.20,
                     help="allowed request-scan per-request drift 10->1000")
+    ap.add_argument("--emulation-tolerance", type=float, default=0.50,
+                    help="allowed relative growth of the emulated/native "
+                         "dispatch ratio over the baseline")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="merge the current run into the baseline file "
+                         "(replace namesakes, add new, keep historical) "
+                         "instead of gating")
     args = ap.parse_args(argv)
+
+    if args.update_baseline:
+        current = json.load(open(args.current))
+        baseline = json.load(open(args.baseline))
+        by_name = {r["name"]: i for i, r in enumerate(baseline)}
+        added = replaced = 0
+        for rec in current:
+            if rec["name"] in by_name:
+                baseline[by_name[rec["name"]]] = rec
+                replaced += 1
+            else:
+                baseline.append(rec)
+                added += 1
+        with open(args.baseline, "w") as f:
+            json.dump(baseline, f, indent=1)
+        print(f"baseline updated from {args.current}: {replaced} replaced, "
+              f"{added} added, {len(baseline) - replaced - added} kept")
+        return 0
 
     cur = _index(json.load(open(args.current)))
     base = _index(json.load(open(args.baseline)))
@@ -60,6 +99,20 @@ def main(argv=None) -> int:
             print("OK " + line)
     except KeyError as e:
         failures.append(f"missing dispatch record: {e}")
+
+    # -- emulated/native dispatch gate (tiered-negotiation recipes) --------
+    try:
+        cur_emu = cur["dispatch_emulated_native_ratio"]
+        base_emu = base["dispatch_emulated_native_ratio"]
+        ceiling = base_emu * (1.0 + args.emulation_tolerance)
+        line = (f"emulated/native dispatch ratio: current={cur_emu:.3f} "
+                f"baseline={base_emu:.3f} ceiling={ceiling:.3f}")
+        if cur_emu > ceiling:
+            failures.append("REGRESSION " + line)
+        else:
+            print("OK " + line)
+    except KeyError as e:
+        failures.append(f"missing emulation record: {e}")
 
     # -- request-scan flatness (from the current run alone) ----------------
     for impl in ("paxi", "ompix"):

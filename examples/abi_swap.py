@@ -28,7 +28,7 @@ key = jax.random.PRNGKey(0)
 batch = make_batch(key, cfg, 2, 16)
 
 losses = {}
-for impl in ("paxi", "ring", "ring-bf16", "ompix", "muk:paxi"):
+for impl in ("paxi", "ring", "ring-bf16", "ompix", "muk:paxi", "minimal"):
     dist = make_dist(mesh, impl=impl)
     state = train_loop.init_state(api, key)              # same init
     step = jax.jit(train_loop.make_train_step(api, dist, AdamWConfig()))

@@ -4,10 +4,22 @@ The design mirrors the paper's runtime structure (§6.2): at ``pax_init`` the
 context resolves a backend (the ``dlopen`` analogue lives in
 ``registry.py``), **negotiates the standard function table against it**
 (the ``dlsym`` analogue: every entry point of
-:data:`repro.core.abi_spec.ABI_TABLE` is resolved once, and a backend
-missing an entry raises ``PAX_ERR_UNSUPPORTED_OPERATION`` at init — never
-mid-step), stacks the interposition tools (PMPI/QMPI, §4.8) around the
-resolved entries, and exposes the standard functions.
+:data:`repro.core.abi_spec.ABI_TABLE` is resolved once), stacks the
+interposition tools (PMPI/QMPI, §4.8) around the resolved entries, and
+exposes the standard functions.
+
+**Tiered, generative negotiation.**  Negotiation admits *partial* backends
+the way Mukautuva admits unequal MPI implementations: a missing REQUIRED
+entry still raises ``PAX_ERR_UNSUPPORTED_OPERATION`` at init, but a missing
+OPTIONAL entry is *synthesized* from its spec-declared emulation recipe
+(:mod:`repro.core.emulation`) when the recipe's dependency chain grounds out
+in entries the backend does export — built in topological order, so
+emulations chain arbitrarily deep.  Only when no chain grounds out does the
+entry resolve to a raiser, deferring ``PAX_ERR_UNSUPPORTED_OPERATION`` to
+the first call.  Emulated closures sit in ``self._table`` exactly like
+native callables, so ``_specialize`` compiles the same per-context inline
+fast path around them (and their ``i*`` twins), and tools interpose on them
+identically.  :meth:`PaxABI.capabilities` reports what resolved how.
 
 **Every per-entry-point method here is generated from the declarative
 spec**, not hand-written: the blocking methods, their ``i*`` nonblocking
@@ -34,13 +46,16 @@ spec-generated methods remain on the class as the uninstantiated fallback.
 scheduler overlaps them with compute), and ``wait``/``test`` introduce the
 consumer dependency — the MPI overlap idiom, preserved.  Requests live in a
 slab of pooled slots rather than the ever-growing map of Mukautuva's
-``std::map`` worst case (§6.2): the 24-bit user-handle index field encodes
-``(generation << 14) | slot``, so completion checks are one array index
-plus a generation compare (O(1), no hashing), a freed slot's generation
-bump makes use-after-wait an *exactly detected* ``PAX_ERR_REQUEST`` (until
-the 10-bit generation wraps, i.e. the same slot is reused 1024 times), and
-the handle space never exhausts — the old monotonically increasing index
-made ``make_user_handle`` raise after 2^24 nonblocking calls, mid-training.
+``std::map`` worst case (§6.2): the 24-bit user-handle index field holds the
+slot (the per-context ``req_slot_bits`` split caps how many — default
+16384) and the generation lives *above* the handle-classification bits as
+an unbounded counter, so completion checks are one array index plus a
+generation compare (O(1), no hashing), a freed slot's generation bump makes
+use-after-wait an *exactly detected* ``PAX_ERR_REQUEST`` forever (the
+generation never wraps, so a stale handle can never alias a later reuse of
+its slot), and the handle space never exhausts — the old monotonically
+increasing index made ``make_user_handle`` raise after 2^24 nonblocking
+calls, mid-training.
 Slots also recycle their ``Request`` objects in place, so a steady-state
 workload (e.g. ``zero1_step``'s bucketed round trip) reuses one
 preallocated request batch per step instead of allocating per bucket.
@@ -58,6 +73,7 @@ import numpy as np
 
 from . import abi_spec
 from . import compat
+from . import emulation
 from . import handles as H
 from .communicator import CommTable
 from .constants import PAX_ANY_SOURCE, PAX_ANY_TAG
@@ -95,48 +111,113 @@ class Request:
 REQUEST_NULL = Request(H.PAX_REQUEST_NULL, done=True)
 
 # ---------------------------------------------------------------------------
-# Request-pool handle layout: the 24-bit user index field splits into
-# (generation << 14) | slot.  16384 simultaneous outstanding requests,
-# 1024 generations per slot before a stale handle can alias.
+# Request-pool handle layout (widened, per-context).  The slot index lives in
+# the 24-bit user index field (the context's ``req_slot_bits`` — default 14,
+# i.e. 16384 simultaneous outstanding requests — caps the pool size, and is
+# per-context configurable up to the full field).  The generation is stored
+# ABOVE the handle-classification bits, at shift ``_REQ_GEN_SHIFT``: Python
+# ints are unbounded, so generations never wrap and a retired handle can
+# never alias a later reuse of its slot, no matter how many times the slot
+# recycles.  The low 31 bits of a request handle remain a well-formed
+# REQUEST user handle (kind decodes by bitmask, ``describe`` names the slot).
 # ---------------------------------------------------------------------------
-_REQ_SLOT_BITS = 14
-_REQ_SLOT_MASK = (1 << _REQ_SLOT_BITS) - 1
+_REQ_SLOT_BITS = 14                      # default per-context split
 _REQ_MAX_SLOTS = 1 << _REQ_SLOT_BITS
-_REQ_GEN_BITS = H._USER_KIND_SHIFT - _REQ_SLOT_BITS
-_REQ_GEN_MASK = (1 << _REQ_GEN_BITS) - 1
+_REQ_GEN_SHIFT = 31                      # first bit above _USER_BIT (bit 30)
 _REQ_HANDLE_BASE = H.make_user_handle(H.HandleKind.REQUEST, 0)
 _USER_INDEX_MASK = H._USER_INDEX_MASK
 _UKS = H._USER_KIND_SHIFT  # shift that exposes a user handle's kind bits
 
 
+def _unavailable_entry(entry: abi_spec.AbiEntry, backend_name: str, reason: str):
+    """Table slot for an optional entry that resolved neither way: calling it
+    (not initializing the context) raises PAX_ERR_UNSUPPORTED_OPERATION."""
+
+    def unavailable(*args, **kwargs):
+        raise PaxError(
+            PAX_ERR_UNSUPPORTED_OPERATION,
+            f"{entry.name!r} is unavailable on backend {backend_name!r}: "
+            f"{reason}",
+        )
+
+    unavailable.__name__ = entry.backend_method
+    unavailable.__qualname__ = f"unavailable.{entry.name}"
+    return unavailable
+
+
 class PaxABI:
     """One initialized ABI context (``MPI_Init`` .. ``MPI_Finalize``)."""
 
-    def __init__(self, backend, mesh=None, tools: Sequence = ()) -> None:
+    def __init__(self, backend, mesh=None, tools: Sequence = (),
+                 req_slot_bits: Optional[int] = None) -> None:
         self.backend = backend
         self.mesh = mesh if mesh is not None else backend.mesh
         # ABI-domain tables (shared with a native backend, private otherwise)
         self.comms: CommTable = getattr(backend, "comms", None) or CommTable(self.mesh)
         self.ops: OpRegistry = getattr(backend, "ops", None) or OpRegistry()
         self.datatypes: DatatypeRegistry = getattr(backend, "datatypes", None) or DatatypeRegistry()
-        # dlsym-style negotiation: resolve every function-table entry now.
+        # Tiered dlsym-style negotiation: resolve every function-table entry
+        # now.  Native entries bind the backend method; missing OPTIONAL
+        # entries are compiled from their emulation recipe when the recipe's
+        # dependency chain grounds out in resolved entries (topological
+        # order, so emulations chain); entries that resolve neither way get
+        # a raiser — PAX_ERR_UNSUPPORTED_OPERATION fires at *call* time for
+        # them, while a missing REQUIRED entry still fails here at init.
         self._table: dict[str, Callable] = {}
-        missing = []
+        self._source: dict[str, str] = {}   # name -> native|emulated|unavailable
+        self._unavailable_reasons: dict[str, str] = {}
+        missing_required = []
         for entry in abi_spec.ABI_TABLE:
             if backend.supports(entry):
                 self._table[entry.name] = getattr(backend, entry.backend_method)
-            else:
-                missing.append(entry.name)
-        if missing:
+                self._source[entry.name] = "native"
+            elif entry.tier == abi_spec.REQUIRED:
+                missing_required.append(entry.name)
+        if missing_required:
             raise PaxError(
                 PAX_ERR_UNSUPPORTED_OPERATION,
-                f"backend {backend.name!r} is missing function-table entry "
-                f"point(s) {missing} (init-time negotiation, paper §6.2)",
+                f"backend {backend.name!r} is missing required function-table "
+                f"entry point(s) {missing_required} (init-time negotiation, "
+                "paper §6.2)",
+            )
+        ctx = emulation.EmulationContext(self)
+        for name in abi_spec.EMULATION_ORDER:
+            if name in self._table:
+                continue
+            entry = abi_spec.ENTRY_BY_NAME[name]
+            recipe = entry.recipe
+            if recipe is not None and all(
+                self._source.get(d) in ("native", "emulated") for d in recipe.deps
+            ):
+                self._table[name] = recipe.build(ctx)
+                self._source[name] = "emulated"
+            else:
+                if recipe is None:
+                    reason = "no native implementation and no emulation recipe"
+                else:
+                    unmet = [d for d in recipe.deps
+                             if self._source.get(d) not in ("native", "emulated")]
+                    reason = (f"emulation recipe dependency chain does not "
+                              f"ground out (unresolved: {unmet})")
+                self._table[name] = _unavailable_entry(entry, backend.name, reason)
+                self._source[name] = "unavailable"
+                self._unavailable_reasons[name] = reason
+        # free-list request pool (see module docstring); the slot/generation
+        # split is per-context: slots cap the outstanding-request count and
+        # must fit the 24-bit user index field, generations live above the
+        # classification bits and never wrap (no stale-handle aliasing).
+        # Validated before tools attach, so a bad split cannot leave tools
+        # bound to a context that was never created.
+        bits = _REQ_SLOT_BITS if req_slot_bits is None else int(req_slot_bits)
+        if not 1 <= bits <= H._USER_KIND_SHIFT:
+            raise ValueError(
+                f"req_slot_bits must be in 1..{H._USER_KIND_SHIFT}, got {bits}"
             )
         self.tools = list(tools)
         for t in self.tools:
             t.attach(self)
-        # free-list request pool (see module docstring)
+        self._req_slot_bits = bits
+        self._req_max_slots = 1 << bits
         self._req_pool: list[Request] = []
         self._req_gen: list[int] = []
         self._req_free: list[int] = []
@@ -198,6 +279,34 @@ class PaxABI:
         self._specialize()
 
     # ------------------------------------------------------------------
+    # capability report (what tiered negotiation resolved, per entry)
+    # ------------------------------------------------------------------
+    def capabilities(self) -> dict[str, dict]:
+        """Per-entry resolution report for this context.
+
+        Each entry maps to ``{"tier", "source", ...}`` where ``source`` is
+        ``"native"`` (the backend exports it), ``"emulated"`` (compiled from
+        its recipe; ``"deps"`` lists the entries the emulation stands on),
+        or ``"unavailable"`` (calling it raises
+        ``PAX_ERR_UNSUPPORTED_OPERATION``; ``"reason"`` says why).  The
+        backend contributes its own view via ``Backend.capability`` —
+        Mukautuva translates the foreign library's symbol table across the
+        layer, so the report distinguishes ABI-layer emulation from
+        foreign-library support.
+        """
+        report: dict[str, dict] = {}
+        for entry in abi_spec.ABI_TABLE:
+            source = self._source[entry.name]
+            info: dict = {"tier": entry.tier, "source": source}
+            if source == "emulated":
+                info["deps"] = entry.recipe.deps
+            elif source == "unavailable":
+                info["reason"] = self._unavailable_reasons[entry.name]
+            info.update(self.backend.capability(entry))
+            report[entry.name] = info
+        return report
+
+    # ------------------------------------------------------------------
     # tool-path dispatch (PMPI chain) for the generic class-level methods;
     # specialized instance entry points inline this loop.
     # ------------------------------------------------------------------
@@ -254,7 +363,7 @@ class PaxABI:
         if self._req_free:
             slot = self._req_free.pop()
             req = self._req_pool[slot]
-            req.handle = _REQ_HANDLE_BASE | (self._req_gen[slot] << _REQ_SLOT_BITS) | slot
+            req.handle = (self._req_gen[slot] << _REQ_GEN_SHIFT) | _REQ_HANDLE_BASE | slot
             req.value = value
             req.kind = kind
             req.done = False
@@ -262,10 +371,10 @@ class PaxABI:
             req.on_complete = on_complete
         else:
             slot = len(self._req_pool)
-            if slot >= _REQ_MAX_SLOTS:
+            if slot >= self._req_max_slots:
                 raise PaxError(
                     PAX_ERR_REQUEST,
-                    f"request pool exhausted: {_REQ_MAX_SLOTS} outstanding "
+                    f"request pool exhausted: {self._req_max_slots} outstanding "
                     "nonblocking requests (wait/test some before issuing more)",
                 )
             req = Request(_REQ_HANDLE_BASE | slot, value, kind, False,
@@ -280,15 +389,18 @@ class PaxABI:
         """O(1) liveness: slot index + generation compare, no hashing."""
         if not handle & H._USER_BIT:
             return False
-        idx = handle & _USER_INDEX_MASK
-        slot = idx & _REQ_SLOT_MASK
-        return slot < len(self._req_gen) and self._req_gen[slot] == idx >> _REQ_SLOT_BITS
+        slot = handle & _USER_INDEX_MASK
+        return slot < len(self._req_gen) and self._req_gen[slot] == handle >> _REQ_GEN_SHIFT
 
     def _retire(self, handle: int) -> None:
-        """Free the handle's slot; bump generation so the handle goes stale."""
-        idx = handle & _USER_INDEX_MASK
-        slot = idx & _REQ_SLOT_MASK
-        self._req_gen[slot] = (self._req_gen[slot] + 1) & _REQ_GEN_MASK
+        """Free the handle's slot; bump generation so the handle goes stale.
+
+        The generation is an unbounded counter (stored above the handle's
+        classification bits), so a retired handle stays stale forever — no
+        wrap, no aliasing, regardless of how often the slot is reused.
+        """
+        slot = handle & _USER_INDEX_MASK
+        self._req_gen[slot] += 1
         self._req_free.append(slot)
         self._req_live -= 1
         pooled = self._req_pool[slot]
@@ -340,10 +452,9 @@ class PaxABI:
             if r.done:
                 continue
             h = r.handle
-            idx = h & _USER_INDEX_MASK
-            slot = idx & _REQ_SLOT_MASK
+            slot = h & _USER_INDEX_MASK
             if (not h & H._USER_BIT or slot >= len(gens)
-                    or gens[slot] != idx >> _REQ_SLOT_BITS):
+                    or gens[slot] != h >> _REQ_GEN_SHIFT):
                 return False
         return True
 

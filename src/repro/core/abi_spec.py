@@ -18,7 +18,13 @@ This module is that table, as data.  Every ABI entry point is one
 * the Mukautuva conversion signature: the foreign-library symbol
   (``impl_name``), the return protocol (``muk_ret``), and whether converted
   handle vectors must be kept alive in the request map until completion
-  (``temps`` — the §6.2 ``alltoallw`` worst case).
+  (``temps`` — the §6.2 ``alltoallw`` worst case);
+* its negotiation **tier** (``REQUIRED`` entries must resolve natively at
+  ``pax_init`` or init fails; ``OPTIONAL`` entries admit partial backends)
+  and, for optional entries, an **emulation recipe** (:class:`Recipe`) — a
+  declarative expression of the entry in terms of *other entries*, which
+  negotiation compiles into a closure when the backend does not export the
+  symbol but the recipe's dependency chain grounds out in entries it does.
 
 Consumers generate their layer from the table instead of hand-writing each
 entry point four times:
@@ -37,9 +43,37 @@ Adding an entry point is one row here plus the per-backend implementation.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Callable, Optional, Tuple
 
+from . import emulation as em
 from . import handles as H
+
+# ---------------------------------------------------------------------------
+# Negotiation tiers.  A REQUIRED entry must be natively resolvable at init
+# (it is either a pure handle query or the ground every recipe stands on);
+# an OPTIONAL entry may be emulated via its recipe, or left unresolved —
+# in which case *calling* it raises PAX_ERR_UNSUPPORTED_OPERATION, init
+# does not.
+# ---------------------------------------------------------------------------
+REQUIRED = "required"
+OPTIONAL = "optional"
+
+
+@dataclasses.dataclass(frozen=True)
+class Recipe:
+    """A declarative emulation of one entry in terms of other entries.
+
+    ``deps`` names the function-table entries the emulation calls; ``build``
+    is the compiler (see :mod:`repro.core.emulation`): it receives an
+    ``EmulationContext`` whose ``dep(name)`` returns the *resolved* callable
+    for each dependency — native backend method or previously-built
+    emulation — and returns a closure with the entry's backend signature.
+    ``validate_table`` guarantees the dependency graph is acyclic and
+    computes the topological build order.
+    """
+
+    deps: Tuple[str, ...]
+    build: Callable
 
 # ---------------------------------------------------------------------------
 # Argument domains.  The domain decides (a) the ABI-layer handle check and
@@ -99,6 +133,8 @@ class AbiEntry:
     fills_status: bool = False       # ABI-level `status=None` out-param
     muk_ret: str = "value"           # "value" | "rc_only" | "status"
     temps: bool = False              # stash converted vectors for the request map
+    tier: str = OPTIONAL             # REQUIRED | OPTIONAL (negotiation tier)
+    recipe: Optional[Recipe] = None  # emulation of this entry, if OPTIONAL
 
     def __post_init__(self):
         if not self.backend_method:
@@ -118,20 +154,27 @@ def _e(name, impl_name, args, **kw) -> AbiEntry:
 # The standard function table.
 # ---------------------------------------------------------------------------
 ABI_TABLE: Tuple[AbiEntry, ...] = (
-    # -- queries ----------------------------------------------------------
-    _e("comm_size", "Comm_size", [Arg("comm", COMM)], backend_method="size"),
-    _e("comm_rank", "Comm_rank", [Arg("comm", COMM)], backend_method="rank"),
-    _e("type_size", "Type_size", [Arg("datatype", DATATYPE)]),
-    # -- collectives ------------------------------------------------------
+    # -- queries (REQUIRED: pure handle queries every implementation can
+    #    answer; also the ground most recipes stand on) --------------------
+    _e("comm_size", "Comm_size", [Arg("comm", COMM)], backend_method="size",
+       tier=REQUIRED),
+    _e("comm_rank", "Comm_rank", [Arg("comm", COMM)], backend_method="rank",
+       tier=REQUIRED),
+    _e("type_size", "Type_size", [Arg("datatype", DATATYPE)], tier=REQUIRED),
+    # -- collectives (OPTIONAL; recipes express the derived ones) ----------
     _e("allreduce", "Allreduce",
        [Arg("x", PAYLOAD), Arg("op", OP), Arg("comm", COMM)],
-       nonblocking=True, bytes_arg="x", dtype_size_kwarg=True),
+       nonblocking=True, bytes_arg="x", dtype_size_kwarg=True,
+       recipe=Recipe(("reduce_scatter", "allgather", "comm_size"),
+                     em.build_allreduce)),
     _e("reduce", "Reduce",
        [Arg("x", PAYLOAD), Arg("op", OP), Arg("root", ROOT), Arg("comm", COMM)],
-       nonblocking=True, bytes_arg="x"),
+       nonblocking=True, bytes_arg="x",
+       recipe=Recipe(("allreduce",), em.build_reduce)),
     _e("bcast", "Bcast",
        [Arg("x", PAYLOAD), Arg("root", ROOT), Arg("comm", COMM)],
-       nonblocking=True, bytes_arg="x"),
+       nonblocking=True, bytes_arg="x",
+       recipe=Recipe(("allreduce", "comm_rank"), em.build_bcast)),
     _e("reduce_scatter", "Reduce_scatter",
        [Arg("x", PAYLOAD), Arg("op", OP), Arg("comm", COMM), Arg("axis", AXIS, 0)],
        nonblocking=True, bytes_arg="x"),
@@ -141,33 +184,109 @@ ABI_TABLE: Tuple[AbiEntry, ...] = (
     _e("alltoall", "Alltoall",
        [Arg("x", PAYLOAD), Arg("comm", COMM),
         Arg("split_axis", AXIS, 0), Arg("concat_axis", AXIS, 0)],
-       nonblocking=True, bytes_arg="x"),
+       nonblocking=True, bytes_arg="x",
+       recipe=Recipe(("allgather", "comm_rank", "comm_size"),
+                     em.build_alltoall)),
     _e("alltoallv", "Alltoallv",
        [Arg("x", PAYLOAD), Arg("sendcounts", COUNTS), Arg("recvcounts", COUNTS),
         Arg("comm", COMM)],
-       nonblocking=True, bytes_arg="x"),
+       nonblocking=True, bytes_arg="x",
+       recipe=Recipe(("alltoall", "comm_size"), em.build_alltoallv)),
     _e("alltoallw", "Alltoallw",
        [Arg("blocks", PAYLOAD), Arg("sendtypes", DATATYPE_VEC),
         Arg("recvtypes", DATATYPE_VEC), Arg("comm", COMM)],
-       nonblocking=True, bytes_arg="blocks", temps=True),
+       nonblocking=True, bytes_arg="blocks", temps=True,
+       recipe=Recipe(("alltoall",), em.build_alltoallw)),
     _e("scan", "Scan",
        [Arg("x", PAYLOAD), Arg("op", OP), Arg("comm", COMM)],
-       nonblocking=True, bytes_arg="x"),
+       nonblocking=True, bytes_arg="x",
+       recipe=Recipe(("allgather", "comm_rank", "comm_size"), em.build_scan)),
     _e("exscan", "Exscan",
        [Arg("x", PAYLOAD), Arg("op", OP), Arg("comm", COMM)],
-       nonblocking=True, bytes_arg="x"),
+       nonblocking=True, bytes_arg="x",
+       recipe=Recipe(("allgather", "comm_rank", "comm_size"), em.build_exscan)),
     _e("sendrecv", "Sendrecv",
        [Arg("x", PAYLOAD), Arg("perm", PERM), Arg("comm", COMM)],
        nonblocking=True, bytes_arg="x", fills_status=True, muk_ret="status"),
     _e("barrier", "Barrier", [Arg("comm", COMM)],
-       nonblocking=True, muk_ret="rc_only"),
+       nonblocking=True, muk_ret="rc_only",
+       recipe=Recipe(("allreduce",), em.build_barrier)),
     _e("scatter", "Scatter",
        [Arg("x", PAYLOAD), Arg("root", ROOT), Arg("comm", COMM), Arg("axis", AXIS, 0)],
-       nonblocking=True, bytes_arg="x"),
+       nonblocking=True, bytes_arg="x",
+       recipe=Recipe(("bcast", "comm_rank", "comm_size"), em.build_scatter)),
     _e("gather", "Gather",
        [Arg("x", PAYLOAD), Arg("root", ROOT), Arg("comm", COMM), Arg("axis", AXIS, 0)],
-       nonblocking=True, bytes_arg="x"),
+       nonblocking=True, bytes_arg="x",
+       recipe=Recipe(("allgather",), em.build_gather)),
 )
+
+
+# ---------------------------------------------------------------------------
+# Spec-load validation + the emulation build order.
+# ---------------------------------------------------------------------------
+def validate_table(table: Tuple[AbiEntry, ...]) -> Tuple[str, ...]:
+    """Validate tiers/recipes and return the topological resolution order.
+
+    Raises ``ValueError`` at spec-load time (never at ``pax_init``) when:
+
+    * two rows share a name;
+    * a recipe depends on an entry the table does not define;
+    * a REQUIRED entry carries a recipe (required means *natively* required —
+      an emulable entry is by definition optional);
+    * the recipe dependency graph has a cycle (no resolution order exists).
+
+    The returned order lists every entry name with all recipe dependencies
+    before their dependents, so negotiation can build emulation closures in
+    one forward pass.
+    """
+    by_name: dict = {}
+    for entry in table:
+        if entry.name in by_name:
+            raise ValueError(f"duplicate function-table entry {entry.name!r}")
+        by_name[entry.name] = entry
+    for entry in table:
+        if entry.recipe is None:
+            continue
+        if entry.tier == REQUIRED:
+            raise ValueError(
+                f"required entry {entry.name!r} carries an emulation recipe"
+            )
+        for dep in entry.recipe.deps:
+            if dep not in by_name:
+                raise ValueError(
+                    f"recipe for {entry.name!r} depends on unknown entry {dep!r}"
+                )
+    # DFS topo sort over recipe edges; entries without recipes are leaves.
+    order: list = []
+    state: dict = {}  # name -> 1 (on stack) | 2 (done)
+
+    def visit(name: str, chain: tuple) -> None:
+        if state.get(name) == 2:
+            return
+        if state.get(name) == 1:
+            cycle = chain[chain.index(name):] + (name,)
+            raise ValueError(
+                "recipe dependency cycle: " + " -> ".join(cycle)
+            )
+        state[name] = 1
+        recipe = by_name[name].recipe
+        if recipe is not None:
+            for dep in recipe.deps:
+                visit(dep, chain + (name,))
+        state[name] = 2
+        order.append(name)
+
+    for entry in table:
+        visit(entry.name, ())
+    return tuple(order)
+
+
+#: entries by name (negotiation + capability reporting index)
+ENTRY_BY_NAME: dict = {e.name: e for e in ABI_TABLE}
+
+#: topological resolution order — recipe deps always precede dependents
+EMULATION_ORDER: Tuple[str, ...] = validate_table(ABI_TABLE)
 
 # ---------------------------------------------------------------------------
 # Codegen helpers shared by the generating layers.

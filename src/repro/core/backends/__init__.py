@@ -9,6 +9,9 @@
 * :mod:`ring`  — algorithmic backend implementing collectives as explicit
   ``ppermute`` rings (reduce-scatter + all-gather), with an optional int8
   compressed wire format; used for collective-schedule experiments.
+* :mod:`minimal` — deliberately-partial native backend (handle queries +
+  sendrecv/reduce_scatter/allgather only); everything else is synthesized
+  by tiered negotiation from the spec's emulation recipes.
 """
-from . import paxi, ompix, ring  # noqa: F401
+from . import paxi, ompix, ring, minimal  # noqa: F401
 from .base import Backend  # noqa: F401

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from .. import compat
+from ..emulation import prefix_fold
 
 
 def rank(axes: Sequence[str]):
@@ -114,24 +115,14 @@ def scan_fold(x, fn: Callable, axes: Sequence[str], inclusive: bool = True):
     """Prefix reduction over linearized communicator rank (MPI_Scan/Exscan).
 
     Gathers every rank's contribution into a leading axis in linearized
-    (row-major) rank order, folds sequentially, and selects this rank's
-    prefix.  ``inclusive=False`` is the exscan: rank 0's result is its own
-    input unchanged (MPI leaves it undefined; this is our ABI's convention,
-    shared by every backend so results stay equivalent)."""
+    (row-major) rank order, then folds via the shared kernel
+    (``emulation.prefix_fold`` — one definition of the exscan rank-0
+    convention for native and emulated backends alike)."""
     axes = tuple(axes)
     if not axes:
         return x
     g = allgather(x[None], axes, axis=0)  # (S, *x.shape), linear rank order
-    r = rank(axes)
-    S = g.shape[0]
-    acc = g[0]
-    out = acc if inclusive else x
-    for j in range(1, S):
-        prev = acc
-        acc = fn(prev, g[j])
-        val = acc if inclusive else prev
-        out = jnp.where(r == j, val, out)
-    return out
+    return prefix_fold(g, rank(axes), fn, x, inclusive)
 
 
 def alltoallv(x, sendcounts: Sequence[int], recvcounts: Sequence[int],

@@ -13,8 +13,14 @@ table** (:mod:`repro.core.abi_spec`): every entry gets an
 unsupported-operation placeholder here, and backends override the entries
 they implement.  :meth:`Backend.supports` reports exactly which entries are
 overridden — the capability answer ``PaxABI.__init__`` negotiates against
-(the ``dlsym`` analogue): a backend missing an entry point fails at *init*
-with ``PAX_ERR_UNSUPPORTED_OPERATION``, never mid-step.
+(the ``dlsym`` analogue).  Negotiation is *tiered*: a backend missing a
+REQUIRED entry fails at init with ``PAX_ERR_UNSUPPORTED_OPERATION``, while
+missing OPTIONAL entries are emulated from their spec recipes (or deferred
+to a call-time error when no recipe chain grounds out) — partial backends
+are first-class.  A deliberately-partial backend declares its surface with
+``ABI_SUBSET`` (only these entries count as native) or ``ABI_DROPPED``
+(everything overridden except these), and :meth:`Backend.capability` is the
+per-entry report the ABI layer folds into ``PaxABI.capabilities()``.
 """
 from __future__ import annotations
 
@@ -25,6 +31,8 @@ import jax
 
 from ..abi_spec import ABI_TABLE, AbiEntry
 from ..errors import PAX_ERR_UNSUPPORTED_OPERATION, PaxError
+
+_ENTRY_NAMES = frozenset(e.name for e in ABI_TABLE)
 
 
 class Backend(abc.ABC):
@@ -37,6 +45,16 @@ class Backend(abc.ABC):
 
     def __init__(self, mesh: Optional[jax.sharding.Mesh] = None) -> None:
         self.mesh = mesh
+        # A typo in a declared partial surface must fail loudly here, not
+        # degrade into call-time unsupported errors far from the mistake.
+        for attr in ("ABI_SUBSET", "ABI_DROPPED"):
+            names = getattr(self, attr) or frozenset()
+            unknown = set(names) - _ENTRY_NAMES
+            if unknown:
+                raise ValueError(
+                    f"{type(self).__name__}.{attr} names unknown function-"
+                    f"table entries {sorted(unknown)}"
+                )
 
     # -- handle domain ----------------------------------------------------
     @abc.abstractmethod
@@ -51,15 +69,38 @@ class Backend(abc.ABC):
         return False
 
     # -- capability negotiation (the dlsym answer) -------------------------
-    def supports(self, entry: AbiEntry) -> bool:
-        """Whether this backend implements a function-table entry.
 
-        Default: the entry's method was overridden somewhere below
-        :class:`Backend` (the generated placeholders carry a marker).
-        Foreign adapters override this to ask their library instead.
+    #: restrict the native surface to exactly these entry names (a
+    #: deliberately-partial backend); None means "whatever is overridden"
+    ABI_SUBSET: Optional[frozenset] = None
+    #: entry names a subclass disclaims even though an implementation is
+    #: inherited (e.g. ring dropping its hand-written derived allreduce so
+    #: the spec recipe composes its native reduce-scatter/all-gather)
+    ABI_DROPPED: frozenset = frozenset()
+
+    def supports(self, entry: AbiEntry) -> bool:
+        """Whether this backend natively implements a function-table entry.
+
+        Tier-aware surface declaration: ``ABI_SUBSET``/``ABI_DROPPED`` gate
+        the answer before the override check, so a backend can be partial on
+        purpose and let negotiation emulate (optional tier) or reject
+        (required tier) the rest.  Default otherwise: the entry's method was
+        overridden somewhere below :class:`Backend` (the generated
+        placeholders carry a marker).  Foreign adapters override this to ask
+        their library instead.
         """
+        if self.ABI_SUBSET is not None and entry.name not in self.ABI_SUBSET:
+            return False
+        if entry.name in self.ABI_DROPPED:
+            return False
         impl = getattr(type(self), entry.backend_method, None)
         return impl is not None and not getattr(impl, "_pax_unsupported", False)
+
+    def capability(self, entry: AbiEntry) -> dict:
+        """This backend's view of one entry, folded into the per-context
+        report ``PaxABI.capabilities()``.  Adapters (Mukautuva) override to
+        translate the foreign library's symbol table across the layer."""
+        return {"backend": self.name, "native": self.supports(entry)}
 
 
 def _make_placeholder(entry: AbiEntry):

@@ -1,0 +1,41 @@
+"""minimal — a deliberately-partial native backend: the emulation stress test.
+
+The paper's ecosystem bet is that one standard function table can front many
+*unequal* implementations.  This backend is the most unequal one we can
+admit: it exports only the REQUIRED handle queries plus the three primitives
+every recipe chain grounds out in —
+
+* ``sendrecv``       (point-to-point permutation),
+* ``reduce_scatter`` (the reduction primitive),
+* ``allgather``      (the collection primitive).
+
+Everything else — allreduce, bcast, barrier, reduce, scan, exscan, alltoall,
+alltoallv, alltoallw, gather, scatter, and every ``i*`` twin — is
+synthesized at ``pax_init`` by tiered negotiation from the spec's emulation
+recipes, including the deepest chain in the table
+(``scatter -> bcast -> allreduce -> reduce_scatter + allgather``).  The
+multidev battery runs this backend through the same oracle checks as the
+full implementations, which is the end-to-end proof that partial backends
+are first-class citizens of the ABI.
+
+Implementation-wise the exported entries reuse the paxi lowering (this is a
+*native-convention* backend: ABI handles are its handles); the partial
+surface is declared with ``ABI_SUBSET``, the tier-aware capability gate in
+:class:`repro.core.backends.base.Backend`.
+"""
+from __future__ import annotations
+
+from .paxi import PaxiBackend
+
+
+class MinimalBackend(PaxiBackend):
+    """Native backend exporting only the recipe-ground primitives."""
+
+    name = "minimal"
+
+    ABI_SUBSET = frozenset({
+        # REQUIRED tier: handle queries
+        "comm_size", "comm_rank", "type_size",
+        # the primitives recipes ground out in
+        "sendrecv", "reduce_scatter", "allgather",
+    })

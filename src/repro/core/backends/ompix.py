@@ -234,8 +234,13 @@ class OmpixLib:
             return OMPIX_SUCCESS, _lax.pmin(x, comm.axes)
         return OMPIX_SUCCESS, _lax.allreduce_generic(x, op.fn, comm.axes)
 
-    def Reduce(self, x, op: OmpixOp, root: int, comm: OmpixComm):
-        return self.Allreduce(x, op, comm)
+    # NB: no ``Reduce`` and no ``Gather`` — this library deliberately does
+    # not export the derived collectives (they were hand-written forwards to
+    # Allreduce/Allgather).  The ABI layer's tiered negotiation emulates
+    # them from the entries the library *does* export, which is exactly how
+    # a partial foreign implementation is admitted behind the standard
+    # function table (paper §6; Mukautuva reports the symbol as absent and
+    # the recipe fills the hole above the translation layer).
 
     def Bcast(self, x, root: int, comm: OmpixComm):
         rc = self._check(comm)
@@ -288,12 +293,6 @@ class OmpixLib:
             for i in range(out.shape[0])
         ]
         return OMPIX_SUCCESS, parts
-
-    def Gather(self, x, root: int, comm: OmpixComm, axis: int = 0):
-        rc = self._check(comm)
-        if rc:
-            return rc, None
-        return OMPIX_SUCCESS, _lax.allgather(x, comm.axes, axis=axis)
 
     def Scan(self, x, op: OmpixOp, comm: OmpixComm):
         rc = self._check(comm, op)

@@ -19,6 +19,7 @@ Multi-axis communicators reduce hierarchically (axis by axis) — the classic
 """
 from __future__ import annotations
 
+import math
 from typing import Optional, Sequence
 
 import jax
@@ -117,56 +118,53 @@ def ring_scan_sum(x, axis_name: str, inclusive: bool = True):
     return acc
 
 
-def _pad_to_multiple(x, m: int):
-    n = x.shape[0]
-    pad = (-n) % m
-    if pad:
-        x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
-    return x, n
-
-
 class RingBackend(PaxiBackend):
     """ABI-native backend with explicit ring schedules for SUM collectives.
 
     Non-SUM ops and non-flattenable payloads fall back to the paxi lowering
     (an implementation is free to mix algorithms per op — MPI
     implementations do exactly this).
+
+    ``allreduce`` is deliberately **not** exported (``ABI_DROPPED``): the
+    hand-written RS+AG composition this backend used to carry is exactly the
+    spec's emulation recipe, so tiered negotiation now composes the ring
+    reduce-scatter and ring all-gather below — the backend shrank while its
+    coverage (and the compressed wire) stayed.  Reduce-scatter and
+    all-gather gained hierarchical multi-axis schedules (forward/reverse
+    axis order, chunk index == linearized rank) so the composed all-reduce
+    still runs the ring wire — compression included — on multi-axis
+    communicators.
     """
 
     name = "ring"
+
+    ABI_DROPPED = frozenset({"allreduce"})
 
     def __init__(self, *args, compress: Optional[str] = None, **kwargs) -> None:
         super().__init__(*args, **kwargs)
         self.compress = compress
 
-    # -- all-reduce: hierarchical ring RS+AG per axis ----------------------
-    def allreduce(self, x, op: int, comm: int):
-        axes = self.comm_axes(comm)
-        if op != H.PAX_SUM or not axes:
-            return super().allreduce(x, op, comm)
-        orig_shape = x.shape
-        flat = x.reshape(-1)
-        for a in axes:
-            S = self.comms.mesh.shape[a] if self.comms.mesh else 1
-            padded, n = _pad_to_multiple(flat, S)
-            chunk = ring_reduce_scatter(padded, a, self.compress)
-            flat = ring_allgather(chunk, a)[:n]
-        return flat.reshape(orig_shape)
+    def _axis_sizes(self, axes) -> list[int]:
+        mesh = self.comms.mesh
+        return [mesh.shape[a] if mesh else 1 for a in axes]
 
     def reduce_scatter(self, x, op: int, comm: int, axis: int = 0):
         axes = self.comm_axes(comm)
-        if op != H.PAX_SUM or len(axes) != 1 or axis != 0:
+        if op != H.PAX_SUM or not axes or axis != 0:
             return super().reduce_scatter(x, op, comm, axis=axis)
-        S = self.comms.mesh.shape[axes[0]] if self.comms.mesh else 1
-        if x.shape[0] % S:
+        if x.shape[0] % math.prod(self._axis_sizes(axes)):
             return super().reduce_scatter(x, op, comm, axis=axis)
-        return ring_reduce_scatter(x, axes[0], self.compress)
+        for a in axes:  # forward axis order: chunk == linearized rank
+            x = ring_reduce_scatter(x, a, self.compress)
+        return x
 
     def allgather(self, x, comm: int, axis: int = 0):
         axes = self.comm_axes(comm)
-        if len(axes) != 1 or axis != 0:
+        if not axes or axis != 0:
             return super().allgather(x, comm, axis=axis)
-        return ring_allgather(x, axes[0])
+        for a in reversed(axes):  # reverse order: inverse of reduce_scatter
+            x = ring_allgather(x, a)
+        return x
 
     def scan(self, x, op: int, comm: int):
         axes = self.comm_axes(comm)

@@ -1,0 +1,268 @@
+"""Emulation recipe builders — synthesizing missing entry points from present ones.
+
+The paper's translation layer works because one standard function table can
+front many *unequal* implementations: Mukautuva forwards to whatever the
+loaded MPI actually provides and papers over the rest.  This module is the
+"papers over" half for the ABI layer itself: every builder here compiles one
+missing function-table entry out of entries the backend *does* resolve — the
+resolve-and-extend pattern MPICH uses to prototype new entry points over its
+existing device layer.
+
+Each ``build_*`` function receives an :class:`EmulationContext` and returns a
+closure with the entry's backend-method signature.  The closure captures the
+**resolved** dependency callables (native methods or previously-built
+emulations — :func:`repro.core.abi_spec.validate_table` guarantees the
+dependency order is acyclic and topologically sorted), so emulated entries
+chain: on a backend exporting only ``sendrecv/reduce_scatter/allgather``,
+``scatter`` resolves as ``scatter -> bcast -> allreduce -> (reduce_scatter,
+allgather)`` — three recipes deep, grounding out in native entries.
+
+The closures are installed in ``PaxABI._table`` exactly like native
+callables, so ``PaxABI._specialize`` compiles the same per-context inline
+fast path around them and interposition tools observe emulated calls exactly
+as they observe native ones (one ``before``/``after`` pair for the top-level
+entry; the internal dependency calls are direct, not re-interposed).
+
+Wire-semantics notes:
+
+* ``allreduce`` pads the leading axis to a multiple of the communicator size
+  and composes reduce-scatter with all-gather (forward/reverse axis order, so
+  chunk index == linearized rank); padding rows are reduced and then sliced
+  off, which is correct for *any* reduction op because padding adds rows,
+  never extra rank contributions.
+* ``barrier`` is an all-reduce of a one-element buffer (the zero-byte
+  ``ibarrier``-from-``iallreduce`` idiom, rounded up to one element so the
+  wire op is well-formed).  Unlike a native barrier it carries no
+  optimization-barrier fence, so a scheduler may elide it when nothing
+  consumes it — emulation preserves the collective's semantics, not its
+  scheduling side effects.
+* ``scan``/``exscan`` gather every rank's contribution in linearized rank
+  order and fold locally; the exscan convention (rank 0 keeps its input
+  unchanged) matches the native backends.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import handles as H
+
+
+class EmulationContext:
+    """What a recipe may close over: resolved entries + backend handle queries.
+
+    Deliberately narrow — recipes express entries in terms of *other entries*
+    (plus the two non-table handle queries every backend must answer), never
+    in terms of backend internals, so one recipe works across paxi-convention
+    and Mukautuva-translated backends alike.
+    """
+
+    def __init__(self, abi) -> None:
+        self._abi = abi
+
+    def dep(self, name: str) -> Callable:
+        """The resolved callable for entry ``name`` (native or emulated)."""
+        return self._abi._table[name]
+
+    def op_fn(self, op: int) -> Callable:
+        return self._abi.backend.op_fn(op)
+
+    @property
+    def datatypes(self):
+        return self._abi.datatypes
+
+
+def _tag(fn: Callable, name: str, deps: tuple) -> Callable:
+    fn.__name__ = name
+    fn.__qualname__ = f"emulated.{name}"
+    fn.__emulated__ = True
+    fn.__emulated_deps__ = tuple(deps)
+    return fn
+
+
+def prefix_fold(g, r, fn: Callable, x, inclusive: bool):
+    """The shared scan/exscan kernel: fold gathered contributions ``g``
+    (leading axis = linearized communicator rank) into this rank's prefix.
+
+    One definition serves both the native lowering (``_lax.scan_fold``) and
+    the emulation recipe, so the ABI-wide exscan convention — rank 0 keeps
+    its input ``x`` unchanged (MPI: undefined) — cannot silently diverge
+    between native and emulated backends.
+    """
+    S = g.shape[0]
+    acc = g[0]
+    out = acc if inclusive else x
+    for j in range(1, S):
+        prev = acc
+        acc = fn(prev, g[j])
+        out = jnp.where(r == j, acc if inclusive else prev, out)
+    return out
+
+
+def build_allreduce(ctx: EmulationContext) -> Callable:
+    rs, ag, size = ctx.dep("reduce_scatter"), ctx.dep("allgather"), ctx.dep("comm_size")
+
+    def allreduce(x, op, comm):
+        S = size(comm)
+        if S <= 1:
+            return x
+        scalar = getattr(x, "ndim", 0) == 0
+        if scalar:
+            x = jnp.reshape(x, (1,))
+        n = x.shape[0]
+        pad = (-n) % S
+        if pad:
+            x = jnp.concatenate(
+                [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0
+            )
+        out = ag(rs(x, op, comm), comm)[:n]
+        return out[0] if scalar else out
+
+    return _tag(allreduce, "allreduce", ("reduce_scatter", "allgather", "comm_size"))
+
+
+def build_reduce(ctx: EmulationContext) -> Callable:
+    ar = ctx.dep("allreduce")
+
+    def reduce(x, op, root, comm):
+        # SPMD: computed everywhere, defined at root (the MPI contract).
+        return ar(x, op, comm)
+
+    return _tag(reduce, "reduce", ("allreduce",))
+
+
+def build_bcast(ctx: EmulationContext) -> Callable:
+    ar, rank = ctx.dep("allreduce"), ctx.dep("comm_rank")
+
+    def bcast(x, root, comm):
+        r = rank(comm)
+        return ar(jnp.where(r == root, x, jnp.zeros_like(x)), H.PAX_SUM, comm)
+
+    return _tag(bcast, "bcast", ("allreduce", "comm_rank"))
+
+
+def build_barrier(ctx: EmulationContext) -> Callable:
+    ar = ctx.dep("allreduce")
+
+    def barrier(comm):
+        ar(jnp.zeros((1,), jnp.float32), H.PAX_SUM, comm)
+        return None
+
+    return _tag(barrier, "barrier", ("allreduce",))
+
+
+def _build_scan(ctx: EmulationContext, inclusive: bool, name: str) -> Callable:
+    ag, rank, size = ctx.dep("allgather"), ctx.dep("comm_rank"), ctx.dep("comm_size")
+    op_fn = ctx.op_fn
+
+    def scan(x, op, comm):
+        S = size(comm)
+        if S <= 1:
+            return x
+        g = ag(x[None], comm)  # (S, *x.shape), linearized rank order
+        return prefix_fold(g, rank(comm), op_fn(op), x, inclusive)
+
+    return _tag(scan, name, ("allgather", "comm_rank", "comm_size"))
+
+
+def build_scan(ctx: EmulationContext) -> Callable:
+    return _build_scan(ctx, inclusive=True, name="scan")
+
+
+def build_exscan(ctx: EmulationContext) -> Callable:
+    return _build_scan(ctx, inclusive=False, name="exscan")
+
+
+def build_alltoall(ctx: EmulationContext) -> Callable:
+    ag, rank, size = ctx.dep("allgather"), ctx.dep("comm_rank"), ctx.dep("comm_size")
+
+    def alltoall(x, comm, split_axis=0, concat_axis=0):
+        S = size(comm)
+        if S <= 1:
+            return x
+        if x.shape[split_axis] % S:
+            raise ValueError(
+                f"alltoall split axis {split_axis} (length "
+                f"{x.shape[split_axis]}) not divisible by comm size {S}"
+            )
+        blk = x.shape[split_axis] // S
+        g = ag(x[None], comm)  # (S, *x.shape)
+        mine = lax.dynamic_slice_in_dim(g, rank(comm) * blk, blk,
+                                        axis=split_axis + 1)
+        return jnp.concatenate([mine[j] for j in range(S)], axis=concat_axis)
+
+    return _tag(alltoall, "alltoall", ("allgather", "comm_rank", "comm_size"))
+
+
+def build_alltoallv(ctx: EmulationContext) -> Callable:
+    a2a, size = ctx.dep("alltoall"), ctx.dep("comm_size")
+
+    def alltoallv(x, sendcounts, recvcounts, comm):
+        sendcounts = tuple(int(c) for c in sendcounts)
+        recvcounts = tuple(int(c) for c in recvcounts)
+        if len(sendcounts) != len(recvcounts):
+            raise ValueError("sendcounts and recvcounts must have equal length")
+        if len(set(sendcounts) | set(recvcounts)) != 1:
+            raise ValueError(
+                "SPMD alltoallv requires uniform counts (one static trace "
+                "cannot express per-rank-varying counts); got "
+                f"sendcounts={sendcounts}, recvcounts={recvcounts}"
+            )
+        c = sendcounts[0]
+        P = len(sendcounts)
+        if x.shape[0] != P * c:
+            raise ValueError(f"payload has {x.shape[0]} rows, counts promise {P}x{c}")
+        S = size(comm)
+        if S <= 1:
+            if P != 1:
+                raise ValueError("group-of-one alltoallv takes exactly one count")
+            return x
+        if P != S:
+            raise ValueError(f"{P} counts for a size-{S} communicator")
+        if c == 0:
+            return x[:0]
+        out = a2a(x.reshape((P, c) + x.shape[1:]), comm, 0, 0)
+        return out.reshape((P * c,) + x.shape[1:])
+
+    return _tag(alltoallv, "alltoallv", ("alltoall", "comm_size"))
+
+
+def build_alltoallw(ctx: EmulationContext) -> Callable:
+    a2a = ctx.dep("alltoall")
+    datatypes = ctx.datatypes
+
+    def alltoallw(blocks, sendtypes, recvtypes, comm):
+        out = a2a(blocks, comm, 0, 0)
+        return [
+            out[i].astype(datatypes.to_numpy_dtype(recvtypes[i]))
+            for i in range(out.shape[0])
+        ]
+
+    return _tag(alltoallw, "alltoallw", ("alltoall",))
+
+
+def build_gather(ctx: EmulationContext) -> Callable:
+    ag = ctx.dep("allgather")
+
+    def gather(x, root, comm, axis=0):
+        # SPMD gather == allgather (defined at root, replicated elsewhere).
+        return ag(x, comm, axis=axis)
+
+    return _tag(gather, "gather", ("allgather",))
+
+
+def build_scatter(ctx: EmulationContext) -> Callable:
+    bc, rank, size = ctx.dep("bcast"), ctx.dep("comm_rank"), ctx.dep("comm_size")
+
+    def scatter(x, root, comm, axis=0):
+        y = bc(x, root, comm)
+        S = size(comm)
+        if S <= 1:
+            return y
+        chunk = y.shape[axis] // S
+        return lax.dynamic_slice_in_dim(y, rank(comm) * chunk, chunk, axis=axis)
+
+    return _tag(scatter, "scatter", ("bcast", "comm_rank", "comm_size"))

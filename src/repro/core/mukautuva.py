@@ -133,6 +133,19 @@ class MukBackend(Backend):
     def supports(self, entry: abi_spec.AbiEntry) -> bool:
         return hasattr(self.lib, entry.impl_name)
 
+    def capability(self, entry: abi_spec.AbiEntry) -> dict:
+        """Translate capability info across the layer: the ABI-side report
+        names the foreign symbol that was (or was not) resolved, so
+        ``PaxABI.capabilities()`` distinguishes "the foreign library exports
+        ``Allreduce`` behind the trampoline" from "the ABI layer emulated
+        ``reduce`` because ``libompix`` has no ``Reduce`` symbol"."""
+        return {
+            "backend": self.name,
+            "native": self.supports(entry),
+            "impl": self.lib.name,
+            "impl_symbol": entry.impl_name,
+        }
+
     # ------------------------------------------------------------------
     # predefined-handle maps (the compile-time knowledge of both ABIs)
     # ------------------------------------------------------------------

@@ -21,7 +21,10 @@ Names:
   Mukautuva translation layer (§6.2);
 * ``muk:paxi``   — the trampoline wrapped around a *native* library:
   isolates pure translation-layer overhead (the "+ Mukautuva" rows of
-  Table 1).
+  Table 1);
+* ``minimal``    — deliberately-partial native implementation (handle
+  queries + sendrecv/reduce_scatter/allgather); every other entry point is
+  synthesized by tiered negotiation from the spec's emulation recipes.
 """
 from __future__ import annotations
 
@@ -32,6 +35,7 @@ import jax
 
 from .abi import PaxABI
 from .backends.base import Backend
+from .backends.minimal import MinimalBackend
 from .backends.ompix import OmpixLib
 from .backends.paxi import PaxiBackend
 from .backends.ring import RingBackend
@@ -68,6 +72,7 @@ register_backend("ring-int8", lambda mesh: RingBackend(mesh, compress="int8"))
 register_backend("ring-bf16", lambda mesh: RingBackend(mesh, compress="bf16"))
 register_backend("ompix", lambda mesh: MukBackend(OmpixLib(mesh), mesh))
 register_backend("muk:paxi", _muk_paxi)
+register_backend("minimal", lambda mesh: MinimalBackend(mesh))
 
 
 def get_backend(name: str, mesh: Optional[jax.sharding.Mesh] = None) -> Backend:
@@ -84,13 +89,16 @@ def pax_init(
     mesh: Optional[jax.sharding.Mesh] = None,
     impl: Optional[str] = None,
     tools: Sequence = (),
+    req_slot_bits: Optional[int] = None,
 ) -> PaxABI:
     """``MPI_Init`` analogue: resolve the implementation, build the context.
 
     The returned :class:`PaxABI` is the only object user code needs; user
     code never sees backend-domain handles, so the implementation can be
     swapped per-init without re-tracing anything built on the ABI.
+    ``req_slot_bits`` sets this context's request-pool slot/generation split
+    (slots = outstanding-request cap; generations are unbounded above).
     """
     name = impl or os.environ.get(ENV_VAR, DEFAULT_IMPL)
     backend = get_backend(name, mesh)
-    return PaxABI(backend, mesh=mesh, tools=tools)
+    return PaxABI(backend, mesh=mesh, tools=tools, req_slot_bits=req_slot_bits)

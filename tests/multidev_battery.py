@@ -305,4 +305,55 @@ np.testing.assert_allclose(np.asarray(d_g), 0.0)  # rs shard == rank slice
 assert dist.abi.outstanding_requests == 0
 print("  zero1 moment/param/grad shard alignment dp=2 OK")
 
+# ---------------------------------------------------------------------------
+section("8. tiered negotiation: minimal backend emulation chains end-to-end")
+# The deliberately-partial backend (handle queries + sendrecv/reduce_scatter/
+# allgather) must run the training round trip and the deepest recipe chains
+# (scatter -> bcast -> allreduce -> rs+ag) purely through emulation.
+dist_min = make_dist(mesh, impl="minimal")
+caps = dist_min.abi.capabilities()
+assert caps["allreduce"]["source"] == "emulated", caps["allreduce"]
+assert caps["scatter"]["source"] == "emulated"
+assert caps["scatter"]["deps"] == ("bcast", "comm_rank", "comm_size")
+assert caps["reduce_scatter"]["source"] == "native"
+assert not [n for n, i in caps.items() if i["source"] == "unavailable"]
+
+out8 = np.asarray(jax.jit(dist_min.abi.shard_region(
+    lambda v: zero1_step(dist_min, v, lambda s: s * 2.0, buckets=2)[0],
+    in_specs=P("data"), out_specs=P()))(jnp.asarray(vin))[:NV])
+np.testing.assert_allclose(out8, expect, rtol=1e-6)
+assert dist_min.abi.outstanding_requests == 0
+print("  zero1_step dp=2 on minimal backend OK (native rs/ag, pooled i*)")
+
+abi_min = dist_min.abi
+mp8 = abi_min.comm_from_axes(("model",))
+
+
+def body8(x):
+    # allreduce (emulated, depth 1), bcast (depth 2) and scatter (depth 3 —
+    # the deepest chain), plus emulated alltoall/scan/barrier, all checked
+    # against the native-oracle expectations from sections 1 and 3
+    ar = abi_min.allreduce(x, C.PAX_SUM, world)
+    b = abi_min.bcast(x, root=3, comm=world)
+    sc8 = abi_min.scatter(b, root=0, comm=world)
+    a2a = abi_min.alltoall(x.reshape(4, 2), mp8, 0, 0)
+    s = abi_min.scan(x, C.PAX_SUM, world)
+    abi_min.barrier(world)
+    return ar, b, sc8, a2a.reshape(-1), s
+
+
+f8 = abi_min.shard_region(
+    body8, in_specs=P(("data", "model")),
+    out_specs=(P(), P(), P(("data", "model")), P(("data", "model")),
+               P(("data", "model"))),
+)
+ar8, b, sc8, a2a8, s8 = jax.jit(f8)(jnp.asarray(XG.reshape(-1)))
+np.testing.assert_allclose(np.asarray(ar8[:8]), exp_sum, rtol=1e-5)
+np.testing.assert_allclose(np.asarray(b[:8]), XG[3])
+np.testing.assert_allclose(np.asarray(sc8), XG[3])
+np.testing.assert_allclose(np.asarray(a2a8[:8]), exp_a2a0)
+np.testing.assert_allclose(np.asarray(s8).reshape(8, 8), exp_scan, rtol=1e-5)
+assert dist_min.abi.outstanding_requests == 0
+print("  emulation chains (depth 1-3) match native oracles OK")
+
 print("BATTERY PASSED")

@@ -56,16 +56,28 @@ def test_spec_covers_new_entries():
 # ---------------------------------------------------------------------------
 # init-time negotiation (the dlsym analogue)
 # ---------------------------------------------------------------------------
+class _NoTypeSizeBackend(PaxiBackend):
+    name = "notypesize"
+    type_size = None  # simulate a library that does not export the symbol
+
+
+def test_negotiation_rejects_missing_required_entry_at_init(mesh1):
+    with pytest.raises(PaxError) as e:
+        PaxABI(_NoTypeSizeBackend(mesh1))
+    assert e.value.code == PAX_ERR_UNSUPPORTED_OPERATION
+    assert "type_size" in str(e.value)
+
+
 class _NoScanBackend(PaxiBackend):
     name = "noscan"
-    scan = None  # simulate a library that does not export the symbol
+    scan = None  # missing OPTIONAL symbol -> emulated, not rejected
 
 
-def test_negotiation_rejects_missing_entry_at_init(mesh1):
-    with pytest.raises(PaxError) as e:
-        PaxABI(_NoScanBackend(mesh1))
-    assert e.value.code == PAX_ERR_UNSUPPORTED_OPERATION
-    assert "scan" in str(e.value)
+def test_negotiation_emulates_missing_optional_entry(mesh1):
+    abi = PaxABI(_NoScanBackend(mesh1))
+    assert abi.capabilities()["scan"]["source"] == "emulated"
+    x = jnp.arange(4.0)
+    assert np.allclose(abi.scan(x, C.PAX_SUM, C.PAX_COMM_SELF), x)
 
 
 def test_negotiation_resolves_full_table(mesh1):

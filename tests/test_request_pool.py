@@ -1,17 +1,17 @@
 """Free-list request pool: (slot, generation) handle encoding, exact
-use-after-wait detection, slot reuse, and the index-space regression (the
-old monotonically increasing index exhausted ``make_user_handle`` after
-2^24 nonblocking calls)."""
+use-after-wait detection, slot reuse, the index-space regression (the old
+monotonically increasing index exhausted ``make_user_handle`` after 2^24
+nonblocking calls), and the widened per-context split (generations live
+above the classification bits and never wrap, so a stale handle can never
+alias a slot reuse — the old 10-bit generation aliased after 1024 reuses)."""
 import jax.numpy as jnp
 import pytest
 
 import repro.core as C
 from repro.core import handles as H
 from repro.core.abi import (
-    _REQ_GEN_MASK,
+    _REQ_GEN_SHIFT,
     _REQ_MAX_SLOTS,
-    _REQ_SLOT_BITS,
-    _REQ_SLOT_MASK,
     Request,
 )
 from repro.core.errors import PAX_ERR_REQUEST, PaxError
@@ -26,11 +26,11 @@ X = jnp.ones(4)
 
 
 def _slot(req):
-    return H.user_handle_index(req.handle) & _REQ_SLOT_MASK
+    return H.user_handle_index(req.handle)
 
 
 def _gen(req):
-    return H.user_handle_index(req.handle) >> _REQ_SLOT_BITS
+    return req.handle >> _REQ_GEN_SHIFT
 
 
 def test_handles_encode_slot_and_generation(abi):
@@ -40,6 +40,13 @@ def test_handles_encode_slot_and_generation(abi):
     assert (_slot(r0), _gen(r0)) == (0, 0)
     assert (_slot(r1), _gen(r1)) == (1, 0)
     abi.waitall([r0, r1])
+    # post-retirement reissue: generation above the classification bits, so
+    # the handle still decodes as a REQUEST user handle
+    r2 = abi.iallreduce(X, C.PAX_SUM, C.PAX_COMM_SELF)
+    assert _gen(r2) >= 1
+    assert H.handle_kind(r2.handle) == H.HandleKind.REQUEST
+    assert H.is_user_handle(r2.handle)
+    abi.wait(r2)
 
 
 def test_use_after_wait_raises_err_request(abi):
@@ -83,23 +90,32 @@ def test_pool_recycles_request_objects_in_place(abi):
     abi.wait(r2)
 
 
-def test_generation_wrap_keeps_pool_bounded(abi):
-    """The >16M-sequential-calls regression, exercised via generation wrap:
-    the handle index no longer grows with the lifetime call count, so the
-    24-bit field can never exhaust — 2x the full generation space on one
-    slot leaves the pool at a single slot and keeps issuing fine."""
-    cycles = 2 * (_REQ_GEN_MASK + 1) + 5
+def test_generation_never_wraps_or_aliases(abi):
+    """The ROADMAP open item, fixed: pre-widening, the 10-bit generation
+    wrapped after 1024 reuses of a slot, at which point a very stale handle
+    aliased the live request.  Generations now live above the handle's
+    classification bits as an unbounded counter: 1500 reuses of slot 0 later,
+    the cycle-0 handle is still exactly detected as stale and the pool is
+    still one slot."""
+    first = abi.iallreduce(X, C.PAX_SUM, C.PAX_COMM_SELF)
+    stale = first.handle
+    abi.wait(first)
+    cycles = 1500  # > the old 1024-generation wrap
     for i in range(cycles):
         req = abi.iallreduce(X, C.PAX_SUM, C.PAX_COMM_SELF)
         assert _slot(req) == 0
-        assert _gen(req) == i % (_REQ_GEN_MASK + 1)
+        assert _gen(req) == i + 1
+        assert req.handle != stale
+        with pytest.raises(PaxError):  # would alias at i==1023 pre-widening
+            abi.wait(Request(stale))
         abi.wait(req)
     assert len(abi._req_pool) == 1
-    assert abi.requests_issued == cycles
+    assert abi.requests_issued == cycles + 1
+    assert H.handle_kind(req.handle) == H.HandleKind.REQUEST
 
 
 def test_lifetime_count_past_16m_does_not_exhaust_handles(abi):
-    """Pre-PR, the 16,777,216th nonblocking call raised ValueError from
+    """Pre-PR-2, the 16,777,216th nonblocking call raised ValueError from
     make_user_handle mid-run.  The pool's handles are (slot, generation)
     only; a lifetime count beyond 2^24 is irrelevant by construction."""
     abi.requests_issued = (1 << 24) + 7  # simulate a long-lived context
@@ -107,6 +123,24 @@ def test_lifetime_count_past_16m_does_not_exhaust_handles(abi):
     assert H.user_handle_index(req.handle) <= H._USER_INDEX_MASK
     abi.wait(req)
     assert abi.requests_issued == (1 << 24) + 8
+
+
+def test_per_context_slot_split(mesh1):
+    """The split is per-context: a small-slot context caps its outstanding
+    requests (clean PAX_ERR_REQUEST beyond) without touching the default."""
+    small = C.pax_init(mesh1, impl="paxi", req_slot_bits=3)
+    assert small._req_max_slots == 8
+    reqs = [small.iallreduce(X, C.PAX_SUM, C.PAX_COMM_SELF) for _ in range(8)]
+    with pytest.raises(PaxError) as e:
+        small.iallreduce(X, C.PAX_SUM, C.PAX_COMM_SELF)
+    assert e.value.code == PAX_ERR_REQUEST
+    assert "pool exhausted" in str(e.value)
+    small.waitall(reqs)
+    assert small.outstanding_requests == 0
+    # the default split is unchanged, and bad splits are rejected up front
+    assert C.pax_init(mesh1, impl="paxi")._req_max_slots == _REQ_MAX_SLOTS == 1 << 14
+    with pytest.raises(ValueError):
+        C.pax_init(mesh1, impl="paxi", req_slot_bits=25)
 
 
 def test_pool_exhaustion_is_a_clean_error(abi):
