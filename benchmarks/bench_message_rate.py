@@ -107,6 +107,66 @@ def _direct_ns(call, x, number: int = 50000, rounds: int = 9) -> float:
     return best / number
 
 
+def _persistent_session_ns(items: dict, x, number: int = 50000,
+                           rounds: int = 15) -> dict:
+    """Interleaved best-of-rounds dispatch cost per item, in ns.
+
+    Items are either a :class:`~repro.core.Plan` (timed as the canonical
+    persistent hot path, hoisted ``start``/``wait`` closures; ``abi.wait``
+    on the returned request is the pool-integrated equivalent) or a direct
+    callable timed exactly like :func:`_direct_ns`.  Everything the
+    persistent gates compare is timed in ONE session with *interleaved,
+    rotated* rounds — like :func:`measure` does for trace chains — because
+    the gated outputs are *ratios* of structurally similar sub-microsecond
+    paths: measured in separate sessions, sustained load shifts on shared
+    runners swamp the difference (observed ±50%); interleaving cancels
+    them."""
+    op, comm = C.PAX_SUM, C.PAX_COMM_SELF
+    hoisted = {}
+    for name, item in items.items():
+        if callable(item):
+            item(x, op, comm)  # warm
+            hoisted[name] = ("call", item)
+        else:
+            s, w = item.start, item.wait
+            w()      # ensure inactive
+            s(x)
+            w()      # warm
+            hoisted[name] = ("plan", (s, w))
+    names = list(hoisted)
+    per_round: dict = {name: [] for name in names}
+    gc_was_enabled = gc.isenabled()
+    gc.disable()
+    try:
+        for rep in range(rounds):
+            for name in names[rep % len(names):] + names[:rep % len(names)]:
+                kind, h = hoisted[name]
+                if kind == "plan":
+                    s, w = h
+                    t0 = time.perf_counter_ns()
+                    for _ in range(number):
+                        s(x)
+                        w()
+                    dt = time.perf_counter_ns() - t0
+                else:
+                    t0 = time.perf_counter_ns()
+                    for _ in range(number):
+                        h(x, op, comm)
+                    dt = time.perf_counter_ns() - t0
+                per_round[name].append(dt)
+            gc.collect(0)
+    finally:
+        if gc_was_enabled:
+            gc.enable()
+    return {name: [dt / number for dt in dts] for name, dts in per_round.items()}
+
+
+def _median(xs):
+    xs = sorted(xs)
+    mid = len(xs) // 2
+    return xs[mid] if len(xs) % 2 else (xs[mid - 1] + xs[mid]) / 2.0
+
+
 def _abi_factory(abi):
     def factory():
         def chain(x):
@@ -174,8 +234,15 @@ def run() -> list[tuple[str, float, str, str]]:
     # dispatch price of emulation, gated by check_regression.py.  The ring
     # row is the same recipe composed over ring's native rs/ag — the path
     # that replaced ring's hand-written derived allreduce.
-    emu_ns = _direct_ns(C.pax_init(mesh, impl="minimal").allreduce, x8)
-    ring_ns = _direct_ns(C.pax_init(mesh, impl="ring").allreduce, x8)
+    # NB recipes build lazily since PR 4: call once (builds + respecializes
+    # the entry), then re-fetch the attribute so the timed callable is the
+    # steady-state specialized path, not the pre-build shim.
+    abi_emu = C.pax_init(mesh, impl="minimal")
+    abi_emu.allreduce(x8, C.PAX_SUM, C.PAX_COMM_SELF)
+    emu_ns = _direct_ns(abi_emu.allreduce, x8)
+    abi_ring = C.pax_init(mesh, impl="ring")
+    abi_ring.allreduce(x8, C.PAX_SUM, C.PAX_COMM_SELF)
+    ring_ns = _direct_ns(abi_ring.allreduce, x8)
     rows.append(("dispatch_ns_allreduce_emulated", emu_ns, "ns",
                  "minimal backend: recipe allreduce (rs+ag), specialized path"))
     rows.append(("dispatch_ns_allreduce_ring_recipe", ring_ns, "ns",
@@ -183,6 +250,46 @@ def run() -> list[tuple[str, float, str, str]]:
     rows.append(("dispatch_emulated_native_ratio", emu_ns / spec_ns, "x",
                  f"emulated {emu_ns:.0f}ns vs native specialized "
                  f"{spec_ns:.0f}ns per call"))
+
+    # Persistent plans (MPI-4 <name>_init, PR 4): everything the specialized
+    # path still does per call — handle checks, comm→axes lookup, op branch,
+    # recipe-chain composition — is hoisted to plan time, so start+wait is a
+    # bare closure call plus restartable-request bookkeeping.  Two gates:
+    # the persistent path must beat the specialized per-call path by >= 1.5x
+    # on the native backend, and the *emulated* persistent path must sit
+    # within 1.2x of the native one.  On this one-device bench every comm is
+    # a group of one, so what the emulated gate pins is that ALL recipe
+    # decisions — including the size short-circuit the per-call emulated
+    # closure re-evaluates every call (the visible chunk of
+    # dispatch_emulated_native_ratio) — happened at plan time: a regression
+    # that defers any of them to start (e.g. degenerating the recipe plan to
+    # argument freezing around the built closure) reopens a ~2x premium and
+    # trips the gate.  Chain semantics for S>1 (pad/slice composition) are
+    # proven in the multidev battery, section 9.
+    pers = _persistent_session_ns(
+        {"specialized": abi.allreduce,
+         "native": abi.allreduce_init(x8, C.PAX_SUM, C.PAX_COMM_SELF),
+         "emulated": abi_emu.allreduce_init(x8, C.PAX_SUM, C.PAX_COMM_SELF)},
+        x8)
+    # the gated figures are MEDIANS OF PER-ROUND RATIOS (adjacent-in-time
+    # pairs from the interleaved session, the testall-flatness statistic):
+    # a best-of ratio of two ~300ns near-identical paths still swings ±25%
+    # with load phase; the per-round pairing cancels it.
+    pers_ns = min(pers["native"])
+    rows.append(("dispatch_ns_allreduce_persistent", pers_ns, "ns",
+                 "paxi plan start+wait (backend-hook plan, frozen axes/op)"))
+    speedup = _median([s / n for s, n in zip(pers["specialized"],
+                                             pers["native"])])
+    emu_ratio = _median([e / n for e, n in zip(pers["emulated"],
+                                               pers["native"])])
+    rows.append(("persistent_speedup_vs_specialized", speedup, "x",
+                 f"persistent {pers_ns:.0f}ns best vs specialized "
+                 f"{min(pers['specialized']):.0f}ns best; median per-round "
+                 "ratio, interleaved session (gate: >= 1.5)"))
+    rows.append(("persistent_emulated_native_ratio", emu_ratio, "x",
+                 f"emulated-plan {min(pers['emulated']):.0f}ns best vs "
+                 f"native-plan {pers_ns:.0f}ns best; median per-round ratio "
+                 "(gate: <= 1.2)"))
 
     # structural zero-overhead claim (Table 1: MPICH ABI == MPICH),
     # compared over a communicator with real axes so both sides emit an

@@ -32,6 +32,13 @@ baseline box and the CI runner:
   both sides measured in one process) must not exceed the baseline's ratio
   by more than the tolerance (default 50%) — emulation is allowed to cost
   its bounded constant, not to quietly grow a new per-call layer.
+* **persistent-plan gates** (PR 4): ``persistent_speedup_vs_specialized``
+  (plan start+wait vs the specialized per-call path, same process) must stay
+  above ``max(baseline·(1-tolerance), 1.5)`` — the plan subsystem's whole
+  point is that plan-time hoisting beats even the specialized dispatch — and
+  ``persistent_emulated_native_ratio`` must stay below
+  ``min(baseline·(1+emulation-tolerance), 1.2)``: with the recipe chain
+  composed at plan time, emulated plans may not reopen a per-call premium.
 * **request-scan flatness**: per-request ``testall`` scan cost at 1000
   outstanding requests must stay within ±20% of the 10-request cost (the
   pool's O(1) contract), as recorded by the run itself.
@@ -113,6 +120,33 @@ def main(argv=None) -> int:
             print("OK " + line)
     except KeyError as e:
         failures.append(f"missing emulation record: {e}")
+
+    # -- persistent-plan gates (plan-time hoisting, PR 4) ------------------
+    try:
+        cur_p = cur["persistent_speedup_vs_specialized"]
+        base_p = base["persistent_speedup_vs_specialized"]
+        floor = max(base_p * (1.0 - args.tolerance), 1.5)
+        line = (f"persistent/specialized speedup: current={cur_p:.3f} "
+                f"baseline={base_p:.3f} floor={floor:.3f}")
+        if cur_p < floor:
+            failures.append("REGRESSION " + line)
+        else:
+            print("OK " + line)
+    except KeyError as e:
+        failures.append(f"missing persistent record: {e}")
+
+    try:
+        cur_pe = cur["persistent_emulated_native_ratio"]
+        base_pe = base["persistent_emulated_native_ratio"]
+        ceiling = min(base_pe * (1.0 + args.emulation_tolerance), 1.2)
+        line = (f"persistent emulated/native ratio: current={cur_pe:.3f} "
+                f"baseline={base_pe:.3f} ceiling={ceiling:.3f}")
+        if cur_pe > ceiling:
+            failures.append("REGRESSION " + line)
+        else:
+            print("OK " + line)
+    except KeyError as e:
+        failures.append(f"missing persistent-emulation record: {e}")
 
     # -- request-scan flatness (from the current run alone) ----------------
     for impl in ("paxi", "ompix"):

@@ -11,7 +11,7 @@ Public surface::
     dp  = abi.comm_from_axes(("pod", "data"))  # derived communicator
     ... inside shard_map: abi.allreduce(g, PAX_SUM, dp) ...
 """
-from .abi import PaxABI, Request  # noqa: F401
+from .abi import PaxABI, Plan, Request  # noqa: F401
 from .communicator import CommInfo, CommTable  # noqa: F401
 from .constants import *  # noqa: F401,F403
 from .datatypes import DatatypeRegistry, TypeDescriptor, N_PREDEFINED  # noqa: F401

@@ -40,6 +40,21 @@ closure.  Attaching or detaching a tool (:meth:`attach_tool` /
 are init-frequency events, per-call dispatch is not.  The generic
 spec-generated methods remain on the class as the uninstantiated fallback.
 
+**Persistent plans (MPI-4 ``<name>_init``).**  Every nonblocking entry also
+generates a plan constructor: ``allreduce_init(x, op, comm)`` binds the
+arguments (payload abstractly — shape/dtype, the dataflow edition of MPI's
+bound buffer) and hoists ALL remaining per-call work to plan time: handle
+checks, comm→axes lookup, the backend's op/schedule branch (native
+``plan_<method>`` hooks), Mukautuva's foreign-handle conversion, emulation
+recipe-chain composition with precomputed padding/slicing
+(``Recipe.plan``), and the tool-interposition decision.  ``plan.start(x)``
+is then an inactive-check plus a bare closure call into the backend, and
+the plan's request is a *restartable* pool slot (inactive⇄active, zero
+generation churn; see the PR 4 ROADMAP note for the plan-time/call-time
+split and the attach_tool respecialization contract).  Emulation recipes
+build lazily — on first call or first plan — and ``capabilities()`` reports
+``emulated`` without forcing the build.
+
 **Free-list request pool.**  Nonblocking operations return
 :class:`Request` handles.  The value is produced eagerly in dataflow terms
 (XLA schedules collectives asynchronously; on TPU the latency-hiding
@@ -66,6 +81,7 @@ completion.
 from __future__ import annotations
 
 import dataclasses
+import weakref
 from typing import Any, Callable, Optional, Sequence
 
 import jax
@@ -106,9 +122,92 @@ class Request:
     # Mukautuva-style per-request temporaries (converted handle vectors etc.)
     temp_state: Any = None
     on_complete: Optional[Callable[["Request"], Any]] = None
+    #: persistent (plan-owned) requests are *restartable* pool slots: wait
+    #: deactivates (done=True) without retiring, start reactivates, and the
+    #: slot's generation only advances when the owning plan is freed.
+    persistent: bool = False
 
 
 REQUEST_NULL = Request(H.PAX_REQUEST_NULL, done=True)
+
+
+class Plan:
+    """A persistent-operation plan (the MPI-4 ``<name>_init`` analogue).
+
+    Built by the generated ``<name>_init`` constructors.  At plan time the
+    context hoists **everything** the specialized per-call path still does
+    per call: handle classification, comm→axes lookup, dtype/op conversion
+    (Mukautuva converts foreign handles once), emulation-chain composition
+    with precomputed padding/slicing, and the tool-interposition decision.
+    ``start(payload...)`` is then a bare closure call into the backend that
+    reactivates the plan's pooled request, and ``wait()`` (or the ABI-level
+    ``wait``/``waitall``/``testall`` on the returned request) deactivates it.
+    The request slot is allocated once and its generation never advances
+    across start/wait cycles — a training loop restarts the same slot every
+    step without churning Request objects or handles.  ``free()`` retires
+    the slot; the handle is then stale forever (generation bump).
+
+    Payload arguments are bound as *abstract* shapes: a plan is specific to
+    the payload's shape/dtype (and to its non-payload arguments), exactly
+    like an MPI persistent collective is specific to its bound buffer.
+    ``attach_tool``/``detach_tool`` respecialize live plans the same way
+    they respecialize the per-context entry points.
+    """
+
+    __slots__ = ("abi", "entry", "bound", "request", "freed",
+                 "start", "wait", "_finalizer", "__weakref__")
+
+    def __init__(self, abi, entry, bound) -> None:
+        self.abi = abi
+        self.entry = entry
+        self.bound = bound        # table-order args, payloads abstracted
+        self.request = None       # the restartable pooled Request
+        self.freed = False
+        self._finalizer = None    # GC fallback reclaiming the slot
+        # start/wait are compiled closures installed by _compile_plan
+
+    def reset(self) -> None:
+        """Force the plan inactive (escape hatch for an aborted trace that
+        left a ``start`` without its ``wait``)."""
+        req = self.request
+        if req is not None and not self.freed:
+            req.done = True
+            req.value = None
+
+    def free(self) -> None:
+        """Retire the plan's request slot (``MPI_Request_free``).
+
+        The plan must be inactive (started requests must be waited first).
+        The slot returns to the pool with its generation bumped, so every
+        handle the plan ever returned is stale *forever* — exactly like a
+        retired nonblocking request.
+        """
+        if self.freed:
+            return
+        req = self.request
+        if req is not None and not req.done:
+            raise PaxError(
+                PAX_ERR_REQUEST,
+                f"freeing an active persistent {self.entry.name!r} plan "
+                "(wait the started request first)",
+            )
+        self.freed = True
+        abi = self.abi
+        if self._finalizer is not None:
+            self._finalizer.detach()
+        if req is not None:
+            # one definition of slot retirement, shared with the GC fallback
+            _reclaim_plan_slot(abi, req, req.handle)
+        abi._plans.discard(self)
+
+        def dead(*args, **kwargs):
+            raise PaxError(
+                PAX_ERR_REQUEST,
+                f"persistent {self.entry.name!r} plan was freed",
+            )
+
+        self.start = dead
+        self.wait = dead
 
 # ---------------------------------------------------------------------------
 # Request-pool handle layout (widened, per-context).  The slot index lives in
@@ -143,6 +242,43 @@ def _unavailable_entry(entry: abi_spec.AbiEntry, backend_name: str, reason: str)
     unavailable.__name__ = entry.backend_method
     unavailable.__qualname__ = f"unavailable.{entry.name}"
     return unavailable
+
+
+def _reclaim_plan_slot(abi: "PaxABI", req: Request, handle: int) -> None:
+    """``weakref.finalize`` callback for a :class:`Plan` collected without
+    ``free()``: return its slot to the pool (same retirement as ``free``).
+    No-op when the plan was freed explicitly (``persistent`` cleared) or the
+    slot already moved on (handle mismatch after a generation bump)."""
+    if not req.persistent or req.handle != handle:
+        return
+    slot = handle & _USER_INDEX_MASK
+    abi._req_gen[slot] += 1
+    abi._req_free.append(slot)
+    req.persistent = False
+    req.done = True
+    req.value = req.temp_state = req.on_complete = None
+
+
+def _lazy_entry(abi: "PaxABI", entry: abi_spec.AbiEntry):
+    """Table slot for an emulated entry whose recipe has not been built yet.
+
+    Negotiation decides *that* the entry is emulated at init (the dependency
+    chain grounds out — ``capabilities()`` reports it without forcing
+    anything); the closure itself is compiled on the first call, which also
+    swaps the built closure into the table and respecializes the entry so
+    subsequent calls pay exactly what the eager build used to."""
+    state = {"impl": None}
+
+    def lazy(*args, **kwargs):
+        impl = state["impl"]
+        if impl is None:
+            impl = state["impl"] = abi._build_recipe(entry.name)
+        return impl(*args, **kwargs)
+
+    lazy.__lazy_recipe__ = state
+    lazy.__name__ = entry.backend_method
+    lazy.__qualname__ = f"lazy-emulated.{entry.name}"
+    return lazy
 
 
 class PaxABI:
@@ -180,7 +316,6 @@ class PaxABI:
                 f"entry point(s) {missing_required} (init-time negotiation, "
                 "paper §6.2)",
             )
-        ctx = emulation.EmulationContext(self)
         for name in abi_spec.EMULATION_ORDER:
             if name in self._table:
                 continue
@@ -189,7 +324,11 @@ class PaxABI:
             if recipe is not None and all(
                 self._source.get(d) in ("native", "emulated") for d in recipe.deps
             ):
-                self._table[name] = recipe.build(ctx)
+                # Lazy resolution: negotiation *decides* emulated here (the
+                # chain grounds out), but the closure is compiled on first
+                # call or first plan (_build_recipe), not at init — contexts
+                # using few entries never pay for the rest.
+                self._table[name] = _lazy_entry(self, entry)
                 self._source[name] = "emulated"
             else:
                 if recipe is None:
@@ -224,6 +363,10 @@ class PaxABI:
         self._req_live = 0
         self.requests_issued = 0  # lifetime stat; NOT part of any handle
         self.finalized = False
+        # live persistent plans (weak: a dropped plan is garbage, its slot is
+        # reclaimed only by an explicit free); respecialized with the entry
+        # points on attach_tool/detach_tool
+        self._plans: weakref.WeakSet[Plan] = weakref.WeakSet()
         # compile the per-instance specialized entry points (the init-time
         # half of the paper's "dispatch costs nothing per call" claim)
         self._specialize()
@@ -243,29 +386,42 @@ class PaxABI:
         """
         tools = tuple(self.tools)
         rtools = tuple(reversed(tools))
-        tooled = bool(tools)
         for entry in abi_spec.ABI_TABLE:
-            env = dict(_GEN_ENV)
-            env["_impl"] = self._table[entry.name]
-            env["_abi"] = self
-            env["_tools"] = tools
-            env["_rtools"] = rtools
-            fn = _compile_cached(
-                _SPEC_BLOCKING_SRC, (entry.name, tooled),
-                lambda: _spec_blocking_src(entry, tooled), entry.name, env,
+            self._specialize_entry(entry, tools, rtools)
+        # live persistent plans carry the tool decision baked in: recompile
+        # them with the new tool tuple (same contract as the entry points)
+        for plan in list(self._plans):
+            self._compile_plan(plan)
+
+    def _specialize_entry(self, entry: abi_spec.AbiEntry,
+                          tools: Optional[tuple] = None,
+                          rtools: Optional[tuple] = None) -> None:
+        """Compile one entry's per-instance blocking + ``i*`` entry points."""
+        if tools is None:
+            tools = tuple(self.tools)
+            rtools = tuple(reversed(tools))
+        tooled = bool(tools)
+        env = dict(_GEN_ENV)
+        env["_impl"] = self._table[entry.name]
+        env["_abi"] = self
+        env["_tools"] = tools
+        env["_rtools"] = rtools
+        fn = _compile_cached(
+            _SPEC_BLOCKING_SRC, (entry.name, tooled),
+            lambda: _spec_blocking_src(entry, tooled), entry.name, env,
+        )
+        object.__setattr__(self, entry.name, fn)
+        if entry.nonblocking:
+            ienv = {
+                "_blocking": fn,
+                "_new_request": self._new_request,
+                "_backend": self.backend,
+            }
+            ifn = _compile_cached(
+                _SPEC_NONBLOCKING_SRC, (entry.name, False),
+                lambda: _spec_nonblocking_src(entry), f"i{entry.name}", ienv,
             )
-            object.__setattr__(self, entry.name, fn)
-            if entry.nonblocking:
-                ienv = {
-                    "_blocking": fn,
-                    "_new_request": self._new_request,
-                    "_backend": self.backend,
-                }
-                ifn = _compile_cached(
-                    _SPEC_NONBLOCKING_SRC, (entry.name, False),
-                    lambda: _spec_nonblocking_src(entry), f"i{entry.name}", ienv,
-                )
-                object.__setattr__(self, f"i{entry.name}", ifn)
+            object.__setattr__(self, f"i{entry.name}", ifn)
 
     def attach_tool(self, tool) -> None:
         """Attach an interposition tool and respecialize the dispatch path."""
@@ -277,6 +433,227 @@ class PaxABI:
         """Detach a tool; the zero-tool fast path returns when none remain."""
         self.tools.remove(tool)
         self._specialize()
+
+    # ------------------------------------------------------------------
+    # lazy emulation-recipe resolution
+    # ------------------------------------------------------------------
+    def _ensure_built(self, name: str) -> Callable:
+        """The concrete resolved callable for ``name``, building a lazily
+        deferred emulation recipe now if this is its first use."""
+        fn = self._table[name]
+        if getattr(fn, "__lazy_recipe__", None) is not None:
+            return self._build_recipe(name)
+        return fn
+
+    def _build_recipe(self, name: str) -> Callable:
+        """Compile a deferred recipe: swap the built closure into the table
+        and respecialize the entry, so steady-state dispatch is identical to
+        the old eager build (the lazy shim survives only in callables hoisted
+        before the first call)."""
+        fn = self._table[name]
+        state = getattr(fn, "__lazy_recipe__", None)
+        if state is None:
+            return fn  # already built (possibly through another path)
+        impl = state["impl"]
+        if impl is None:
+            entry = abi_spec.ENTRY_BY_NAME[name]
+            impl = entry.recipe.build(emulation.EmulationContext(self))
+            state["impl"] = impl
+            self._table[name] = impl
+            self._specialize_entry(entry)
+        return impl
+
+    # ------------------------------------------------------------------
+    # persistent plans (MPI-4 <name>_init): hoist per-call work to plan time
+    # ------------------------------------------------------------------
+    def _make_plan(self, name: str, call_args: tuple) -> Plan:
+        """Build a persistent plan for entry ``name`` bound to ``call_args``.
+
+        Plan-time work (done exactly once): argument-domain handle checks,
+        payload abstraction (shape/dtype), run-closure compilation via
+        :meth:`_plan_run`, tool-decision baking, and allocation of the
+        restartable request slot.  Unavailable entries fail *here*, at plan
+        time — never at ``start``.
+        """
+        entry = abi_spec.ENTRY_BY_NAME[name]
+        args = []
+        for a, v in zip(entry.args, call_args):
+            if a.kind == abi_spec.DATATYPE_VEC:
+                v = tuple(v)
+                for t in v:
+                    H.check_handle(t, a.check_kind)
+            elif a.check_kind is not None:
+                H.check_handle(v, a.check_kind)
+            elif a.kind in (abi_spec.PERM, abi_spec.COUNTS):
+                v = tuple(v)
+            elif a.kind == abi_spec.PAYLOAD:
+                v = _abstract_payload(v)
+            args.append(v)
+        plan = Plan(self, entry, tuple(args))
+        plan.request = self._new_persistent_request(f"p{name}")
+        # GC fallback: a plan dropped without free() must not leak its slot
+        # forever.  The finalizer re-checks handle+persistent so an explicit
+        # free (or the slot's later reuse) makes it a no-op.
+        plan._finalizer = weakref.finalize(
+            plan, _reclaim_plan_slot, self, plan.request, plan.request.handle)
+        self._compile_plan(plan)
+        self._plans.add(plan)
+        return plan
+
+    def _plan_run(self, name: str, bound: tuple) -> Callable:
+        """Compile the untooled run closure for entry ``name``.
+
+        Resolution order mirrors negotiation: a backend-declared native plan
+        hook (``plan_<method>`` — paxi/ring freeze comm→axes and the op
+        branch, Mukautuva converts foreign handles once), then the recipe's
+        plan builder for emulated entries (precomposed chain), then generic
+        argument freezing around the resolved callable — which still hoists
+        every ABI-layer check out of the call path.
+        """
+        entry = abi_spec.ENTRY_BY_NAME[name]
+        source = self._source[name]
+        if source == "native":
+            hook = getattr(self.backend, f"plan_{entry.backend_method}", None)
+            if hook is not None:
+                return hook(*bound)
+            impl = self._table[name]
+        elif source == "emulated":
+            if entry.recipe.plan is not None:
+                return entry.recipe.plan(emulation.PlanContext(self), *bound)
+            impl = self._ensure_built(name)
+        else:
+            raise PaxError(
+                PAX_ERR_UNSUPPORTED_OPERATION,
+                f"cannot plan {name!r} on backend {self.backend.name!r}: "
+                f"{self._unavailable_reasons[name]}",
+            )
+        return _freeze_run(entry, impl, bound)
+
+    def _compile_plan(self, plan: Plan) -> None:
+        """(Re)compile a plan's start/wait closures.
+
+        Called at plan creation and again from :meth:`_specialize` when the
+        tool chain changes — live plans are *respecialized*, not invalidated
+        (same contract as the compiled entry points).
+        """
+        entry = plan.entry
+        run = self._plan_run(entry.name, plan.bound)
+        if self.tools:
+            # bake the tool decision: chain, byte accounting from the bound
+            # abstract shape (ShapeDtypeStruct leaves carry .size/.dtype, so
+            # the one _nbytes definition serves plans too), and the
+            # table-order arg splice.  The info dict is built fresh per
+            # start, like the per-call path builds _info per call — tools
+            # may annotate it without leaking state across starts.
+            tools = tuple(self.tools)
+            rtools = tuple(reversed(tools))
+            if entry.bytes_arg:
+                idx = {a.name: i for i, a in enumerate(entry.args)}
+                bytes_val = _nbytes(plan.bound[idx[entry.bytes_arg]], self)
+                comm_h = next(plan.bound[i] for i, a in enumerate(entry.args)
+                              if a.kind == abi_spec.COMM)
+            else:
+                bytes_val = comm_h = None
+            splice = _payload_splicer(entry, plan.bound)
+            fname = entry.name
+            base_run = run
+
+            def run(*payload):
+                targs = splice(payload)
+                info = ({} if bytes_val is None
+                        else {"bytes": bytes_val, "comm_handle": comm_h})
+                for t in tools:
+                    t.before(fname, targs, info)
+                res = base_run(*payload)
+                for t in rtools:
+                    res = t.after(fname, targs, info, res)
+                return res
+
+        if entry.temps:
+            # converted handle vectors live exactly as long as the plan
+            plan.request.temp_state = getattr(
+                self.backend, entry.temps_attr, None)
+
+        req = plan.request
+        ename = entry.name
+        if len(entry.payload_args) == 1:
+            def start(x, _req=req, _run=run):
+                if not _req.done:
+                    raise PaxError(
+                        PAX_ERR_REQUEST,
+                        f"persistent {ename!r} started while already active "
+                        "(wait the previous start first)",
+                    )
+                _req.done = False
+                _req.value = _run(x)
+                return _req
+        elif not entry.payload_args:
+            def start(_req=req, _run=run):
+                if not _req.done:
+                    raise PaxError(
+                        PAX_ERR_REQUEST,
+                        f"persistent {ename!r} started while already active "
+                        "(wait the previous start first)",
+                    )
+                _req.done = False
+                _req.value = _run()
+                return _req
+        else:  # pragma: no cover - no current entry has >1 payload arg
+            def start(*payload, _req=req, _run=run):
+                if not _req.done:
+                    raise PaxError(PAX_ERR_REQUEST, f"persistent {ename!r} "
+                                   "started while already active")
+                _req.done = False
+                _req.value = _run(*payload)
+                return _req
+
+        def wait(_req=req):
+            # wait on an inactive persistent request returns immediately
+            # (MPI semantics); completion deactivates without retiring —
+            # the slot's generation is untouched, the plan is restartable
+            if _req.done:
+                return None
+            _req.done = True
+            v = _req.value
+            _req.value = None  # drop the (possibly traced) value eagerly
+            return v
+
+        plan.start = start
+        plan.wait = wait
+
+    def _new_persistent_request(self, kind: str) -> Request:
+        """Allocate the restartable pool slot backing one plan.
+
+        Comes from the same free list as nonblocking requests (one handle
+        space, one liveness rule) but is *not* counted live while inactive,
+        and — unlike :meth:`_retire` — completion never bumps its
+        generation: the slot flips inactive⇄active for the plan's lifetime
+        and only :meth:`Plan.free` advances the generation (after which every
+        handle the plan returned is stale forever).
+        """
+        if self._req_free:
+            slot = self._req_free.pop()
+            req = self._req_pool[slot]
+            req.handle = (self._req_gen[slot] << _REQ_GEN_SHIFT) | _REQ_HANDLE_BASE | slot
+            req.value = None
+            req.kind = kind
+            req.done = True  # inactive
+            req.temp_state = None
+            req.on_complete = None
+        else:
+            slot = len(self._req_pool)
+            if slot >= self._req_max_slots:
+                raise PaxError(
+                    PAX_ERR_REQUEST,
+                    f"request pool exhausted: {self._req_max_slots} slots "
+                    "(free some plans or wait outstanding requests)",
+                )
+            req = Request(_REQ_HANDLE_BASE | slot, None, kind, True, None, None)
+            self._req_pool.append(req)
+            self._req_gen.append(0)
+        req.persistent = True
+        self.requests_issued += 1  # the allocation; starts allocate nothing
+        return req
 
     # ------------------------------------------------------------------
     # capability report (what tiered negotiation resolved, per entry)
@@ -302,6 +679,16 @@ class PaxABI:
                 info["deps"] = entry.recipe.deps
             elif source == "unavailable":
                 info["reason"] = self._unavailable_reasons[entry.name]
+            if entry.persistent:
+                # how a <name>_init plan would compile (never forces a build)
+                if source == "unavailable":
+                    info["plan"] = "unavailable"
+                elif source == "native" and self.backend.supports_persistent(entry):
+                    info["plan"] = "backend-hook"
+                elif source == "emulated" and entry.recipe.plan is not None:
+                    info["plan"] = "recipe-plan"
+                else:
+                    info["plan"] = "generic"
             info.update(self.backend.capability(entry))
             report[entry.name] = info
         return report
@@ -320,8 +707,9 @@ class PaxABI:
 
     # -- init/finalize ----------------------------------------------------
     def finalize(self) -> None:
-        if self._req_live:
-            raise PaxError(PAX_ERR_REQUEST, f"{self._req_live} outstanding requests")
+        live = self.outstanding_requests
+        if live:
+            raise PaxError(PAX_ERR_REQUEST, f"{live} outstanding requests")
         self.finalized = True
 
     # -- identity / registration (not per-collective dispatch) -------------
@@ -415,6 +803,23 @@ class PaxABI:
         if request.handle == H.PAX_REQUEST_NULL:
             return None
         if not request.done:
+            if request.persistent:
+                # restartable slot: deactivate WITHOUT retiring — the
+                # generation is untouched (only Plan.free advances it), so
+                # the same handle restarts next step with no pool churn
+                slot = request.handle & _USER_INDEX_MASK
+                gens = self._req_gen
+                if slot >= len(gens) or gens[slot] != request.handle >> _REQ_GEN_SHIFT:
+                    raise PaxError(
+                        PAX_ERR_REQUEST,
+                        "stale persistent request (its plan was freed)",
+                    )
+                request.done = True
+                value = request.value
+                request.value = None
+                if status is not None:
+                    status.ERROR = PAX_SUCCESS
+                return value
             if not self._request_is_live(request.handle):
                 raise PaxError(
                     PAX_ERR_REQUEST,
@@ -466,7 +871,15 @@ class PaxABI:
 
     @property
     def outstanding_requests(self) -> int:
-        return self._req_live
+        """Live nonblocking requests plus *active* (started, unwaited)
+        persistent plans.  Inactive plans hold their slot but are not
+        outstanding work — they do not block ``finalize``."""
+        live = self._req_live
+        for p in self._plans:
+            r = p.request
+            if r is not None and not r.done:
+                live += 1
+        return live
 
     # -- convenience: run a function in a manual-collective region ----------
     def shard_region(self, fn: Callable, in_specs, out_specs, axis_names=None,
@@ -496,6 +909,62 @@ def _nbytes(x, abi: PaxABI, datatype: Optional[int] = None) -> int:
             else:
                 total += leaf.size * np.dtype(leaf.dtype).itemsize
     return int(total)
+
+
+def _abstract_payload(x):
+    """Plan-time payload binding: keep only shape/dtype per leaf (a plan is
+    specific to the payload geometry, never to its values — and must not pin
+    a model-sized buffer, or pytree of buffers, alive for its lifetime)."""
+
+    def leaf(l):
+        if hasattr(l, "shape") and hasattr(l, "dtype"):
+            return jax.ShapeDtypeStruct(tuple(l.shape), l.dtype)
+        return l
+
+    return jax.tree.map(leaf, x)
+
+
+def _payload_splicer(entry: abi_spec.AbiEntry, bound: tuple) -> Callable:
+    """The one definition of how start-time payloads splice back into the
+    table-order argument tuple (frozen template from the plan's bound args).
+    Returns ``payload_tuple -> full_arg_tuple``."""
+    payload_idx = entry.payload_args
+    if not payload_idx:
+        frozen = tuple(bound)
+        return lambda payload: frozen
+    if payload_idx == (0,):
+        rest = tuple(bound[1:])
+        return lambda payload: payload + rest
+    template = list(bound)  # pragma: no cover - no current entry hits this
+
+    def splice(payload):
+        a = list(template)
+        for i, p in zip(payload_idx, payload):
+            a[i] = p
+        return tuple(a)
+
+    return splice
+
+
+def _freeze_run(entry: abi_spec.AbiEntry, impl: Callable, bound: tuple) -> Callable:
+    """Generic plan compiler: freeze every non-payload argument around the
+    resolved callable.  Backends/recipes without a dedicated plan hook still
+    hoist the whole ABI layer (checks, table lookup, tools branch) out of the
+    start path; only the callable's own internal dispatch remains."""
+    payload_idx = entry.payload_args
+    if not payload_idx:
+        frozen = tuple(bound)
+        return lambda _impl=impl, _a=frozen: _impl(*_a)
+    if payload_idx == (0,):
+        # fast path worth keeping off the splicer: direct positional call
+        rest = tuple(bound[1:])
+        return lambda x, _impl=impl, _rest=rest: _impl(x, *_rest)
+    splice = _payload_splicer(entry, bound)  # pragma: no cover
+
+    def run(*payload):
+        return impl(*splice(payload))
+
+    return run
 
 
 # ---------------------------------------------------------------------------
@@ -686,6 +1155,18 @@ def _compile_cached(cache: dict, key, src_fn, name: str, env: dict):
     return fn
 
 
+def _plan_init_src(entry: abi_spec.AbiEntry) -> str:
+    """``<name>_init`` source: bind arguments, hand off to the plan compiler.
+    Plan construction is an init-frequency event — no specialization needed,
+    the *product* (the plan's start/wait closures) is what must be fast."""
+    params = abi_spec.signature_src(entry)
+    call_args = abi_spec.call_args_src(entry)
+    return (
+        f"def {entry.name}_init(self, {params}):\n"
+        f"    return self._make_plan({entry.name!r}, ({call_args},))\n"
+    )
+
+
 def _install_generated_methods() -> None:
     for entry in abi_spec.ABI_TABLE:
         fn = abi_spec.compile_method(_blocking_src(entry), _GEN_ENV, entry.name)
@@ -697,6 +1178,18 @@ def _install_generated_methods() -> None:
             )
             ifn.__qualname__ = f"PaxABI.i{entry.name}"
             setattr(PaxABI, f"i{entry.name}", ifn)
+        if entry.persistent:
+            pfn = abi_spec.compile_method(
+                _plan_init_src(entry), _GEN_ENV, f"{entry.name}_init"
+            )
+            pfn.__qualname__ = f"PaxABI.{entry.name}_init"
+            pfn.__doc__ = (
+                f"Persistent-plan constructor for {entry.name!r} (MPI-4 "
+                f"{entry.impl_name}_init): binds arguments and hoists all "
+                "per-call dispatch work to plan time; returns a Plan whose "
+                "start()/wait() are bare closure calls into the backend."
+            )
+            setattr(PaxABI, f"{entry.name}_init", pfn)
 
 
 _install_generated_methods()

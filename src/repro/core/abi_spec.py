@@ -70,10 +70,19 @@ class Recipe:
     emulation — and returns a closure with the entry's backend signature.
     ``validate_table`` guarantees the dependency graph is acyclic and
     computes the topological build order.
+
+    ``plan`` is the optional *persistent-plan* compiler: given a
+    ``PlanContext`` and the plan-time bound arguments (payloads as abstract
+    shapes), it returns a bare run closure with every chain decision —
+    padding, slicing, dependency resolution — already taken, so a plan
+    ``start()`` on an emulated entry costs the same as on a native one.
+    Entries without one still get a generic plan (argument freezing around
+    the built emulation closure).
     """
 
     deps: Tuple[str, ...]
     build: Callable
+    plan: Optional[Callable] = None
 
 # ---------------------------------------------------------------------------
 # Argument domains.  The domain decides (a) the ABI-layer handle check and
@@ -135,10 +144,22 @@ class AbiEntry:
     temps: bool = False              # stash converted vectors for the request map
     tier: str = OPTIONAL             # REQUIRED | OPTIONAL (negotiation tier)
     recipe: Optional[Recipe] = None  # emulation of this entry, if OPTIONAL
+    #: generate the MPI-4 persistent variant (``<name>_init`` plan
+    #: constructor).  ``None`` (default) derives from ``nonblocking`` — every
+    #: entry with an ``i*`` twin gets a plan constructor, the way MPI-4 gave
+    #: every nonblocking collective a persistent ``_init`` twin.
+    persistent: Optional[bool] = None
 
     def __post_init__(self):
         if not self.backend_method:
             object.__setattr__(self, "backend_method", self.name)
+        if self.persistent is None:
+            object.__setattr__(self, "persistent", self.nonblocking)
+
+    @property
+    def payload_args(self) -> Tuple[int, ...]:
+        """Indices of the PAYLOAD arguments (the plan ``start`` signature)."""
+        return tuple(i for i, a in enumerate(self.args) if a.kind == PAYLOAD)
 
     @property
     def temps_attr(self) -> str:
@@ -166,15 +187,16 @@ ABI_TABLE: Tuple[AbiEntry, ...] = (
        [Arg("x", PAYLOAD), Arg("op", OP), Arg("comm", COMM)],
        nonblocking=True, bytes_arg="x", dtype_size_kwarg=True,
        recipe=Recipe(("reduce_scatter", "allgather", "comm_size"),
-                     em.build_allreduce)),
+                     em.build_allreduce, em.plan_allreduce)),
     _e("reduce", "Reduce",
        [Arg("x", PAYLOAD), Arg("op", OP), Arg("root", ROOT), Arg("comm", COMM)],
        nonblocking=True, bytes_arg="x",
-       recipe=Recipe(("allreduce",), em.build_reduce)),
+       recipe=Recipe(("allreduce",), em.build_reduce, em.plan_reduce)),
     _e("bcast", "Bcast",
        [Arg("x", PAYLOAD), Arg("root", ROOT), Arg("comm", COMM)],
        nonblocking=True, bytes_arg="x",
-       recipe=Recipe(("allreduce", "comm_rank"), em.build_bcast)),
+       recipe=Recipe(("allreduce", "comm_rank"), em.build_bcast,
+                     em.plan_bcast)),
     _e("reduce_scatter", "Reduce_scatter",
        [Arg("x", PAYLOAD), Arg("op", OP), Arg("comm", COMM), Arg("axis", AXIS, 0)],
        nonblocking=True, bytes_arg="x"),
@@ -200,17 +222,19 @@ ABI_TABLE: Tuple[AbiEntry, ...] = (
     _e("scan", "Scan",
        [Arg("x", PAYLOAD), Arg("op", OP), Arg("comm", COMM)],
        nonblocking=True, bytes_arg="x",
-       recipe=Recipe(("allgather", "comm_rank", "comm_size"), em.build_scan)),
+       recipe=Recipe(("allgather", "comm_rank", "comm_size"), em.build_scan,
+                     em.plan_scan)),
     _e("exscan", "Exscan",
        [Arg("x", PAYLOAD), Arg("op", OP), Arg("comm", COMM)],
        nonblocking=True, bytes_arg="x",
-       recipe=Recipe(("allgather", "comm_rank", "comm_size"), em.build_exscan)),
+       recipe=Recipe(("allgather", "comm_rank", "comm_size"), em.build_exscan,
+                     em.plan_exscan)),
     _e("sendrecv", "Sendrecv",
        [Arg("x", PAYLOAD), Arg("perm", PERM), Arg("comm", COMM)],
        nonblocking=True, bytes_arg="x", fills_status=True, muk_ret="status"),
     _e("barrier", "Barrier", [Arg("comm", COMM)],
        nonblocking=True, muk_ret="rc_only",
-       recipe=Recipe(("allreduce",), em.build_barrier)),
+       recipe=Recipe(("allreduce",), em.build_barrier, em.plan_barrier)),
     _e("scatter", "Scatter",
        [Arg("x", PAYLOAD), Arg("root", ROOT), Arg("comm", COMM), Arg("axis", AXIS, 0)],
        nonblocking=True, bytes_arg="x",
@@ -218,7 +242,7 @@ ABI_TABLE: Tuple[AbiEntry, ...] = (
     _e("gather", "Gather",
        [Arg("x", PAYLOAD), Arg("root", ROOT), Arg("comm", COMM), Arg("axis", AXIS, 0)],
        nonblocking=True, bytes_arg="x",
-       recipe=Recipe(("allgather",), em.build_gather)),
+       recipe=Recipe(("allgather",), em.build_gather, em.plan_gather)),
 )
 
 

@@ -102,6 +102,26 @@ class Backend(abc.ABC):
         translate the foreign library's symbol table across the layer."""
         return {"backend": self.name, "native": self.supports(entry)}
 
+    # -- persistent plans (MPI-4 <name>_init) ------------------------------
+    # A backend declares *native persistent support* for an entry by
+    # defining ``plan_<backend_method>(self, <entry args>)`` returning a run
+    # closure over the payload argument(s): everything derivable from the
+    # non-payload arguments and the payload's shape/dtype (comm→axes, op
+    # branch, schedule selection, foreign-handle conversion) must be frozen
+    # in the closure.  The payload is bound abstractly (shape/dtype only) —
+    # hooks must not read values.  Backends without a hook inherit the
+    # generic plan compiler in the ABI layer (argument freezing around the
+    # resolved entry), which already hoists all ABI-layer per-call work;
+    # the hook additionally hoists the backend's own dispatch.  paxi and
+    # ring declare hooks for the traffic-bearing entries; Mukautuva
+    # generates hooks that cache foreign-handle conversion at plan time.
+
+    def supports_persistent(self, entry: AbiEntry) -> bool:
+        """Whether this backend declares a native plan hook for ``entry``."""
+        return (self.supports(entry)
+                and getattr(type(self), f"plan_{entry.backend_method}", None)
+                is not None)
+
 
 def _make_placeholder(entry: AbiEntry):
     def placeholder(self, *args, **kwargs):

@@ -22,6 +22,13 @@ Implementation-wise the exported entries reuse the paxi lowering (this is a
 *native-convention* backend: ABI handles are its handles); the partial
 surface is declared with ``ABI_SUBSET``, the tier-aware capability gate in
 :class:`repro.core.backends.base.Backend`.
+
+Persistent plans compose the same way: the native ``reduce_scatter`` /
+``allgather`` entries inherit paxi's plan hooks, and every emulated entry's
+plan is precomposed from them by the recipe plan builders — so a
+``<name>_init`` plan on this backend starts with the same bare-closure cost
+as on a full implementation (the ``persistent_emulated_native_ratio`` CI
+gate measures exactly this).
 """
 from __future__ import annotations
 

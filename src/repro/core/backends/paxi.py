@@ -130,3 +130,36 @@ class PaxiBackend(Backend):
             out[i].astype(self.datatypes.to_numpy_dtype(recvtypes[i]))
             for i in range(out.shape[0])
         ]
+
+    # -- persistent plans (MPI-4 <name>_init) ------------------------------
+    # Native plan hooks for the heavy-traffic entries: the comm→axes lookup
+    # and the op branch are taken once at plan time, so a plan start() goes
+    # straight to the frozen _lax lowering — no dict index, no compares.
+    # Entries without a hook get the ABI layer's generic argument freezing.
+    def plan_allreduce(self, x, op: int, comm: int):
+        axes = self.comm_axes(comm)
+        if op == H.PAX_SUM:
+            if not axes:
+                return lambda x: x  # group-of-one identity, frozen
+            return lambda x: _lax.psum(x, axes)
+        if op == H.PAX_MAX:
+            return lambda x: _lax.pmax(x, axes)
+        if op == H.PAX_MIN:
+            return lambda x: _lax.pmin(x, axes)
+        fn = self.op_fn(op)
+        return lambda x: _lax.allreduce_generic(x, fn, axes)
+
+    def plan_reduce_scatter(self, x, op: int, comm: int, axis: int = 0):
+        axes = self.comm_axes(comm)
+        if op == H.PAX_SUM:
+            return lambda x: _lax.reduce_scatter_sum(x, axes, axis=axis)
+        fn = self.op_fn(op)
+        return lambda x: _lax.reduce_scatter_generic(x, fn, axes, axis=axis)
+
+    def plan_allgather(self, x, comm: int, axis: int = 0):
+        axes = self.comm_axes(comm)
+        return lambda x: _lax.allgather(x, axes, axis=axis)
+
+    def plan_bcast(self, x, root: int, comm: int):
+        axes = self.comm_axes(comm)
+        return lambda x: _lax.bcast(x, root, axes)

@@ -12,7 +12,11 @@ implementations behind one ABI).  Collectives lower to explicit
 * optional wire compression (``compress="bf16"|"int8"``): payload quantized
   per hop, accumulated in the original dtype.  int8 uses a per-hop absmax
   scale.  This is the gradient-compression substrate (train/compression.py
-  adds error feedback on top).
+  adds error feedback on top).  The compressed wire covers the SUM prefix
+  scans too: ``ring_scan_sum`` quantizes each forwarded contribution, and
+  multi-axis communicators use the hierarchical ``ring_scan_sum_multi``
+  schedule (minor-axis scan + ``ring_allreduce_sum`` row totals + major-axis
+  scan of the totals) instead of falling back to the generic fold.
 
 Multi-axis communicators reduce hierarchically (axis by axis) — the classic
 2D-torus schedule.
@@ -99,11 +103,17 @@ def ring_allgather(x, axis_name: str):
     return out
 
 
-def ring_scan_sum(x, axis_name: str, inclusive: bool = True):
+def ring_scan_sum(x, axis_name: str, inclusive: bool = True,
+                  compress: Optional[str] = None):
     """SUM prefix over ranks via S-1 explicit hops: every hop forwards the
     neighbour's contribution one step; rank i accumulates the terms with
     source index < i (masked add).  Exclusive scan leaves rank 0's input
-    unchanged — the ABI-wide exscan convention (MPI: undefined)."""
+    unchanged — the ABI-wide exscan convention (MPI: undefined).
+
+    With ``compress`` the traveling contribution is quantized per hop
+    exactly like :func:`ring_reduce_scatter`'s wire; accumulation stays in
+    the original dtype.  Error compounds with hop count (bounded in the
+    multidev battery, section 6)."""
     S = compat.axis_size(axis_name)
     i = lax.axis_index(axis_name)
     if S == 1:
@@ -112,10 +122,63 @@ def ring_scan_sum(x, axis_name: str, inclusive: bool = True):
     acc = x if inclusive else jnp.where(i == 0, x, jnp.zeros_like(x))
     travel = x
     for t in range(S - 1):
-        travel = lax.ppermute(travel, axis_name, perm)
+        q, scale = _quantize(travel, compress)
+        q = lax.ppermute(q, axis_name, perm)
+        if scale is not None:
+            scale = lax.ppermute(scale, axis_name, perm)
+        travel = _dequantize(q, scale, x.dtype, compress)
         # after hop t, rank i holds rank (i-1-t)'s contribution
         acc = acc + jnp.where(i >= t + 1, travel, jnp.zeros_like(travel))
     return acc
+
+
+def ring_allreduce_sum(x, axis_name: str, compress: Optional[str] = None):
+    """Divisibility-free SUM all-reduce: S-1 broadcast-add hops (each rank's
+    contribution travels the whole ring once).  Used by the hierarchical
+    multi-axis scan for row totals, where the payload need not split into
+    rank chunks.  Wire compressed per hop like the other ring schedules."""
+    S = compat.axis_size(axis_name)
+    if S == 1:
+        return x
+    perm = [(s, (s + 1) % S) for s in range(S)]
+    acc = x
+    travel = x
+    for t in range(S - 1):
+        q, scale = _quantize(travel, compress)
+        q = lax.ppermute(q, axis_name, perm)
+        if scale is not None:
+            scale = lax.ppermute(scale, axis_name, perm)
+        travel = _dequantize(q, scale, x.dtype, compress)
+        acc = acc + travel
+    return acc
+
+
+def ring_scan_sum_multi(x, axes, inclusive: bool = True,
+                        compress: Optional[str] = None):
+    """Hierarchical SUM prefix over a multi-axis communicator, all on the
+    ring wire (compression included): the prefix over linearized (row-major)
+    rank splits as
+
+        scan(x)[iA, iB]  =  scan_minor(x within row iA)
+                          + sum of all full rows jA < iA,
+
+    where the row totals ride :func:`ring_allreduce_sum` and the major-axis
+    prefix is a :func:`ring_scan_sum` of the totals.  The exclusive variant
+    keeps the ABI convention (linearized rank 0 returns its input)."""
+    axes = tuple(axes)
+    if len(axes) == 1:
+        return ring_scan_sum(x, axes[0], inclusive, compress)
+    tail = axes[1:]
+    row_total = x
+    for a in reversed(tail):
+        row_total = ring_allreduce_sum(row_total, a, compress)
+    # true-exclusive prefix of the row totals over the major axis
+    major_excl = ring_scan_sum(row_total, axes[0], True, compress) - row_total
+    inner_incl = ring_scan_sum_multi(x, tail, True, compress)
+    if inclusive:
+        return inner_incl + major_excl
+    r = _lax.rank(axes)  # linearized rank 0 keeps its input (ABI convention)
+    return jnp.where(r == 0, x, inner_incl - x + major_excl)
 
 
 class RingBackend(PaxiBackend):
@@ -168,12 +231,41 @@ class RingBackend(PaxiBackend):
 
     def scan(self, x, op: int, comm: int):
         axes = self.comm_axes(comm)
-        if op != H.PAX_SUM or len(axes) != 1:
+        if op != H.PAX_SUM or not axes:
             return super().scan(x, op, comm)
-        return ring_scan_sum(x, axes[0], inclusive=True)
+        return ring_scan_sum_multi(x, axes, inclusive=True,
+                                   compress=self.compress)
 
     def exscan(self, x, op: int, comm: int):
         axes = self.comm_axes(comm)
-        if op != H.PAX_SUM or len(axes) != 1:
+        if op != H.PAX_SUM or not axes:
             return super().exscan(x, op, comm)
-        return ring_scan_sum(x, axes[0], inclusive=False)
+        return ring_scan_sum_multi(x, axes, inclusive=False,
+                                   compress=self.compress)
+
+    # -- persistent plans: decide ring-vs-fallback once from the example ----
+    def plan_reduce_scatter(self, x, op: int, comm: int, axis: int = 0):
+        axes = self.comm_axes(comm)
+        if (op != H.PAX_SUM or not axes or axis != 0
+                or tuple(x.shape)[0] % math.prod(self._axis_sizes(axes))):
+            return super().plan_reduce_scatter(x, op, comm, axis)
+        compress = self.compress
+
+        def run(x):
+            for a in axes:  # forward axis order: chunk == linearized rank
+                x = ring_reduce_scatter(x, a, compress)
+            return x
+
+        return run
+
+    def plan_allgather(self, x, comm: int, axis: int = 0):
+        axes = self.comm_axes(comm)
+        if not axes or axis != 0:
+            return super().plan_allgather(x, comm, axis)
+
+        def run(x):
+            for a in reversed(axes):  # inverse of reduce_scatter
+                x = ring_allgather(x, a)
+            return x
+
+        return run

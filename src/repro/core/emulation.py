@@ -64,8 +64,13 @@ class EmulationContext:
         self._abi = abi
 
     def dep(self, name: str) -> Callable:
-        """The resolved callable for entry ``name`` (native or emulated)."""
-        return self._abi._table[name]
+        """The resolved callable for entry ``name`` (native or emulated).
+
+        Forces a lazily-deferred dependency recipe to build now (building a
+        recipe implies building everything it stands on), so built closures
+        always chain through concrete callables, never through lazy shims.
+        """
+        return self._abi._ensure_built(name)
 
     def op_fn(self, op: int) -> Callable:
         return self._abi.backend.op_fn(op)
@@ -73,6 +78,22 @@ class EmulationContext:
     @property
     def datatypes(self):
         return self._abi.datatypes
+
+
+class PlanContext(EmulationContext):
+    """What a recipe *plan* builder may close over.
+
+    ``plan_dep`` compiles a dependency into its own frozen run closure (the
+    backend's native plan hook, the dependency's recipe plan, or generic
+    argument freezing — see ``PaxABI._plan_run``), so an emulated plan is a
+    composition of bare closures: every chain decision — padding geometry,
+    slice bounds, axes, op branch — is taken once at plan time.  Payload
+    arguments are passed as abstract shapes (``jax.ShapeDtypeStruct``); plan
+    builders may inspect ``.shape``/``.dtype``/``.ndim`` only, never values.
+    """
+
+    def plan_dep(self, name: str, *bound) -> Callable:
+        return self._abi._plan_run(name, bound)
 
 
 def _tag(fn: Callable, name: str, deps: tuple) -> Callable:
@@ -266,3 +287,98 @@ def build_scatter(ctx: EmulationContext) -> Callable:
         return lax.dynamic_slice_in_dim(y, rank(comm) * chunk, chunk, axis=axis)
 
     return _tag(scatter, "scatter", ("bcast", "comm_rank", "comm_size"))
+
+
+# ---------------------------------------------------------------------------
+# Persistent-plan builders (MPI-4 ``<name>_init``).  Each receives the plan's
+# bound arguments with payloads as abstract shapes and returns a bare run
+# closure: the recipe chain — size queries, padding geometry, slice bounds,
+# dependency plan compilation — is composed exactly once here, so a plan
+# ``start()`` on an emulated entry does no more per-call work than a native
+# one.  Rank queries stay in the closure (``lax.axis_index`` is call-time by
+# nature); everything shape- or handle-derived is frozen.
+# ---------------------------------------------------------------------------
+def plan_allreduce(ctx: PlanContext, x, op, comm) -> Callable:
+    S = ctx.dep("comm_size")(comm)
+    if S <= 1:
+        return lambda x: x
+    scalar = len(getattr(x, "shape", ())) == 0
+    shape = (1,) if scalar else tuple(x.shape)
+    n = shape[0]
+    pad = (-n) % S
+    rest = shape[1:]
+    dtype = x.dtype
+    rs = ctx.plan_dep(
+        "reduce_scatter", jax.ShapeDtypeStruct((n + pad,) + rest, dtype),
+        op, comm, 0)
+    ag = ctx.plan_dep(
+        "allgather", jax.ShapeDtypeStruct(((n + pad) // S,) + rest, dtype),
+        comm, 0)
+    if not pad and not scalar:
+        return lambda x: ag(rs(x))
+    pad_block = (pad,) + rest
+
+    def run(x):
+        if scalar:
+            x = jnp.reshape(x, (1,))
+        if pad:
+            x = jnp.concatenate([x, jnp.zeros(pad_block, dtype)], axis=0)
+        out = ag(rs(x))[:n]
+        return out[0] if scalar else out
+
+    return run
+
+
+def plan_reduce(ctx: PlanContext, x, op, root, comm) -> Callable:
+    # SPMD: computed everywhere, defined at root (the MPI contract).
+    return ctx.plan_dep("allreduce", x, op, comm)
+
+
+def plan_bcast(ctx: PlanContext, x, root, comm) -> Callable:
+    ar = ctx.plan_dep("allreduce", x, H.PAX_SUM, comm)
+    rank = ctx.dep("comm_rank")
+
+    def run(x):
+        return ar(jnp.where(rank(comm) == root, x, jnp.zeros_like(x)))
+
+    return run
+
+
+def plan_barrier(ctx: PlanContext, comm) -> Callable:
+    ar = ctx.plan_dep(
+        "allreduce", jax.ShapeDtypeStruct((1,), jnp.float32), H.PAX_SUM, comm)
+
+    def run():
+        ar(jnp.zeros((1,), jnp.float32))
+        return None
+
+    return run
+
+
+def _plan_scan(ctx: PlanContext, x, op, comm, inclusive: bool) -> Callable:
+    S = ctx.dep("comm_size")(comm)
+    if S <= 1:
+        return lambda x: x
+    ag = ctx.plan_dep(
+        "allgather", jax.ShapeDtypeStruct((1,) + tuple(x.shape), x.dtype),
+        comm, 0)
+    rank = ctx.dep("comm_rank")
+    fn = ctx.op_fn(op)
+
+    def run(x):
+        return prefix_fold(ag(x[None]), rank(comm), fn, x, inclusive)
+
+    return run
+
+
+def plan_scan(ctx: PlanContext, x, op, comm) -> Callable:
+    return _plan_scan(ctx, x, op, comm, inclusive=True)
+
+
+def plan_exscan(ctx: PlanContext, x, op, comm) -> Callable:
+    return _plan_scan(ctx, x, op, comm, inclusive=False)
+
+
+def plan_gather(ctx: PlanContext, x, root, comm, axis=0) -> Callable:
+    # SPMD gather == allgather (defined at root, replicated elsewhere).
+    return ctx.plan_dep("allgather", x, comm, axis)

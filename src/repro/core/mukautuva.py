@@ -364,12 +364,79 @@ def _wrap_src(entry: abi_spec.AbiEntry) -> str:
     return "\n".join(lines) + "\n"
 
 
+def _plan_src(entry: abi_spec.AbiEntry) -> str:
+    """Generated persistent-plan hook: the WRAP_* wrapper with every
+    conversion hoisted to plan time.
+
+    Handle conversion (comm/op/dtype, including vectors) runs once when the
+    plan is built; the returned run closure calls the foreign symbol with the
+    cached IMPL-domain handles and only translates the return code per start.
+    This is the Mukautuva half of the persistent-operations claim: the
+    translation layer's per-call cost collapses to rc translation because
+    its actual work — conversion — is plan-time."""
+    params = abi_spec.signature_src(entry)
+    payload_names = [a.name for a in entry.args if a.kind == abi_spec.PAYLOAD]
+    lines = [f"def plan_{entry.backend_method}(self, {params}):"]
+    impl_args = []
+    vec_names = []
+    for a in entry.args:
+        if a.kind == abi_spec.DATATYPE_VEC:
+            cname = f"_c_{a.name}"
+            lines.append(
+                f"    {cname} = tuple(self._convert_dtype(_t) for _t in {a.name})"
+            )
+            impl_args.append(cname)
+            vec_names.append(cname)
+        elif a.kind in _CONVERT_EXPR:
+            cname = f"_c_{a.name}"
+            lines.append(
+                f"    {cname} = " + _CONVERT_EXPR[a.kind].format(a=a.name))
+            impl_args.append(cname)
+        else:
+            impl_args.append(a.name)
+    if entry.temps:
+        # converted handle vectors stay alive for the plan's lifetime (the
+        # ABI layer rides them in the plan's pooled request)
+        lines.append(f"    self.{entry.temps_attr} = ({', '.join(vec_names)},)")
+    lines.append(f"    _lib_fn = self.lib.{entry.impl_name}")
+    lines.append("    _rc = self._rc")
+    call = f"_lib_fn({', '.join(impl_args)})"
+    lines.append(f"    def _run({', '.join(payload_names)}):")
+    if entry.muk_ret == "rc_only":
+        lines.append(f"        _code = {call}")
+        lines.append("        if _code:")
+        lines.append("            _rc(_code)")
+        lines.append("        return None")
+    elif entry.muk_ret == "status":
+        lines.append(f"        _code, _v, _s = {call}")
+        lines.append("        if _code:")
+        lines.append("            _rc(_code)")
+        lines.append("        self._store_status(_s)")
+        lines.append("        return _v")
+    else:
+        lines.append(f"        _code, _v = {call}")
+        lines.append("        if _code:")
+        lines.append("            _rc(_code)")
+        lines.append("        return _v")
+    lines.append("    return _run")
+    return "\n".join(lines) + "\n"
+
+
 def _install_generated_wraps() -> None:
     for entry in abi_spec.ABI_TABLE:
         fn = abi_spec.compile_method(_wrap_src(entry), {}, entry.backend_method)
         fn.__qualname__ = f"MukBackend.{entry.backend_method}"
         fn.__doc__ = f"Generated WRAP_{entry.impl_name} (paper §6.2)."
         setattr(MukBackend, entry.backend_method, fn)
+        if entry.persistent:
+            pfn = abi_spec.compile_method(
+                _plan_src(entry), {}, f"plan_{entry.backend_method}")
+            pfn.__qualname__ = f"MukBackend.plan_{entry.backend_method}"
+            pfn.__doc__ = (
+                f"Generated persistent WRAP_{entry.impl_name}: foreign-handle "
+                "conversion cached at plan time (paper §6.2, MPI-4 _init)."
+            )
+            setattr(MukBackend, f"plan_{entry.backend_method}", pfn)
 
 
 _install_generated_wraps()

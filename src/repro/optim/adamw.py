@@ -67,7 +67,12 @@ class FlatAdamState(NamedTuple):
     step: jax.Array
     m: jax.Array   # (shard,) f32 — only this dp-rank's shard
     v: jax.Array
-    ef: jax.Array  # error-feedback buffer (full flat size; zeros if unused)
+    #: error-feedback buffer.  Per-rank state (each rank's own quantization
+    #: residual over the FULL flat vector), so the global-view layout is
+    #: (dp * padded,) sharded over the dp axes — every rank sees its
+    #: (padded,) residual inside the train step's shard_map region.  A
+    #: (dp,)-shaped dummy (one element per rank) when compression is off.
+    ef: jax.Array
 
 
 def flat_size(params) -> int:
@@ -102,14 +107,16 @@ def init_flat_global(params, dp_size: int, *, buckets: int = 1,
                      with_ef: bool = False) -> FlatAdamState:
     """Global-view flat optimizer state: (padded,) moment vectors meant to be
     sharded over the dp axes (each rank sees its (padded/dp,) shard inside
-    the train step's shard_map region)."""
+    the train step's shard_map region).  With ``with_ef`` the error-feedback
+    buffer is (dp * padded,) — per-rank full-length residuals, sharded the
+    same way (see :class:`FlatAdamState`)."""
     n = sum(int(p.size) for p in jax.tree.leaves(params))
     padded = zero1_padded_size(n, dp_size, buckets)
     return FlatAdamState(
         jnp.zeros((), jnp.int32),
         jnp.zeros((padded,), jnp.float32),
         jnp.zeros((padded,), jnp.float32),
-        jnp.zeros((padded if with_ef else 1,), jnp.float32),
+        jnp.zeros((dp_size * padded if with_ef else dp_size,), jnp.float32),
     )
 
 

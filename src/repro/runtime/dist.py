@@ -29,6 +29,9 @@ class DistContext:
     world: int = PAX_COMM_WORLD
     # optional second context whose backend compresses on the wire
     abi_compressed: Optional[PaxABI] = None
+    # persistent zero1 collective plans (grad_sync.Zero1Plans), built once by
+    # train_loop.init_state when the ZeRO-1 flat layout is active
+    zero1_plans: Optional[object] = None
 
     @property
     def dp_size(self) -> int:

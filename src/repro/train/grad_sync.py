@@ -19,6 +19,7 @@ Modes (config ``parallelism.grad_sync``):
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional
 
 import jax
@@ -36,6 +37,85 @@ def pad_to(vec, multiple: int):
     return vec
 
 
+def _transposed_bucket_parts(wire, dp: int, buckets: int) -> list:
+    """The transposed bucket split (one definition for the pooled and
+    persistent paths): bucket b carries every rank's b-th sub-slice, so each
+    rank's concatenated reduce-scatter results form its *contiguous* slice
+    of the full vector — the layout `_interleave_bucket_gathers` inverts and
+    the slice an unbucketed reduce-scatter would deliver."""
+    blocks = wire.reshape(dp, buckets, -1)
+    return [blocks[:, b, :].reshape(-1) for b in range(buckets)]
+
+
+def _interleave_bucket_gathers(outs, dp: int, rest: tuple = ()):
+    """Inverse of the transposed split: outs[b] is rank-major over bucket b;
+    re-interleave to one rank-major full vector (trailing dims preserved)."""
+    chunks = [o.reshape((dp, -1) + rest) for o in outs]
+    return jnp.concatenate(chunks, axis=1).reshape((-1,) + rest)
+
+
+# ---------------------------------------------------------------------------
+# Persistent plans for the zero1 round trip (MPI-4 <name>_init).  The
+# bucketed reduce-scatter/all-gather a training loop issues is *identical*
+# every step — same shapes, same comm, same op — which is exactly the shape
+# persistent collectives amortize: the plans are built once (init_state) and
+# every step's start() is a bare closure call into the backend.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Zero1Plans:
+    """Per-bucket persistent plans for one zero1 layout.
+
+    ``rs`` lives on the wire context (the compressed ring context for int8),
+    ``ag`` on the primary context; both are keyed by the layout contract
+    (padded length, dp, bucket count, wire dtype AND compression mode — the
+    mode picks the wire *context*, which the dtype alone cannot distinguish:
+    ``None`` and ``"int8"`` both ship f32) so callers can verify the plans
+    match the sync they are about to run and fall back otherwise.
+    """
+
+    dp: int
+    buckets: int
+    padded: int
+    wire_dtype: object
+    compression: Optional[str]
+    rs: tuple    # bucket -> reduce_scatter Plan (wire context)
+    ag: tuple    # bucket -> allgather Plan (primary context)
+
+    def matches(self, n: int, dp: int, buckets: int, wire_dtype,
+                compression: Optional[str]) -> bool:
+        return (self.padded == n and self.dp == dp
+                and self.buckets == max(buckets, 1)
+                and self.compression == compression
+                and jnp.dtype(self.wire_dtype) == jnp.dtype(wire_dtype))
+
+    def free(self) -> None:
+        """Retire every plan's request slot (rebuild/teardown path)."""
+        for p in self.rs + self.ag:
+            p.free()
+
+
+def build_zero1_plans(dist: DistContext, padded: int, buckets: int = 1,
+                      compression: Optional[str] = None) -> Zero1Plans:
+    """Build the per-bucket persistent plans for a (padded, buckets) layout.
+
+    Payloads are bound abstractly (shape/dtype): each reduce-scatter bucket
+    carries ``padded / buckets`` wire elements, each all-gather bucket this
+    rank's ``padded / (dp * buckets)`` updated shard slice.
+    """
+    dp = dist.dp_size
+    b = max(buckets, 1)
+    assert padded % (dp * b) == 0, (padded, dp, b)
+    wire_dtype = jnp.bfloat16 if compression == "bf16" else jnp.float32
+    abi_w, comm = dp_comm_of(dist, compression == "int8")
+    blen = padded // b
+    ex_rs = jax.ShapeDtypeStruct((blen,), wire_dtype)
+    ex_ag = jax.ShapeDtypeStruct((blen // dp,), jnp.float32)
+    rs = tuple(abi_w.reduce_scatter_init(ex_rs, PAX_SUM, comm)
+               for _ in range(b))
+    ag = tuple(dist.abi.allgather_init(ex_ag, dist.dp_comm) for _ in range(b))
+    return Zero1Plans(dp, b, padded, wire_dtype, compression, rs, ag)
+
+
 def reduce_scatter_grads(
     dist: DistContext,
     flat_g: jax.Array,
@@ -43,9 +123,14 @@ def reduce_scatter_grads(
     compression: Optional[str] = None,
     buckets: int = 1,
     ef: Optional[jax.Array] = None,
+    plans: Optional[Zero1Plans] = None,
 ):
     """flat_g: (padded_n,) f32, padded_n % dp_size == 0.
-    Returns (g_shard (padded_n/dp,), new_ef).  Mean over dp ranks."""
+    Returns (g_shard (padded_n/dp,), new_ef).  Mean over dp ranks.
+
+    With ``plans`` matching the layout, the bucketed round trip rides the
+    persistent reduce-scatter plans (start on restartable pooled requests)
+    instead of re-dispatching ``ireduce_scatter`` per bucket per step."""
     dp = dist.dp_size
     n = flat_g.shape[0]
     assert n % dp == 0
@@ -60,17 +145,18 @@ def reduce_scatter_grads(
         wire = wire16
     abi, comm = dp_comm_of(dist, compression == "int8")
 
-    if buckets <= 1:
+    if plans is not None and plans.matches(n, dp, buckets, wire.dtype,
+                                           compression):
+        # persistent path: one start per bucket plan on the restartable
+        # slots, waitall through the shared pool API
+        parts = _transposed_bucket_parts(wire, dp, plans.buckets)
+        reqs = [plans.rs[b].start(p) for b, p in enumerate(parts)]
+        shard = jnp.concatenate(abi.waitall(reqs))
+    elif buckets <= 1:
         shard = abi.reduce_scatter(wire, PAX_SUM, comm)
     else:
         assert n % (dp * buckets) == 0, "bucket count must divide the shard"
-        # transposed split: bucket b carries every rank's b-th sub-slice, so
-        # each rank's concatenated result is its *contiguous* slice of the
-        # full vector — the same layout allgather_params reassembles and the
-        # same slice `wire[r*shard : (r+1)*shard]` an unbucketed
-        # reduce-scatter would deliver
-        blocks = wire.reshape(dp, buckets, -1)
-        parts = [blocks[:, b, :].reshape(-1) for b in range(buckets)]
+        parts = _transposed_bucket_parts(wire, dp, buckets)
         reqs = [abi.ireduce_scatter(p, PAX_SUM, comm) for p in parts]
         shards = abi.waitall(reqs)
         shard = jnp.concatenate(shards)
@@ -78,25 +164,36 @@ def reduce_scatter_grads(
     return shard, new_ef
 
 
-def allgather_params(dist: DistContext, shard: jax.Array, *, buckets: int = 1) -> jax.Array:
+def allgather_params(dist: DistContext, shard: jax.Array, *, buckets: int = 1,
+                     plans: Optional[Zero1Plans] = None) -> jax.Array:
     """Inverse of the scatter: collect every rank's updated shard.
 
     With ``buckets > 1`` the shard is split and issued as nonblocking
     ``iallgather`` requests (the spec-generated path), so the scheduler can
     overlap the gather of early buckets with whatever consumes them; the
-    bucket-major chunks are re-interleaved into rank-major order."""
+    bucket-major chunks are re-interleaved into rank-major order.  With
+    matching ``plans``, each bucket rides its persistent all-gather plan."""
     abi = dist.abi
+    use_plans = (plans is not None
+                 and plans.dp == dist.dp_size
+                 and plans.padded == shard.shape[0] * plans.dp
+                 and plans.buckets == max(buckets, 1)
+                 and shard.ndim == 1)
+    if use_plans:
+        parts = (jnp.split(shard, plans.buckets) if plans.buckets > 1
+                 else [shard])
+        outs = abi.waitall([plans.ag[b].start(p.astype(jnp.float32))
+                            for b, p in enumerate(parts)])
+        if plans.buckets == 1:
+            return outs[0].astype(jnp.float32)
+        return _interleave_bucket_gathers(outs, dist.dp_size).astype(jnp.float32)
     if buckets <= 1:
         return abi.allgather(shard, dist.dp_comm).astype(jnp.float32)
     assert shard.shape[0] % buckets == 0, "bucket count must divide the shard"
     parts = jnp.split(shard, buckets)
     reqs = [abi.iallgather(p, dist.dp_comm) for p in parts]
     outs = abi.waitall(reqs)
-    # outs[b] is rank-major over bucket b; interleave back to rank-major full,
-    # preserving any trailing dims so both bucket settings return one shape
-    rest = shard.shape[1:]
-    chunks = [o.reshape((dist.dp_size, -1) + rest) for o in outs]
-    full = jnp.concatenate(chunks, axis=1).reshape((-1,) + rest)
+    full = _interleave_bucket_gathers(outs, dist.dp_size, shard.shape[1:])
     return full.astype(jnp.float32)
 
 
@@ -108,6 +205,7 @@ def zero1_step(
     buckets: int = 1,
     compression: Optional[str] = None,
     ef: Optional[jax.Array] = None,
+    plans: Optional[Zero1Plans] = None,
 ):
     """One explicit ZeRO-1 round trip through the generated ABI surface:
     bucketed nonblocking reduce-scatter -> per-shard optimizer update
@@ -117,12 +215,16 @@ def zero1_step(
     The ABI's free-list request pool recycles the bucket requests in place,
     so a steady-state training loop reuses one preallocated request batch
     per step instead of allocating per bucket (train_loop's ``body_zero1``
-    drives this every step)."""
+    drives this every step).  With ``plans`` (built once by
+    :func:`build_zero1_plans`), both legs ride persistent plans instead —
+    the requests are the plans' restartable slots and even the per-bucket
+    dispatch is plan-time work."""
     g_shard, new_ef = reduce_scatter_grads(
-        dist, flat_g, compression=compression, buckets=buckets, ef=ef
+        dist, flat_g, compression=compression, buckets=buckets, ef=ef,
+        plans=plans,
     )
     p_shard = update_shard(g_shard)
-    return allgather_params(dist, p_shard, buckets=buckets), new_ef
+    return allgather_params(dist, p_shard, buckets=buckets, plans=plans), new_ef
 
 
 def allreduce_scalar(dist: DistContext, x):

@@ -60,9 +60,13 @@ class Metrics(NamedTuple):
 
 def _flat_opt_specs(dp_axes) -> FlatAdamState:
     """The one place the ZeRO-1 flat state's sharding is written down:
-    moments shard over the dp axes, step/ef replicated."""
+    moments shard over the dp axes, step replicated.  The error-feedback
+    buffer is *per-rank* state (each rank's own wire-quantization residual),
+    so it shards over the dp axes too — its global layout is (dp * padded,)
+    (or a (dp,) dummy when compression is off), one full-length residual per
+    rank."""
     dpP = P(tuple(dp_axes)) if dp_axes else P()
-    return FlatAdamState(P(), dpP, dpP, P())
+    return FlatAdamState(P(), dpP, dpP, dpP)
 
 
 def init_state(api: ModelApi, key, dist: Optional[DistContext] = None) -> TrainState:
@@ -71,12 +75,27 @@ def init_state(api: ModelApi, key, dist: Optional[DistContext] = None) -> TrainS
     With ``dist`` provided and ``parallelism.zero1`` set in abi mode, the
     optimizer state is the ZeRO-1 flat layout (moments for 1/dp of the
     parameters per rank); otherwise the classic per-leaf tree layout.
-    """
+
+    The zero1 layout also (a) allocates the error-feedback buffer when bf16
+    wire compression is configured (per-rank residuals, see
+    :func:`_flat_opt_specs`) and (b) builds the persistent collective plans
+    for the bucketed round trip (``dist.zero1_plans``) — argument binding,
+    handle conversion and recipe composition happen here, once, not per
+    step."""
     params = api.init(key)
     par = api.cfg.parallelism
     if dist is not None and par.grad_sync == "abi" and par.zero1:
+        buckets = max(par.zero1_buckets, 1)
+        with_ef = par.grad_compression == "bf16"
         opt = adamw.init_flat_global(
-            params, dist.dp_size, buckets=max(par.zero1_buckets, 1))
+            params, dist.dp_size, buckets=buckets, with_ef=with_ef)
+        from .grad_sync import build_zero1_plans
+        if dist.zero1_plans is not None:
+            # re-init on the same dist: retire the old plans' request slots
+            # before rebuilding, or every re-init leaks 2*buckets slots
+            dist.zero1_plans.free()
+        dist.zero1_plans = build_zero1_plans(
+            dist, opt.m.shape[0], buckets, par.grad_compression)
     else:
         opt = adamw.init_tree(params)
     return TrainState(params, opt, jnp.zeros((), jnp.int32))
@@ -175,16 +194,25 @@ def make_train_step_abi(
 
     def body_zero1(params, opt: FlatAdamState, step, batch):
         """Explicit ZeRO-1 round trip (the ROADMAP wiring): bucketed
-        nonblocking reduce-scatter -> shard-local AdamW -> bucketed
-        nonblocking all-gather, all through the pooled request path."""
+        reduce-scatter -> shard-local AdamW -> bucketed all-gather, riding
+        the persistent plans built at ``init_state`` (``dist.zero1_plans``;
+        pooled nonblocking ``i*`` requests as the fallback).  With bf16 wire
+        compression the per-rank error-feedback residual (``opt.ef``) is
+        folded into the next step's gradient and refreshed from this step's
+        quantization error."""
         dp = dist.dp_size
+        plans = dist.zero1_plans
         with use_rules(dist.rules):
             loss, grads = _microbatched_grads(
                 lambda p, b: api.loss_fn(p, b, dist), params, batch, n_micro)
             flat_g = pad_to(adamw.flatten(grads), dp * buckets)
             n_flat = sum(int(l.size) for l in jax.tree.leaves(grads))
-            g_shard, _ = reduce_scatter_grads(
-                dist, flat_g, compression=compression, buckets=buckets)
+            # error feedback: opt.ef is this rank's full-length residual
+            # exactly when compression is on (a (1,)-dummy otherwise)
+            ef = opt.ef if opt.ef.shape[0] == flat_g.shape[0] else None
+            g_shard, new_ef = reduce_scatter_grads(
+                dist, flat_g, compression=compression, buckets=buckets,
+                ef=ef, plans=plans)
             # ||mean grad||²: each element lives on exactly one rank's shard
             gnorm = jnp.sqrt(dist.abi.allreduce(
                 jnp.sum(jnp.square(g_shard)), PAX_SUM, dist.dp_comm))
@@ -197,7 +225,10 @@ def make_train_step_abi(
             lr_scale = schedule(step) if schedule is not None else jnp.float32(1.0)
             new_p_shard, new_opt = adamw.update_flat_shard(
                 opt_cfg, g_shard, opt, p_shard, gnorm, lr_scale)
-            p_full = allgather_params(dist, new_p_shard, buckets=buckets)
+            if ef is not None and new_ef is not None:
+                new_opt = new_opt._replace(ef=new_ef)
+            p_full = allgather_params(dist, new_p_shard, buckets=buckets,
+                                      plans=plans)
             new_params = adamw.unflatten_like(p_full[:n_flat], params)
             loss = dist.abi.allreduce(loss, PAX_SUM, dist.dp_comm) / dp
         return new_params, new_opt, loss, gnorm

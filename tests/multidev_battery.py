@@ -242,6 +242,26 @@ for impl, bound in (("ring-bf16", 0.01), ("ring-int8", 0.05)):
     assert rel.max() < bound, (impl, rel.max())
     print(f"  {impl}: max rel err {rel.max():.4f} < {bound}")
 
+# scan/exscan on the compressed wire (the hierarchical multi-axis ring
+# schedule; previously these fell back to the uncompressed generic fold).
+# The error budget is bigger than rs/ag's: a contribution is re-quantized on
+# every hop it travels and the row-total all-reduce adds its own hops.
+for impl, bound in (("ring-bf16", 0.02), ("ring-int8", 0.05)):
+    abi = C.pax_init(mesh, impl=impl)
+    f6s = abi.shard_region(
+        lambda x: (abi.scan(x, C.PAX_SUM, C.PAX_COMM_WORLD),
+                   abi.exscan(x, C.PAX_SUM, C.PAX_COMM_WORLD)),
+        in_specs=P(("data", "model")),
+        out_specs=(P(("data", "model")), P(("data", "model"))),
+    )
+    sc6, ex6 = jax.jit(f6s)(jnp.asarray(XG.reshape(-1)))
+    rel_sc = np.abs(np.asarray(sc6).reshape(8, 8) - exp_scan) / np.abs(exp_scan)
+    rel_ex = np.abs(np.asarray(ex6).reshape(8, 8) - exp_exscan) / np.abs(exp_exscan)
+    assert rel_sc.max() < bound, (impl, "scan", rel_sc.max())
+    assert rel_ex.max() < bound, (impl, "exscan", rel_ex.max())
+    print(f"  {impl}: scan/exscan max rel err "
+          f"{max(rel_sc.max(), rel_ex.max()):.4f} < {bound}")
+
 # ---------------------------------------------------------------------------
 section("7. ZeRO-1 flat round trip across dp ranks (pooled nonblocking path)")
 # dp=2 over the "data" axis: reduce-scatter of the dp-mean gradient, shard
@@ -355,5 +375,80 @@ np.testing.assert_allclose(np.asarray(a2a8[:8]), exp_a2a0)
 np.testing.assert_allclose(np.asarray(s8).reshape(8, 8), exp_scan, rtol=1e-5)
 assert dist_min.abi.outstanding_requests == 0
 print("  emulation chains (depth 1-3) match native oracles OK")
+
+# ---------------------------------------------------------------------------
+section("9. persistent plans: plan-time hoisting == per-call semantics (dp=2)")
+# the zero1 round trip on persistent plans (the init_state wiring) must give
+# byte-identical math to the pooled i* path of section 7, and the plans'
+# restartable requests must flip inactive<->active across steps without
+# touching the pool
+from repro.train.grad_sync import build_zero1_plans
+
+plans = build_zero1_plans(dist, NV, 2)
+pool_before = len(dist.abi._req_pool)
+
+
+def body9(v):
+    params, ef = zero1_step(dist, v, lambda s: s * 2.0, buckets=2, plans=plans)
+    assert ef is None
+    return params
+
+
+f9 = dist.abi.shard_region(body9, in_specs=P("data"), out_specs=P())
+out9 = np.asarray(jax.jit(f9)(jnp.asarray(vin))[:NV])
+np.testing.assert_allclose(out9, expect, rtol=1e-6)
+# restart: a second trace re-drives the same plans (inactive -> active -> ...)
+out9b = np.asarray(jax.jit(dist.abi.shard_region(
+    body9, in_specs=P("data"), out_specs=P()))(jnp.asarray(vin))[:NV])
+np.testing.assert_allclose(out9b, expect, rtol=1e-6)
+assert dist.abi.outstanding_requests == 0
+assert len(dist.abi._req_pool) == pool_before  # no slot churn across steps
+print("  zero1 persistent-plan round trip dp=2 buckets=2 OK (slots reused)")
+
+# emulated persistent plan with plan-time padding: 11 rows over an 8-rank
+# world comm — the recipe plan precomputes pad=5 and the [:11] slice; result
+# must match the blocking emulated allreduce exactly
+abi_min9 = dist_min.abi
+plan9 = abi_min9.allreduce_init(jnp.zeros(11, jnp.float32), C.PAX_SUM, world)
+f9c = abi_min9.shard_region(
+    lambda x: (abi_min9.wait(plan9.start(x)), abi_min9.allreduce(x, C.PAX_SUM, world)),
+    in_specs=P(), out_specs=(P(), P()))
+v_pers, v_block = jax.jit(f9c)(jnp.arange(11.0) + 1.0)
+np.testing.assert_allclose(np.asarray(v_pers), np.asarray(v_block), rtol=1e-6)
+np.testing.assert_allclose(np.asarray(v_pers), (np.arange(11.0) + 1.0) * 8)
+caps9 = abi_min9.capabilities()
+assert caps9["allreduce"]["plan"] == "recipe-plan"
+print("  emulated persistent allreduce (plan-time pad/slice) dp=8 OK")
+
+# error feedback through the zero1 wiring at dp=2: with bf16 compression the
+# per-rank residual v - bf16(v) comes back from reduce_scatter_grads and,
+# folded into the next step, makes the delivered sum unbiased:
+#   g1 + g2 = bf16(v) + bf16(v + e1) = 2v - e2   (residuals never lost)
+ef0 = jnp.zeros((2 * NV,), jnp.float32)  # per-rank full-length residuals
+vfine = jnp.asarray(np.linspace(0.1, 1.7, NV, dtype=np.float32))  # inexact in bf16
+
+
+def body9d(ef):
+    g1, ef1 = reduce_scatter_grads(dist, vfine, compression="bf16", buckets=2,
+                                   ef=ef)
+    g2, ef2 = reduce_scatter_grads(dist, vfine, compression="bf16", buckets=2,
+                                   ef=ef1)
+    return g1, g2, ef1, ef2
+
+
+f9d = dist.abi.shard_region(body9d, in_specs=P("data"),
+                            out_specs=(P("data"),) * 4)
+g1, g2, ef1, ef2 = (np.asarray(a) for a in jax.jit(f9d)(ef0))
+v_np = np.asarray(vfine)
+w1 = np.asarray(jnp.asarray(vfine).astype(jnp.bfloat16).astype(jnp.float32))
+e1 = v_np - w1
+assert np.abs(e1).max() > 0  # the bf16 residual is real for these values
+np.testing.assert_allclose(ef1[:NV], e1, atol=0)   # rank 0's residual, exact
+np.testing.assert_allclose(ef1[NV:], e1, atol=0)   # rank 1's (same grads)
+np.testing.assert_allclose(g1, w1, rtol=0, atol=1e-7)  # dp-mean of wires
+# the EF identity: two delivered steps sum to 2v minus only the *last*
+# residual — the step-1 quantization error was recovered, not dropped
+np.testing.assert_allclose(g1 + g2, 2 * v_np - ef2[:NV], rtol=0, atol=1e-6)
+print(f"  zero1 bf16 error feedback dp=2 OK (residual max {np.abs(e1).max():.2e})")
 
 print("BATTERY PASSED")

@@ -228,6 +228,65 @@ def test_full_backends_stay_fully_native(mesh1):
         "reduce", "gather"}
 
 
+def test_recipes_resolve_lazily(mesh1):
+    """Lazy recipe resolution (ROADMAP open item): negotiation *decides*
+    emulated at init, but the closure is compiled on first call (or first
+    plan) — and capabilities() reports 'emulated' without forcing a build."""
+    abi = C.pax_init(mesh1, impl="minimal")
+    shim = abi._table["scan"]
+    assert shim.__lazy_recipe__["impl"] is None  # deferred at init
+    caps = abi.capabilities()
+    assert caps["scan"]["source"] == "emulated"
+    assert caps["scan"]["deps"] == ("allgather", "comm_rank", "comm_size")
+    assert shim.__lazy_recipe__["impl"] is None  # the report forced nothing
+    import jax.numpy as jnp
+
+    x = jnp.arange(4.0)
+    assert np.allclose(abi.scan(x, C.PAX_SUM, C.PAX_COMM_SELF), x)
+    # first call built the closure, swapped the table and respecialized
+    built = abi._table["scan"]
+    assert built is not shim and getattr(built, "__emulated__", False)
+    assert shim.__lazy_recipe__["impl"] is built  # hoisted shims stay valid
+    # deps force transitively: building scatter builds bcast and allreduce
+    abi2 = C.pax_init(mesh1, impl="minimal")
+    assert abi2._table["bcast"].__lazy_recipe__["impl"] is None
+    abi2.scatter(x, 0, C.PAX_COMM_SELF)
+    for name in ("scatter", "bcast", "allreduce"):
+        assert getattr(abi2._table[name], "__emulated__", False), name
+    # independent contexts build independently
+    abi3 = C.pax_init(mesh1, impl="minimal")
+    assert abi3._table["scatter"].__lazy_recipe__["impl"] is None
+
+
+def test_lazy_build_failure_is_isolated(mesh1):
+    """An unused broken recipe costs nothing; its entry fails on first use,
+    not at init (the lazy contract's error-locality flip side)."""
+    calls = {"n": 0}
+
+    def exploding_build(ctx):
+        calls["n"] += 1
+        raise RuntimeError("recipe build exploded")
+
+    entry = abi_spec.ENTRY_BY_NAME["scan"]
+    orig = entry.recipe
+    object.__setattr__(entry, "recipe",
+                       abi_spec.Recipe(orig.deps, exploding_build))
+    try:
+        abi = C.pax_init(mesh1, impl="minimal")  # init does not build
+        assert calls["n"] == 0
+        import jax.numpy as jnp
+
+        with pytest.raises(RuntimeError, match="exploded"):
+            abi.scan(jnp.arange(4.0), C.PAX_SUM, C.PAX_COMM_SELF)
+        assert calls["n"] == 1
+        # the rest of the surface is unaffected
+        assert np.allclose(
+            abi.allreduce(jnp.arange(4.0), C.PAX_SUM, C.PAX_COMM_SELF),
+            np.arange(4.0))
+    finally:
+        object.__setattr__(entry, "recipe", orig)
+
+
 def test_ring_allreduce_is_recipe_composed(mesh1):
     """ring dropped its hand-written RS+AG allreduce; the spec recipe now
     composes its native ring reduce-scatter and all-gather."""

@@ -1,0 +1,412 @@
+"""Persistent plan-based operations (MPI-4 ``<name>_init`` + Start/Wait).
+
+Covers the plan subsystem's contracts:
+
+* plan constructors are generated for every persistent function-table row;
+* plan-time hoisting preserves semantics (plan result == blocking result,
+  across native, emulated and Mukautuva-translated backends);
+* persistent requests are restartable pool slots: start-before-wait misuse
+  raises ``PAX_ERR_REQUEST``, a freed plan's handles are dead *forever*
+  (generation bump), and a 2000-step start/wait churn allocates no new
+  ``Request`` objects or slots;
+* tools respecialize live plans on attach/detach (the documented contract);
+* Mukautuva converts foreign handles at plan time, once;
+* the zero1 wiring builds plans at ``init_state`` and threads bf16 error
+  feedback through the train loop.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as C
+from repro.core import abi_spec
+from repro.core import handles as H
+from repro.core.abi import _REQ_GEN_SHIFT, PaxABI, Request
+from repro.core.errors import (
+    PAX_ERR_REQUEST,
+    PAX_ERR_UNSUPPORTED_OPERATION,
+    PaxError,
+)
+
+X = jnp.arange(6.0)
+
+
+@pytest.fixture()
+def abi(mesh1):
+    return C.pax_init(mesh1, impl="paxi")
+
+
+# ---------------------------------------------------------------------------
+# surface generation + semantics
+# ---------------------------------------------------------------------------
+def test_plan_constructors_generated_from_spec(abi):
+    for entry in abi_spec.ABI_TABLE:
+        has = hasattr(abi, f"{entry.name}_init")
+        assert has == bool(entry.persistent), entry.name
+    # persistent derives from nonblocking (MPI-4 gave every nonblocking
+    # collective an _init twin)
+    for entry in abi_spec.ABI_TABLE:
+        assert entry.persistent == entry.nonblocking
+
+
+def test_plan_matches_blocking_across_backends(mesh1):
+    for impl in ("paxi", "ring", "minimal", "ompix", "muk:paxi"):
+        abi = C.pax_init(mesh1, impl=impl)
+        plan = abi.allreduce_init(X, C.PAX_SUM, C.PAX_COMM_SELF)
+        req = plan.start(X)
+        np.testing.assert_allclose(
+            np.asarray(abi.wait(req)),
+            np.asarray(abi.allreduce(X, C.PAX_SUM, C.PAX_COMM_SELF)), err_msg=impl)
+        # restart with a new payload of the same shape
+        plan.start(X * 3)
+        np.testing.assert_allclose(np.asarray(plan.wait()), np.asarray(X * 3))
+        plan.free()
+
+
+def test_plan_payload_is_bound_abstractly(abi):
+    plan = abi.allreduce_init(X, C.PAX_SUM, C.PAX_COMM_SELF)
+    # the plan stores shape/dtype, not the example array (no pinned buffers)
+    assert isinstance(plan.bound[0], jax.ShapeDtypeStruct)
+    # ...per leaf: pytree payloads must not pin their buffers either
+    plan_tree = abi.allreduce_init({"w": X, "b": X * 2}, C.PAX_SUM,
+                                   C.PAX_COMM_SELF)
+    assert all(isinstance(l, jax.ShapeDtypeStruct)
+               for l in jax.tree.leaves(plan_tree.bound[0]))
+    out = abi.wait(plan_tree.start({"w": X, "b": X * 2}))
+    np.testing.assert_allclose(np.asarray(out["b"]), np.asarray(X) * 2)
+    # and accepts an abstract example directly
+    plan2 = abi.reduce_scatter_init(
+        jax.ShapeDtypeStruct((4,), jnp.float32), C.PAX_SUM, C.PAX_COMM_SELF)
+    np.testing.assert_allclose(
+        np.asarray(abi.wait(plan2.start(jnp.ones(4)))), np.ones(4))
+
+
+def test_plan_handle_checks_happen_at_plan_time(abi):
+    with pytest.raises(PaxError):
+        abi.allreduce_init(X, C.PAX_COMM_WORLD, C.PAX_COMM_SELF)  # op domain
+    with pytest.raises(PaxError):
+        abi.allreduce_init(X, C.PAX_SUM, C.PAX_SUM)  # comm domain
+
+
+def test_unavailable_entry_fails_at_plan_time(mesh1):
+    from repro.core.backends.paxi import PaxiBackend
+
+    class _Groundless(PaxiBackend):
+        # no reduce_scatter/allgather: the allreduce chain cannot ground out
+        name = "groundless"
+        ABI_SUBSET = frozenset({"comm_size", "comm_rank", "type_size",
+                                "sendrecv"})
+
+    abi = PaxABI(_Groundless(mesh1))
+    with pytest.raises(PaxError) as e:
+        abi.allreduce_init(X, C.PAX_SUM, C.PAX_COMM_SELF)
+    assert e.value.code == PAX_ERR_UNSUPPORTED_OPERATION
+
+
+def test_barrier_plan_has_no_payload(abi):
+    plan = abi.barrier_init(C.PAX_COMM_SELF)
+    req = plan.start()
+    assert abi.wait(req) is None
+
+
+# ---------------------------------------------------------------------------
+# restartable request slots x the free-list pool
+# ---------------------------------------------------------------------------
+def test_start_before_wait_raises_err_request(abi):
+    plan = abi.allreduce_init(X, C.PAX_SUM, C.PAX_COMM_SELF)
+    plan.start(X)
+    with pytest.raises(PaxError) as e:
+        plan.start(X)
+    assert e.value.code == PAX_ERR_REQUEST
+    plan.wait()
+    plan.start(X)  # legal again after completion
+    plan.wait()
+
+
+def test_plan_freed_handle_dead_forever(abi):
+    plan = abi.allreduce_init(X, C.PAX_SUM, C.PAX_COMM_SELF)
+    req = plan.start(X)
+    handle = req.handle
+    slot = H.user_handle_index(handle)
+    gen = handle >> _REQ_GEN_SHIFT
+    abi.wait(req)
+    plan.free()
+    # every handle the plan ever returned is stale forever
+    with pytest.raises(PaxError) as e:
+        abi.wait(Request(handle, persistent=True))
+    assert e.value.code == PAX_ERR_REQUEST
+    with pytest.raises(PaxError):
+        abi.wait(Request(handle))
+    # the plan itself is dead
+    with pytest.raises(PaxError):
+        plan.start(X)
+    with pytest.raises(PaxError):
+        plan.wait()
+    plan.free()  # idempotent
+    # the slot itself recycles with an advanced generation
+    r = abi.iallreduce(X, C.PAX_SUM, C.PAX_COMM_SELF)
+    assert H.user_handle_index(r.handle) == slot
+    assert r.handle >> _REQ_GEN_SHIFT > gen
+    abi.wait(r)
+
+
+def test_dropped_plan_reclaims_slot_on_gc(mesh1):
+    """A plan garbage-collected without free() must not leak its slot: with
+    a tiny pool, repeatedly building and dropping plans would otherwise
+    exhaust it."""
+    import gc
+
+    abi = C.pax_init(mesh1, impl="paxi", req_slot_bits=3)  # 8 slots
+    for _ in range(50):
+        plan = abi.allreduce_init(X, C.PAX_SUM, C.PAX_COMM_SELF)
+        abi.wait(plan.start(X))
+        del plan
+        gc.collect()
+    assert len(abi._req_free) == len(abi._req_pool)  # every slot came back
+    # an explicitly freed plan's finalizer is detached (no double retire):
+    # the generation advances exactly once per free
+    plan = abi.allreduce_init(X, C.PAX_SUM, C.PAX_COMM_SELF)
+    slot = H.user_handle_index(plan.request.handle)
+    gen = abi._req_gen[slot]
+    plan.free()
+    del plan
+    gc.collect()
+    assert abi._req_gen[slot] == gen + 1
+    assert abi._req_free.count(slot) == 1
+
+
+def test_free_active_plan_refused(abi):
+    plan = abi.allreduce_init(X, C.PAX_SUM, C.PAX_COMM_SELF)
+    plan.start(X)
+    with pytest.raises(PaxError) as e:
+        plan.free()
+    assert e.value.code == PAX_ERR_REQUEST
+    plan.wait()
+    plan.free()
+
+
+def test_churn_2000_steps_allocates_nothing(abi):
+    """The satellite contract: steady-state start/wait churn allocates no
+    new Request objects or slots and never advances the generation."""
+    plan = abi.allreduce_init(X, C.PAX_SUM, C.PAX_COMM_SELF)
+    req0 = plan.start(X)
+    handle0 = req0.handle
+    plan.wait()
+    pool_len = len(abi._req_pool)
+    issued = abi.requests_issued
+    gens = list(abi._req_gen)
+    for _ in range(2000):
+        req = plan.start(X)
+        assert req is req0            # same Request object, recycled in place
+        assert req.handle == handle0  # same slot, same generation
+        plan.wait()
+    assert len(abi._req_pool) == pool_len
+    assert abi.requests_issued == issued  # starts are not allocations
+    assert abi._req_gen == gens           # no generation churn
+    assert abi.outstanding_requests == 0
+
+
+def test_persistent_and_pooled_requests_share_waitall_testall(abi):
+    plan = abi.allreduce_init(X, C.PAX_SUM, C.PAX_COMM_SELF)
+    pr = plan.start(X)
+    nr = abi.iallreduce(X * 2, C.PAX_SUM, C.PAX_COMM_SELF)
+    assert abi.outstanding_requests == 2
+    flag, vals = abi.testall([pr, nr])
+    assert flag
+    np.testing.assert_allclose(np.asarray(vals[0]), np.asarray(X))
+    np.testing.assert_allclose(np.asarray(vals[1]), np.asarray(X) * 2)
+    assert abi.outstanding_requests == 0
+
+
+def test_active_plan_blocks_finalize(mesh1):
+    abi = C.pax_init(mesh1, impl="paxi")
+    plan = abi.allreduce_init(X, C.PAX_SUM, C.PAX_COMM_SELF)
+    plan.start(X)
+    with pytest.raises(PaxError):
+        abi.finalize()
+    plan.wait()
+    abi.finalize()  # inactive plans hold slots but are not outstanding work
+    assert abi.finalized
+
+
+def test_plan_reset_recovers_aborted_trace(abi):
+    plan = abi.allreduce_init(X, C.PAX_SUM, C.PAX_COMM_SELF)
+    plan.start(X)
+    plan.reset()  # e.g. a trace aborted between start and wait
+    plan.start(X)
+    plan.wait()
+
+
+# ---------------------------------------------------------------------------
+# plan-time hoisting specifics
+# ---------------------------------------------------------------------------
+def test_tools_respecialize_live_plans(abi):
+    cc = C.CallCounter()
+    plan = abi.allreduce_init(X, C.PAX_SUM, C.PAX_COMM_SELF)
+    abi.wait(plan.start(X))
+    assert cc.counts["allreduce"] == 0
+    abi.attach_tool(cc)
+    abi.wait(plan.start(X))  # the live plan was recompiled with the tool
+    assert cc.counts["allreduce"] == 1
+    bc = C.ByteCounter()
+    abi.attach_tool(bc)
+    abi.wait(plan.start(X))
+    assert bc.bytes["allreduce"] == X.size * 4  # bytes from the bound shape
+    abi.detach_tool(cc)
+    abi.detach_tool(bc)
+    abi.wait(plan.start(X))
+    assert cc.counts["allreduce"] == 2
+
+
+def test_mukautuva_converts_at_plan_time_once(mesh1):
+    abi = C.pax_init(mesh1, impl="ompix")
+    muk = abi.backend
+    calls = {"op": 0, "comm": 0}
+    orig_op, orig_comm = muk._convert_op, muk._convert_comm
+
+    def count_op(h):
+        calls["op"] += 1
+        return orig_op(h)
+
+    def count_comm(h):
+        calls["comm"] += 1
+        return orig_comm(h)
+
+    muk._convert_op, muk._convert_comm = count_op, count_comm
+    try:
+        plan = abi.allreduce_init(X, C.PAX_SUM, C.PAX_COMM_SELF)
+        after_plan = dict(calls)
+        assert after_plan["op"] >= 1 and after_plan["comm"] >= 1
+        for _ in range(10):
+            abi.wait(plan.start(X))
+        assert calls == after_plan  # zero conversions per start
+    finally:
+        muk._convert_op, muk._convert_comm = orig_op, orig_comm
+
+
+def test_capabilities_report_plan_sources(mesh1):
+    caps = C.pax_init(mesh1, impl="paxi").capabilities()
+    assert caps["allreduce"]["plan"] == "backend-hook"
+    assert caps["alltoall"]["plan"] == "generic"
+    assert "plan" not in caps["comm_size"]  # no persistent variant
+    caps_min = C.pax_init(mesh1, impl="minimal").capabilities()
+    assert caps_min["allreduce"]["plan"] == "recipe-plan"
+    assert caps_min["reduce_scatter"]["plan"] == "backend-hook"  # paxi hook
+    caps_muk = C.pax_init(mesh1, impl="ompix").capabilities()
+    assert caps_muk["allreduce"]["plan"] == "backend-hook"  # generated wrap
+    assert caps_muk["reduce"]["plan"] == "recipe-plan"      # emulated hole
+
+
+def test_generic_plan_freezes_emulated_entry(mesh1):
+    """Entries without a recipe plan builder still plan (generic argument
+    freezing around the built emulation closure) — and building the plan is
+    the 'first plan' trigger of lazy recipe resolution."""
+    abi = C.pax_init(mesh1, impl="minimal")
+    assert abi._table["alltoall"].__lazy_recipe__["impl"] is None
+    x = jnp.arange(4.0).reshape(4, 1)
+    plan = abi.alltoall_init(x, C.PAX_COMM_SELF)
+    assert getattr(abi._table["alltoall"], "__emulated__", False)  # built now
+    np.testing.assert_allclose(np.asarray(abi.wait(plan.start(x))),
+                               np.asarray(x))
+
+
+# ---------------------------------------------------------------------------
+# zero1 wiring: plans built at init_state + bf16 error feedback threaded
+# ---------------------------------------------------------------------------
+def _zero1_setup(mesh1, compression):
+    import repro.configs as cfgs
+    from repro.models import build_model
+    from repro.runtime.dist import make_dist
+
+    cfg = cfgs.smoke_config("qwen2-0.5b")
+    cfg = dataclasses.replace(
+        cfg, parallelism=dataclasses.replace(
+            cfg.parallelism, zero1=True, zero1_buckets=2,
+            grad_compression=compression))
+    api = build_model(cfg)
+    dist = make_dist(mesh1, impl="paxi")
+    return api, dist
+
+
+def test_init_state_builds_zero1_plans(mesh1):
+    from repro.optim.adamw import FlatAdamState
+    from repro.train import train_loop
+
+    api, dist = _zero1_setup(mesh1, None)
+    state = train_loop.init_state(api, jax.random.PRNGKey(0), dist=dist)
+    assert isinstance(state.opt, FlatAdamState)
+    plans = dist.zero1_plans
+    assert plans is not None and plans.buckets == 2
+    assert plans.padded == state.opt.m.shape[0]
+    assert len(plans.rs) == 2 and len(plans.ag) == 2
+    # no compression: the ef buffer is the (dp,) dummy
+    assert state.opt.ef.shape[0] == dist.dp_size
+
+
+def test_reinit_frees_old_zero1_plans(mesh1):
+    """Rebuilding state on the same dist retires the old plans' slots —
+    repeated init_state must not leak request-pool slots."""
+    from repro.train import train_loop
+
+    api, dist = _zero1_setup(mesh1, None)
+    train_loop.init_state(api, jax.random.PRNGKey(0), dist=dist)
+    pool = len(dist.abi._req_pool)
+    free0 = len(dist.abi._req_free)
+    old = dist.zero1_plans
+    for i in range(3):
+        train_loop.init_state(api, jax.random.PRNGKey(i), dist=dist)
+    assert len(dist.abi._req_pool) == pool      # slots recycled, not grown
+    assert len(dist.abi._req_free) == free0
+    with pytest.raises(PaxError):               # the old plans are dead
+        old.rs[0].start(jnp.zeros(old.padded // old.buckets))
+
+
+def test_plans_mismatched_compression_fall_back(mesh1):
+    """None and int8 both ship an f32 wire but use different contexts — the
+    layout key must tell them apart so a mismatched plans object falls back
+    to the pooled path instead of starting plans on the wrong pool."""
+    from repro.runtime.dist import make_dist
+    from repro.train.grad_sync import build_zero1_plans, reduce_scatter_grads
+
+    from jax.sharding import PartitionSpec as P
+
+    dist = make_dist(mesh1, impl="paxi", compression="int8")
+    assert dist.abi_compressed is not None
+    plans = build_zero1_plans(dist, 8, 2, None)  # built for the plain wire
+    assert not plans.matches(8, dist.dp_size, 2, jnp.float32, "int8")
+    assert not plans.matches(8, dist.dp_size + 1, 2, jnp.float32, None)  # dp keyed
+    f = dist.abi.shard_region(
+        lambda v: reduce_scatter_grads(dist, v, compression="int8",
+                                       buckets=2, plans=plans)[0],
+        in_specs=P(), out_specs=P())
+    g = jax.jit(f)(jnp.arange(8.0))
+    np.testing.assert_allclose(np.asarray(g), np.arange(8.0))  # dp=1 mean
+    # the plans' requests were never touched by the mismatched sync
+    assert all(p.request.done for p in plans.rs)
+    assert dist.abi.outstanding_requests == 0
+    assert dist.abi_compressed.outstanding_requests == 0
+
+
+def test_train_loop_threads_error_feedback_bf16(mesh1):
+    from repro.optim.adamw import AdamWConfig
+    from repro.train import train_loop
+
+    api, dist = _zero1_setup(mesh1, "bf16")
+    state = train_loop.init_state(api, jax.random.PRNGKey(0), dist=dist)
+    padded = state.opt.m.shape[0]
+    # bf16 compression: per-rank full-length residuals, dp-sharded globally
+    assert state.opt.ef.shape[0] == dist.dp_size * padded
+    step_fn = jax.jit(train_loop.make_train_step(api, dist, AdamWConfig(lr=1e-3)))
+    batch = {"tokens": jnp.ones((2, 16), jnp.int32),
+             "targets": jnp.ones((2, 16), jnp.int32)}
+    s1, m1 = step_fn(state, batch)
+    ef1 = np.asarray(s1.opt.ef)
+    assert np.isfinite(ef1).all()
+    assert np.abs(ef1).sum() > 0  # the bf16 wire residual was captured
+    s2, m2 = step_fn(s1, batch)   # and feeds the next step without blowing up
+    assert np.isfinite(np.asarray(m2.loss))
+    assert np.isfinite(np.asarray(s2.opt.ef)).all()
+    assert dist.abi.outstanding_requests == 0
