@@ -42,6 +42,19 @@ baseline box and the CI runner:
 * **request-scan flatness**: per-request ``testall`` scan cost at 1000
   outstanding requests must stay within ±20% of the 10-request cost (the
   pool's O(1) contract), as recorded by the run itself.
+* **plan-group gates** (PR 5, from the current run alone):
+  ``startall_marginal_ns_per_plan`` (group-of-16 start+wait divided by 16)
+  must be ≤ 0.5× the same run's single-plan
+  ``dispatch_ns_allreduce_persistent`` — the whole point of ``Startall``
+  fusion is that the per-plan fixed cost is paid once per group;
+  ``startall_marginal_flatness_4_64`` (worst per-plan marginal slope
+  across 4→16 and 16→64, as a fraction of the single-plan start+wait)
+  must stay ≤ 0.20 — members must be ~free at every group size, and a
+  slope of a dispatch-unit's magnitude means per-member work crept back
+  into the start path; and ``plan_cache_hit_is_identity`` must
+  be exactly 1 — a second same-layout ``<name>_init`` returning anything
+  but the cached plan (or allocating a slot) breaks the re-plan
+  transparency contract.
 """
 from __future__ import annotations
 
@@ -147,6 +160,41 @@ def main(argv=None) -> int:
             print("OK " + line)
     except KeyError as e:
         failures.append(f"missing persistent-emulation record: {e}")
+
+    # -- plan-group gates (Startall fusion, PR 5; current run alone) -------
+    try:
+        marg = cur["startall_marginal_ns_per_plan"]
+        single = cur["dispatch_ns_allreduce_persistent"]
+        ceiling = 0.5 * single
+        line = (f"startall marginal per plan: {marg:.1f}ns vs single-plan "
+                f"{single:.1f}ns (ceiling={ceiling:.1f}ns = 0.5x)")
+        if marg > ceiling:
+            failures.append("REGRESSION " + line)
+        else:
+            print("OK " + line)
+    except KeyError as e:
+        failures.append(f"missing startall record: {e}")
+
+    if "startall_marginal_flatness_4_64" not in cur:
+        failures.append("missing record: startall_marginal_flatness_4_64")
+    else:
+        flat = cur["startall_marginal_flatness_4_64"]
+        line = (f"startall_marginal_flatness_4_64={flat:.3f} "
+                "(ceiling 0.20 of a single start+wait)")
+        if flat > 0.20:
+            failures.append("REGRESSION " + line)
+        else:
+            print("OK " + line)
+
+    if "plan_cache_hit_is_identity" not in cur:
+        failures.append("missing record: plan_cache_hit_is_identity")
+    else:
+        ok = cur["plan_cache_hit_is_identity"]
+        line = f"plan_cache_hit_is_identity={ok:.0f} (required: 1)"
+        if ok != 1.0:
+            failures.append("REGRESSION " + line)
+        else:
+            print("OK " + line)
 
     # -- request-scan flatness (from the current run alone) ----------------
     for impl in ("paxi", "ompix"):

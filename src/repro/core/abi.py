@@ -55,6 +55,20 @@ split and the attach_tool respecialization contract).  Emulation recipes
 build lazily — on first call or first plan — and ``capabilities()`` reports
 ``emulated`` without forcing the build.
 
+**Plan groups (MPI ``Startall``) and the layout-keyed plan cache (PR 5).**
+:meth:`PaxABI.plan_group` fuses N plans at *group-build* time: members are
+clustered by (entry, non-payload args) and each cluster resolves to one
+fused run — a backend group hook stacking same-comm same-op members into a
+single collective, a recipe group stage (emulated members run all their
+reduce-scatter legs before any all-gather leg), or a per-member loop.  The
+group owns one restartable request: ``group.start(payloads)`` is ONE
+inactive-check + the fused closure, ``group.wait()`` one completion scan,
+and tools see one interposition with group-summed bytes — the per-plan
+fixed cost the zero1 loop used to pay N times per step is paid once.
+``<name>_init`` is idempotent per layout: normalized plan signatures key a
+weak per-context cache, so re-planning after re-sharding/elastic-dp costs
+nothing unless the layout genuinely changed (see the PR 5 ROADMAP note).
+
 **Free-list request pool.**  Nonblocking operations return
 :class:`Request` handles.  The value is produced eagerly in dataflow terms
 (XLA schedules collectives asynchronously; on TPU the latency-hiding
@@ -152,9 +166,15 @@ class Plan:
     like an MPI persistent collective is specific to its bound buffer.
     ``attach_tool``/``detach_tool`` respecialize live plans the same way
     they respecialize the per-context entry points.
+
+    Plans are **layout-cached** (PR 5): ``<name>_init`` with a signature
+    already planned returns the same live plan (``PaxABI._plan_cache``), so
+    re-planning after a layout change is free when the layout did not in
+    fact change.  ``free()`` evicts the cache entry; the next same-layout
+    ``<name>_init`` builds a fresh plan.
     """
 
-    __slots__ = ("abi", "entry", "bound", "request", "freed",
+    __slots__ = ("abi", "entry", "bound", "request", "freed", "_cache_key",
                  "start", "wait", "_finalizer", "__weakref__")
 
     def __init__(self, abi, entry, bound) -> None:
@@ -163,6 +183,7 @@ class Plan:
         self.bound = bound        # table-order args, payloads abstracted
         self.request = None       # the restartable pooled Request
         self.freed = False
+        self._cache_key = None    # layout key in abi._plan_cache (if hashable)
         self._finalizer = None    # GC fallback reclaiming the slot
         # start/wait are compiled closures installed by _compile_plan
 
@@ -199,11 +220,97 @@ class Plan:
             # one definition of slot retirement, shared with the GC fallback
             _reclaim_plan_slot(abi, req, req.handle)
         abi._plans.discard(self)
+        if self._cache_key is not None:
+            if abi._plan_cache.get(self._cache_key) is self:
+                del abi._plan_cache[self._cache_key]
 
         def dead(*args, **kwargs):
             raise PaxError(
                 PAX_ERR_REQUEST,
                 f"persistent {self.entry.name!r} plan was freed",
+            )
+
+        self.start = dead
+        self.wait = dead
+
+
+class PlanGroup:
+    """A fused group of persistent plans (the MPI ``Startall`` analogue).
+
+    Built by :meth:`PaxABI.plan_group` from live plans of the same context.
+    At **group-build time** the members are clustered by (entry, non-payload
+    arguments) and each cluster compiles to one fused run closure: a backend
+    group hook (``Backend.plan_group_<method>`` — paxi/ring stack same-comm
+    same-op members into ONE collective over a concatenated buffer, ring
+    sharing one compressed wire across members; Mukautuva's generated group
+    wrappers cache every foreign-handle conversion), the recipe's group
+    builder for emulated entries (stage-fused: all members' reduce-scatter
+    legs before any all-gather leg), or a per-member plan-run loop.
+
+    The group owns ONE restartable pooled request: ``start(payloads)`` is a
+    single inactive-check (for the whole group), two field writes and the
+    fused closure; ``wait()`` — or ``abi.wait``/``waitall``/``testall`` on
+    the returned request — deactivates it and yields the member results in
+    member order.  Tool interposition is one ``before``/``after`` pair with
+    group-summed byte accounting.  ``payloads`` is a sequence with one item
+    per member (items for payload-less members such as ``barrier`` are
+    ignored).  Members stay independently usable; a group may list the same
+    (cached) plan several times — each occurrence binds its own payload
+    slot.  ``attach_tool``/``detach_tool`` respecialize live groups exactly
+    like plans; an aborted trace between start and wait is recovered by
+    :meth:`reset`; ``free()`` retires the group's slot only (never the
+    members').
+    """
+
+    __slots__ = ("abi", "name", "plans", "request", "freed",
+                 "start", "wait", "_finalizer", "__weakref__")
+
+    def __init__(self, abi, plans, name: str) -> None:
+        self.abi = abi
+        self.name = name
+        self.plans = tuple(plans)
+        self.request = None
+        self.freed = False
+        self._finalizer = None
+        # start/wait are compiled closures installed by _compile_plan_group
+
+    def __len__(self) -> int:
+        return len(self.plans)
+
+    def reset(self) -> None:
+        """Force the group inactive (escape hatch for an aborted trace that
+        left a ``start`` without its ``wait``)."""
+        req = self.request
+        if req is not None and not self.freed:
+            req.done = True
+            req.value = None
+
+    def free(self) -> None:
+        """Retire the group's request slot (members are untouched).
+
+        The group must be inactive; every handle it ever returned goes
+        stale forever (generation bump), exactly like :meth:`Plan.free`.
+        """
+        if self.freed:
+            return
+        req = self.request
+        if req is not None and not req.done:
+            raise PaxError(
+                PAX_ERR_REQUEST,
+                f"freeing an active plan group {self.name!r} "
+                "(wait the started request first)",
+            )
+        self.freed = True
+        abi = self.abi
+        if self._finalizer is not None:
+            self._finalizer.detach()
+        if req is not None:
+            _reclaim_plan_slot(abi, req, req.handle)
+        abi._plan_groups.discard(self)
+
+        def dead(*args, **kwargs):
+            raise PaxError(
+                PAX_ERR_REQUEST, f"plan group {self.name!r} was freed",
             )
 
         self.start = dead
@@ -265,17 +372,29 @@ def _lazy_entry(abi: "PaxABI", entry: abi_spec.AbiEntry):
     Negotiation decides *that* the entry is emulated at init (the dependency
     chain grounds out — ``capabilities()`` reports it without forcing
     anything); the closure itself is compiled on the first call, which also
-    swaps the built closure into the table and respecializes the entry so
-    subsequent calls pay exactly what the eager build used to."""
-    state = {"impl": None}
+    swaps the built closure into the table and respecializes the entry.
 
-    def lazy(*args, **kwargs):
-        impl = state["impl"]
-        if impl is None:
-            impl = state["impl"] = abi._build_recipe(entry.name)
-        return impl(*args, **kwargs)
+    **Self-patching via a mutable cell** (the PR-4 footgun, fixed): the shim
+    dispatches through ``cell[0]``, which starts as a build-and-call stub
+    and is overwritten with the built closure by ``_build_recipe`` — so a
+    callable hoisted *before* the first call pays one list index after the
+    build, not the old dict-lookup-plus-branch forever.  Specialized entry
+    points that captured the shim are healed the same way: their compiled
+    globals are patched in place (``_entry_envs``), so warmup re-fetching
+    is unnecessary anywhere."""
+    state = {"impl": None}
+    cell = [None]
+
+    def _build_and_call(*args, **kwargs):
+        return abi._build_recipe(entry.name)(*args, **kwargs)
+
+    cell[0] = _build_and_call
+
+    def lazy(*args, _cell=cell, **kwargs):
+        return _cell[0](*args, **kwargs)
 
     lazy.__lazy_recipe__ = state
+    lazy.__lazy_cell__ = cell
     lazy.__name__ = entry.backend_method
     lazy.__qualname__ = f"lazy-emulated.{entry.name}"
     return lazy
@@ -302,6 +421,12 @@ class PaxABI:
         self._table: dict[str, Callable] = {}
         self._source: dict[str, str] = {}   # name -> native|emulated|unavailable
         self._unavailable_reasons: dict[str, str] = {}
+        # the CURRENT compiled-entry-point globals dict per entry;
+        # _build_recipe patches its `_impl` in place when a lazy recipe
+        # resolves.  Only the latest is kept (respecialization replaces it)
+        # — a superseded hoisted callable is already stale by the
+        # attach_tool contract and still heals through the shim's cell.
+        self._entry_envs: dict[str, dict] = {}
         missing_required = []
         for entry in abi_spec.ABI_TABLE:
             if backend.supports(entry):
@@ -367,6 +492,16 @@ class PaxABI:
         # reclaimed only by an explicit free); respecialized with the entry
         # points on attach_tool/detach_tool
         self._plans: weakref.WeakSet[Plan] = weakref.WeakSet()
+        # live plan groups (same weak/respecialization contract as plans)
+        self._plan_groups: weakref.WeakSet[PlanGroup] = weakref.WeakSet()
+        # layout-keyed plan cache: (entry, comm, non-payload args, payload
+        # shape/dtype signature) -> Plan.  <name>_init is idempotent: the
+        # same layout returns the SAME live plan (weak values, so dropped
+        # plans still GC; Plan.free evicts its key).  This is what makes
+        # re-sharding / elastic-dp re-plans transparent: callers rebuild
+        # unconditionally and only genuinely new layouts allocate.
+        self._plan_cache: "weakref.WeakValueDictionary[tuple, Plan]" = (
+            weakref.WeakValueDictionary())
         # compile the per-instance specialized entry points (the init-time
         # half of the paper's "dispatch costs nothing per call" claim)
         self._specialize()
@@ -388,10 +523,13 @@ class PaxABI:
         rtools = tuple(reversed(tools))
         for entry in abi_spec.ABI_TABLE:
             self._specialize_entry(entry, tools, rtools)
-        # live persistent plans carry the tool decision baked in: recompile
-        # them with the new tool tuple (same contract as the entry points)
+        # live persistent plans and plan groups carry the tool decision baked
+        # in: recompile them with the new tool tuple (same contract as the
+        # entry points)
         for plan in list(self._plans):
             self._compile_plan(plan)
+        for group in list(self._plan_groups):
+            self._compile_plan_group(group)
 
     def _specialize_entry(self, entry: abi_spec.AbiEntry,
                           tools: Optional[tuple] = None,
@@ -410,6 +548,10 @@ class PaxABI:
             _SPEC_BLOCKING_SRC, (entry.name, tooled),
             lambda: _spec_blocking_src(entry, tooled), entry.name, env,
         )
+        # record the compiled globals so _build_recipe can patch `_impl` in
+        # place when a lazy recipe resolves — hoisted specialized callables
+        # then run the built closure directly, no shim indirection
+        self._entry_envs[entry.name] = env
         object.__setattr__(self, entry.name, fn)
         if entry.nonblocking:
             ienv = {
@@ -446,10 +588,11 @@ class PaxABI:
         return fn
 
     def _build_recipe(self, name: str) -> Callable:
-        """Compile a deferred recipe: swap the built closure into the table
-        and respecialize the entry, so steady-state dispatch is identical to
-        the old eager build (the lazy shim survives only in callables hoisted
-        before the first call)."""
+        """Compile a deferred recipe: swap the built closure into the table,
+        respecialize the entry, patch the shim's dispatch cell, and patch
+        every previously-compiled entry point's globals — so steady-state
+        dispatch is identical to the old eager build even for callables
+        hoisted before the first call (no warmup re-fetch needed)."""
         fn = self._table[name]
         state = getattr(fn, "__lazy_recipe__", None)
         if state is None:
@@ -460,6 +603,13 @@ class PaxABI:
             impl = entry.recipe.build(emulation.EmulationContext(self))
             state["impl"] = impl
             self._table[name] = impl
+            # heal hoisted references: the shim's cell now IS the built
+            # closure, and the current specialized function compiled
+            # against the shim gets its `_impl` global swapped in place
+            fn.__lazy_cell__[0] = impl
+            env = self._entry_envs.get(name)
+            if env is not None:
+                env["_impl"] = impl
             self._specialize_entry(entry)
         return impl
 
@@ -474,6 +624,16 @@ class PaxABI:
         :meth:`_plan_run`, tool-decision baking, and allocation of the
         restartable request slot.  Unavailable entries fail *here*, at plan
         time — never at ``start``.
+
+        ``<name>_init`` is **idempotent per layout**: the normalized
+        arguments (payloads as shape/dtype signatures) key the per-context
+        plan cache, and a hit returns the cached live plan — zero new
+        slots, zero recompilation.  Only an *inactive* plan is handed out
+        again (an in-flight one gets a fresh, independently startable twin
+        — the MPI ``_init`` contract), and a shared hit really is the same
+        plan: one holder's ``free()`` retires it for every holder.  A
+        signature that does not hash (exotic payload leaves) simply skips
+        the cache.
         """
         entry = abi_spec.ENTRY_BY_NAME[name]
         args = []
@@ -489,7 +649,19 @@ class PaxABI:
             elif a.kind == abi_spec.PAYLOAD:
                 v = _abstract_payload(v)
             args.append(v)
+        key = _plan_cache_key(entry, args)
+        if key is not None:
+            cached = self._plan_cache.get(key)
+            if (cached is not None and not cached.freed
+                    and cached.request.done):
+                # inactive cached plan: the idempotency hit.  An ACTIVE one
+                # is skipped — the MPI _init contract promises every init an
+                # independently startable request (double-buffered overlap),
+                # so a caller planning while the cached plan is in flight
+                # gets a fresh plan (which takes over the cache slot).
+                return cached
         plan = Plan(self, entry, tuple(args))
+        plan._cache_key = key
         plan.request = self._new_persistent_request(f"p{name}")
         # GC fallback: a plan dropped without free() must not leak its slot
         # forever.  The finalizer re-checks handle+persistent so an explicit
@@ -498,6 +670,8 @@ class PaxABI:
             plan, _reclaim_plan_slot, self, plan.request, plan.request.handle)
         self._compile_plan(plan)
         self._plans.add(plan)
+        if key is not None:
+            self._plan_cache[key] = plan
         return plan
 
     def _plan_run(self, name: str, bound: tuple) -> Callable:
@@ -656,6 +830,180 @@ class PaxABI:
         return req
 
     # ------------------------------------------------------------------
+    # plan groups (MPI Startall): fuse N plans into one start + one wait
+    # ------------------------------------------------------------------
+    def plan_group(self, plans: Sequence[Plan], name: str = "") -> PlanGroup:
+        """Compile a :class:`PlanGroup` from live plans of this context.
+
+        Group-build-time work (done exactly once): member validation,
+        clustering by (entry, non-payload arguments), fused-run resolution
+        per cluster (backend group hook → recipe group stage → per-member
+        loop), tool-decision baking with group-summed byte accounting, and
+        allocation of the group's own restartable request slot.
+        ``group.start(payloads)`` is then ONE inactive-check plus the fused
+        closure, and ``group.wait()`` one completion scan for all members.
+        """
+        plans = tuple(plans)
+        if not plans:
+            raise PaxError(PAX_ERR_REQUEST, "plan_group of zero plans")
+        for p in plans:
+            if not isinstance(p, Plan) or p.abi is not self:
+                raise PaxError(
+                    PAX_ERR_REQUEST,
+                    f"plan group {name!r} member is not a plan of this "
+                    "context",
+                )
+            if p.freed:
+                raise PaxError(
+                    PAX_ERR_REQUEST,
+                    f"plan group {name!r} member ({p.entry.name!r} plan) "
+                    "was already freed",
+                )
+        group = PlanGroup(self, plans, name or f"group[{len(plans)}]")
+        group.request = self._new_persistent_request(f"g{group.name}")
+        group._finalizer = weakref.finalize(
+            group, _reclaim_plan_slot, self, group.request,
+            group.request.handle)
+        self._compile_plan_group(group)
+        self._plan_groups.add(group)
+        return group
+
+    def _plan_group_run(self, name: str, bounds: Sequence[tuple]) -> Callable:
+        """Compile one fused run closure for ``len(bounds)`` same-entry,
+        same-non-payload-argument plan members.
+
+        Resolution mirrors :meth:`_plan_run`, lifted to lists: a
+        backend-declared **group hook** (``plan_group_<method>`` — paxi/ring
+        stack the members into one collective, Mukautuva's generated
+        wrappers cache all foreign conversion), then the recipe's
+        ``plan_group`` stage fusion for emulated entries, then a loop over
+        per-member plan runs.  Hooks/recipes may decline (return ``None``)
+        and fall through.  The returned closure maps the member payload
+        list to the member output list.
+        """
+        entry = abi_spec.ENTRY_BY_NAME[name]
+        bounds = list(bounds)
+        if len(bounds) > 1:
+            source = self._source[name]
+            if source == "native":
+                hook = getattr(self.backend,
+                               f"plan_group_{entry.backend_method}", None)
+                if hook is not None:
+                    run = hook(bounds)
+                    if run is not None:
+                        return run
+            elif source == "emulated" and entry.recipe.plan_group is not None:
+                run = entry.recipe.plan_group(
+                    emulation.PlanContext(self), bounds)
+                if run is not None:
+                    return run
+        runs = [self._plan_run(name, tuple(b)) for b in bounds]
+        if entry.payload_args:
+            return lambda xs: [r(x) for r, x in zip(runs, xs)]
+        return lambda xs: [r() for r in runs]
+
+    def _compile_plan_group(self, group: PlanGroup) -> None:
+        """(Re)compile a group's fused start/wait closures.
+
+        Called at group build and again from :meth:`_specialize` when the
+        tool chain changes — live groups are respecialized, not
+        invalidated (the same contract as plans and entry points).
+        """
+        plans = group.plans
+        n = len(plans)
+        # cluster members by (entry, non-payload bound args); each cluster
+        # compiles to one fused segment, outputs reassembled in member order
+        clusters: dict[tuple, list[int]] = {}
+        for i, p in enumerate(plans):
+            pay = set(p.entry.payload_args)
+            key = (p.entry.name, tuple(
+                v for j, v in enumerate(p.bound) if j not in pay))
+            clusters.setdefault(key, []).append(i)
+        segments = []
+        for (ename, _), idxs in clusters.items():
+            seg_run = self._plan_group_run(
+                ename, [plans[i].bound for i in idxs])
+            segments.append((tuple(idxs), seg_run))
+
+        if len(segments) == 1 and segments[0][0] == tuple(range(n)):
+            run = segments[0][1]  # homogeneous group: no reassembly layer
+        else:
+            seg_t = tuple(segments)
+
+            def run(payloads, _segs=seg_t, _n=n):
+                outs = [None] * _n
+                for idxs, seg in _segs:
+                    for i, v in zip(idxs, seg([payloads[i] for i in idxs])):
+                        outs[i] = v
+                return outs
+
+        if self.tools:
+            # one interposition for the whole group: the info dict carries
+            # the byte total summed over every member's bound payload shape
+            # (built fresh per start, like the per-call path)
+            tools = tuple(self.tools)
+            rtools = tuple(reversed(tools))
+            total = 0
+            comms = set()
+            for p in plans:
+                entry = p.entry
+                if entry.bytes_arg:
+                    idx = {a.name: i for i, a in enumerate(entry.args)}
+                    total += _nbytes(p.bound[idx[entry.bytes_arg]], self)
+                for i, a in enumerate(entry.args):
+                    if a.kind == abi_spec.COMM:
+                        comms.add(p.bound[i])
+            comm_h = comms.pop() if len(comms) == 1 else None
+            fname = group.name
+            gsize = n
+            base_run = run
+
+            def run(payloads):
+                targs = tuple(payloads)
+                info = {"bytes": total, "comm_handle": comm_h,
+                        "group": fname, "members": gsize}
+                for t in tools:
+                    t.before(fname, targs, info)
+                res = base_run(payloads)
+                for t in rtools:
+                    res = t.after(fname, targs, info, res)
+                return res
+
+        req = group.request
+        gname = group.name
+
+        def start(payloads, _req=req, _run=run, _n=n):
+            if len(payloads) != _n:
+                raise PaxError(
+                    PAX_ERR_REQUEST,
+                    f"plan group {gname!r} started with {len(payloads)} "
+                    f"payloads for {_n} members (one per member; items for "
+                    "payload-less members are ignored)",
+                )
+            if not _req.done:
+                raise PaxError(
+                    PAX_ERR_REQUEST,
+                    f"plan group {gname!r} started while already active "
+                    "(wait the previous start first)",
+                )
+            _req.done = False
+            _req.value = _run(payloads)
+            return _req
+
+        def wait(_req=req):
+            # wait on an inactive group returns immediately (MPI semantics);
+            # completion deactivates without retiring — one scan, restartable
+            if _req.done:
+                return None
+            _req.done = True
+            v = _req.value
+            _req.value = None
+            return v
+
+        group.start = start
+        group.wait = wait
+
+    # ------------------------------------------------------------------
     # capability report (what tiered negotiation resolved, per entry)
     # ------------------------------------------------------------------
     def capabilities(self) -> dict[str, dict]:
@@ -689,6 +1037,17 @@ class PaxABI:
                     info["plan"] = "recipe-plan"
                 else:
                     info["plan"] = "generic"
+                # how a plan_group cluster of this entry would fuse
+                if source == "unavailable":
+                    info["plan_group"] = "unavailable"
+                elif (source == "native"
+                        and self.backend.supports_persistent_group(entry)):
+                    info["plan_group"] = "backend-hook"
+                elif (source == "emulated"
+                        and entry.recipe.plan_group is not None):
+                    info["plan_group"] = "recipe-stage"
+                else:
+                    info["plan_group"] = "generic"
             info.update(self.backend.capability(entry))
             report[entry.name] = info
         return report
@@ -872,11 +1231,15 @@ class PaxABI:
     @property
     def outstanding_requests(self) -> int:
         """Live nonblocking requests plus *active* (started, unwaited)
-        persistent plans.  Inactive plans hold their slot but are not
-        outstanding work — they do not block ``finalize``."""
+        persistent plans and plan groups.  Inactive plans/groups hold their
+        slot but are not outstanding work — they do not block ``finalize``."""
         live = self._req_live
         for p in self._plans:
             r = p.request
+            if r is not None and not r.done:
+                live += 1
+        for g in self._plan_groups:
+            r = g.request
             if r is not None and not r.done:
                 live += 1
         return live
@@ -922,6 +1285,30 @@ def _abstract_payload(x):
         return l
 
     return jax.tree.map(leaf, x)
+
+
+def _plan_cache_key(entry: abi_spec.AbiEntry, args: Sequence) -> Optional[tuple]:
+    """The layout key of one normalized plan-argument list: entry name plus
+    every non-payload argument verbatim and every payload as its
+    (treedef, per-leaf shape/dtype) signature.  Returns ``None`` when any
+    component does not hash (exotic payload leaves) — the plan is then
+    simply not cached."""
+    parts: list = [entry.name]
+    try:
+        for a, v in zip(entry.args, args):
+            if a.kind == abi_spec.PAYLOAD:
+                leaves, treedef = jax.tree.flatten(v)
+                parts.append((treedef, tuple(
+                    (tuple(l.shape), str(l.dtype))
+                    if hasattr(l, "shape") and hasattr(l, "dtype") else l
+                    for l in leaves)))
+            else:
+                parts.append(v)
+        key = tuple(parts)
+        hash(key)
+        return key
+    except TypeError:
+        return None
 
 
 def _payload_splicer(entry: abi_spec.AbiEntry, bound: tuple) -> Callable:

@@ -78,11 +78,22 @@ class Recipe:
     ``start()`` on an emulated entry costs the same as on a native one.
     Entries without one still get a generic plan (argument freezing around
     the built emulation closure).
+
+    ``plan_group`` is the optional *plan-group* compiler (the MPI
+    ``Startall`` analogue, PR 5): given a ``PlanContext`` and a list of
+    bound-argument tuples — one per group member, all sharing the same
+    non-payload arguments — it returns one fused run closure executing the
+    recipe **per stage across members** (e.g. every member's
+    reduce-scatter leg before any all-gather leg, each stage itself fused
+    through ``PlanContext.plan_group_dep`` when the backend has a group
+    hook).  Returning ``None`` declines the fusion and the group falls
+    back to per-member plan runs.
     """
 
     deps: Tuple[str, ...]
     build: Callable
     plan: Optional[Callable] = None
+    plan_group: Optional[Callable] = None
 
 # ---------------------------------------------------------------------------
 # Argument domains.  The domain decides (a) the ABI-layer handle check and
@@ -187,11 +198,13 @@ ABI_TABLE: Tuple[AbiEntry, ...] = (
        [Arg("x", PAYLOAD), Arg("op", OP), Arg("comm", COMM)],
        nonblocking=True, bytes_arg="x", dtype_size_kwarg=True,
        recipe=Recipe(("reduce_scatter", "allgather", "comm_size"),
-                     em.build_allreduce, em.plan_allreduce)),
+                     em.build_allreduce, em.plan_allreduce,
+                     em.plan_group_allreduce)),
     _e("reduce", "Reduce",
        [Arg("x", PAYLOAD), Arg("op", OP), Arg("root", ROOT), Arg("comm", COMM)],
        nonblocking=True, bytes_arg="x",
-       recipe=Recipe(("allreduce",), em.build_reduce, em.plan_reduce)),
+       recipe=Recipe(("allreduce",), em.build_reduce, em.plan_reduce,
+                     em.plan_group_reduce)),
     _e("bcast", "Bcast",
        [Arg("x", PAYLOAD), Arg("root", ROOT), Arg("comm", COMM)],
        nonblocking=True, bytes_arg="x",

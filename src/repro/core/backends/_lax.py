@@ -125,13 +125,48 @@ def scan_fold(x, fn: Callable, axes: Sequence[str], inclusive: bool = True):
     return prefix_fold(g, rank(axes), fn, x, inclusive)
 
 
+def _alltoall_hier_uniform(x, axes: Sequence[str], c: int):
+    """Hierarchical uniform-count all-to-all over a multi-axis communicator
+    (row-major linearized rank/peer order), decomposed axis by axis the way
+    ``ring_scan_sum_multi`` decomposes the prefix scan: route the major
+    digit of every destination over the major axis first, transpose the
+    minor destination blocks to the front, recurse over the remaining axes,
+    and transpose back into source-major order.  ``len(axes)`` single-axis
+    ``all_to_all`` phases move the same bytes a flat S-peer exchange would,
+    but each phase stays inside one mesh axis — the 2D-torus schedule.
+
+    ``x``: ``(S*c, ...)`` rows grouped by linearized destination; returns
+    the same shape grouped by linearized source."""
+    a0 = axes[0]
+    A = compat.axis_size(a0)
+    tail = x.shape[1:]
+    if len(axes) == 1:
+        return alltoall(x, (a0,), 0, 0)
+    import math
+
+    R = math.prod(compat.axis_size(a) for a in axes[1:])
+    # phase 1: deliver each destination's major digit over the major axis
+    # (A blocks of R*c rows); block a0 is then the data *from* major-source
+    # a0, still ordered by minor destination
+    y = alltoall(x, (a0,), 0, 0)
+    y = y.reshape((A, R, c) + tail)
+    # group by minor destination and recurse (blocks of A*c rows)
+    y = jnp.swapaxes(y, 0, 1).reshape((R * A * c,) + tail)
+    y = _alltoall_hier_uniform(y, axes[1:], A * c)
+    # rows are now (minor-source, major-source); back to row-major source
+    y = y.reshape((R, A, c) + tail)
+    return jnp.swapaxes(y, 0, 1).reshape((A * R * c,) + tail)
+
+
 def alltoallv(x, sendcounts: Sequence[int], recvcounts: Sequence[int],
               axes: Sequence[str]):
     """Counted all-to-all over the leading array axis (MPI_Alltoallv).
 
     ``x`` holds ``sum(sendcounts)`` rows: block *i* (``sendcounts[i]`` rows)
     goes to peer *i*; ``recvcounts[j]`` rows come back from peer *j*, in
-    peer order.
+    peer order.  Multi-axis communicators decompose hierarchically
+    (:func:`_alltoall_hier_uniform`); peers are linearized row-major, so
+    the result is indistinguishable from a flat single-axis exchange.
 
     **SPMD restriction:** a single static trace shares one counts vector
     across every rank, so per-rank-varying counts are not representable —
@@ -162,13 +197,10 @@ def alltoallv(x, sendcounts: Sequence[int], recvcounts: Sequence[int],
         if S != 1:
             raise ValueError("group-of-one alltoallv takes exactly one count")
         return x
-    if len(axes) != 1:
-        raise NotImplementedError(
-            "alltoallv is defined over single-axis communicators "
-            f"(got axes={axes}); split the communicator"
-        )
     if c == 0:
         return x[:0]
+    if len(axes) > 1:
+        return _alltoall_hier_uniform(x, tuple(axes), c)
     out = alltoall(x.reshape((S, c) + x.shape[1:]), axes, 0, 0)
     return out.reshape((S * c,) + x.shape[1:])
 

@@ -99,8 +99,13 @@ class Backend(abc.ABC):
     def capability(self, entry: AbiEntry) -> dict:
         """This backend's view of one entry, folded into the per-context
         report ``PaxABI.capabilities()``.  Adapters (Mukautuva) override to
-        translate the foreign library's symbol table across the layer."""
-        return {"backend": self.name, "native": self.supports(entry)}
+        translate the foreign library's symbol table across the layer.
+        Persistent entries additionally report ``group_hook`` — whether the
+        backend declares a native plan-group fusion for the entry."""
+        info = {"backend": self.name, "native": self.supports(entry)}
+        if entry.persistent:
+            info["group_hook"] = self.supports_persistent_group(entry)
+        return info
 
     # -- persistent plans (MPI-4 <name>_init) ------------------------------
     # A backend declares *native persistent support* for an entry by
@@ -120,6 +125,26 @@ class Backend(abc.ABC):
         """Whether this backend declares a native plan hook for ``entry``."""
         return (self.supports(entry)
                 and getattr(type(self), f"plan_{entry.backend_method}", None)
+                is not None)
+
+    # -- plan groups (MPI Startall) ----------------------------------------
+    # A backend declares *native group fusion* for an entry by defining
+    # ``plan_group_<backend_method>(self, bounds)`` where ``bounds`` is a
+    # list of bound-argument tuples, one per group member, guaranteed by the
+    # ABI layer to share every non-payload argument (same comm, same op,
+    # same axis...).  The hook returns a run closure mapping the member
+    # payload list to the member output list — typically ONE stacked
+    # collective over the concatenated buffers — or ``None`` to decline
+    # (e.g. mixed payload shapes), in which case the group falls back to
+    # per-member plan runs.  Payloads are bound abstractly; hooks must not
+    # read values.
+
+    def supports_persistent_group(self, entry: AbiEntry) -> bool:
+        """Whether this backend declares a native plan-group hook for
+        ``entry`` (reported as ``group_hook`` in :meth:`capability`)."""
+        return (self.supports(entry)
+                and getattr(type(self),
+                            f"plan_group_{entry.backend_method}", None)
                 is not None)
 
 

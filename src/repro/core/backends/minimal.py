@@ -29,6 +29,14 @@ plan is precomposed from them by the recipe plan builders — so a
 ``<name>_init`` plan on this backend starts with the same bare-closure cost
 as on a full implementation (the ``persistent_emulated_native_ratio`` CI
 gate measures exactly this).
+
+Plan groups (MPI ``Startall``, PR 5) stack the same way one level up: the
+native rs/ag entries inherit paxi's ``plan_group_*`` stacking hooks, and an
+emulated ``allreduce`` group fuses per stage through the recipe's group
+builder — every member's reduce-scatter leg (one stacked collective via the
+inherited hook) before any all-gather leg.  ``capabilities()`` reports
+``plan_group: recipe-stage`` for the emulated entries and ``backend-hook``
+for the native primitives.
 """
 from __future__ import annotations
 

@@ -16,12 +16,34 @@ from typing import Any, Callable, Optional, Sequence
 
 import jax
 
+import jax.numpy as jnp
+
 from .. import handles as H
 from ..communicator import CommTable
 from ..datatypes import DatatypeRegistry
 from ..ops import NATIVE_COLLECTIVE_OPS, OpRegistry
 from . import _lax
 from .base import Backend
+
+
+def uniform_payload(bounds, min_ndim: int = 0):
+    """The stackability test shared by the plan-group hooks: every member's
+    bound payload (first argument) must be a single array signature of the
+    same shape and dtype with at least ``min_ndim`` dims.  Returns
+    (shape, dtype) or ``None`` (pytree payloads / mixed geometry — the
+    hook declines and the group falls back to per-member runs)."""
+    x0 = bounds[0][0]
+    if not (hasattr(x0, "shape") and hasattr(x0, "dtype")):
+        return None
+    shape, dtype = tuple(x0.shape), x0.dtype
+    if len(shape) < min_ndim:
+        return None
+    for b in bounds[1:]:
+        x = b[0]
+        if (not hasattr(x, "shape") or tuple(x.shape) != shape
+                or getattr(x, "dtype", None) != dtype):
+            return None
+    return shape, dtype
 
 
 class PaxiBackend(Backend):
@@ -163,3 +185,83 @@ class PaxiBackend(Backend):
     def plan_bcast(self, x, root: int, comm: int):
         axes = self.comm_axes(comm)
         return lambda x: _lax.bcast(x, root, axes)
+
+    # -- plan-group hooks (MPI Startall): stack same-comm, same-op members
+    # into ONE collective.  Members are stacked on a fresh leading axis and
+    # the collective runs over axis 1 (reduce_scatter/allgather) or
+    # elementwise (allreduce/bcast), so N member plans cost one XLA
+    # collective instead of N.  Mixed shapes/pytrees decline (None) and the
+    # ABI layer falls back to per-member plan runs.
+    def plan_group_allreduce(self, bounds):
+        _, op, comm = bounds[0]
+        u = uniform_payload(bounds)
+        if u is None:
+            return None
+        axes = self.comm_axes(comm)
+        n = len(bounds)
+        if not axes:
+            return lambda xs: list(xs)  # group-of-one identity, frozen
+        if op == H.PAX_SUM:
+            red = lambda s: _lax.psum(s, axes)
+        elif op == H.PAX_MAX:
+            red = lambda s: _lax.pmax(s, axes)
+        elif op == H.PAX_MIN:
+            red = lambda s: _lax.pmin(s, axes)
+        else:
+            return None  # generic-op fold: per-member fallback
+
+        def run(xs):
+            out = red(jnp.stack(xs))
+            return [out[i] for i in range(n)]
+
+        return run
+
+    def plan_group_reduce_scatter(self, bounds):
+        _, op, comm, axis = bounds[0]
+        u = uniform_payload(bounds, min_ndim=1)
+        if u is None or axis != 0 or op != H.PAX_SUM:
+            return None
+        axes = self.comm_axes(comm)
+        n = len(bounds)
+        if not axes:
+            return lambda xs: list(xs)
+        if u[0][0] % self.comms.info(comm).size:
+            return None
+
+        def run(xs):
+            out = _lax.reduce_scatter_sum(jnp.stack(xs), axes, axis=1)
+            return [out[i] for i in range(n)]
+
+        return run
+
+    def plan_group_allgather(self, bounds):
+        _, comm, axis = bounds[0]
+        u = uniform_payload(bounds, min_ndim=1)
+        if u is None or axis != 0:
+            return None
+        axes = self.comm_axes(comm)
+        n = len(bounds)
+        if not axes:
+            return lambda xs: list(xs)
+
+        def run(xs):
+            out = _lax.allgather(jnp.stack(xs), axes, axis=1)
+            return [out[i] for i in range(n)]
+
+        return run
+
+    def plan_group_bcast(self, bounds):
+        _, root, comm = bounds[0]
+        u = uniform_payload(bounds)
+        if u is None:
+            return None
+        axes = self.comm_axes(comm)
+        n = len(bounds)
+        if not axes:
+            return lambda xs: list(xs)
+
+        def run(xs):
+            out = _lax.bcast(jnp.stack(xs), root, axes)
+            return [out[i] for i in range(n)]
+
+        return run

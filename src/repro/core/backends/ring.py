@@ -34,7 +34,7 @@ from .. import compat
 
 from .. import handles as H
 from . import _lax
-from .paxi import PaxiBackend
+from .paxi import PaxiBackend, uniform_payload
 
 
 def _quantize(x, compress: Optional[str]):
@@ -267,5 +267,44 @@ class RingBackend(PaxiBackend):
             for a in reversed(axes):  # inverse of reduce_scatter
                 x = ring_allgather(x, a)
             return x
+
+        return run
+
+    # -- plan-group hooks: fuse the members into ONE ring schedule whose
+    # wire carries all buckets side by side (stacked on a trailing member
+    # axis, so the leading axis keeps the rank-chunk layout the hops slice).
+    # Compression quantizes the fused block per hop — one absmax scale
+    # covers every member's traveling contribution, and the group pays one
+    # set of S-1 hops instead of N.
+    def plan_group_reduce_scatter(self, bounds):
+        _, op, comm, axis = bounds[0]
+        axes = self.comm_axes(comm)
+        u = uniform_payload(bounds, min_ndim=1)
+        if (u is None or op != H.PAX_SUM or not axes or axis != 0
+                or u[0][0] % math.prod(self._axis_sizes(axes))):
+            return super().plan_group_reduce_scatter(bounds)
+        compress = self.compress
+        n = len(bounds)
+
+        def run(xs):
+            x = jnp.stack(xs, axis=1)  # (rows, members, ...): one fused wire
+            for a in axes:  # forward axis order: chunk == linearized rank
+                x = ring_reduce_scatter(x, a, compress)
+            return [x[:, i] for i in range(n)]
+
+        return run
+
+    def plan_group_allgather(self, bounds):
+        _, comm, axis = bounds[0]
+        axes = self.comm_axes(comm)
+        if uniform_payload(bounds, min_ndim=1) is None or not axes or axis != 0:
+            return super().plan_group_allgather(bounds)
+        n = len(bounds)
+
+        def run(xs):
+            x = jnp.stack(xs, axis=1)
+            for a in reversed(axes):  # inverse of reduce_scatter
+                x = ring_allgather(x, a)
+            return [x[:, i] for i in range(n)]
 
         return run

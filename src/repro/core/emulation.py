@@ -95,6 +95,16 @@ class PlanContext(EmulationContext):
     def plan_dep(self, name: str, *bound) -> Callable:
         return self._abi._plan_run(name, bound)
 
+    def plan_group_dep(self, name: str, bounds) -> Callable:
+        """Compile one *fused* run closure for a whole stage of a plan
+        group: ``bounds`` is a list of bound-argument tuples (one per
+        member) and the returned closure maps a payload list to an output
+        list.  Resolution mirrors the ABI layer's group compiler — backend
+        group hook, recipe group stage, or a per-member loop — so a recipe
+        group builder composes stages that are themselves stacked
+        collectives whenever the backend can fuse them."""
+        return self._abi._plan_group_run(name, bounds)
+
 
 def _tag(fn: Callable, name: str, deps: tuple) -> Callable:
     fn.__name__ = name
@@ -382,3 +392,61 @@ def plan_exscan(ctx: PlanContext, x, op, comm) -> Callable:
 def plan_gather(ctx: PlanContext, x, root, comm, axis=0) -> Callable:
     # SPMD gather == allgather (defined at root, replicated elsewhere).
     return ctx.plan_dep("allgather", x, comm, axis)
+
+
+# ---------------------------------------------------------------------------
+# Plan-group builders (the MPI ``Startall`` analogue, PR 5).  Each receives
+# the bound argument tuples of every group member — same non-payload
+# arguments across members, payloads abstract — and returns one fused run
+# closure over the member payload list.  The fusion is **per stage**: every
+# member's reduce-scatter leg runs before any all-gather leg, and each stage
+# goes through ``PlanContext.plan_group_dep`` so the backend's own group
+# hook can collapse a stage into a single stacked collective.
+# ---------------------------------------------------------------------------
+def plan_group_allreduce(ctx: PlanContext, bounds) -> Callable:
+    op, comm = bounds[0][1], bounds[0][2]
+    S = ctx.dep("comm_size")(comm)
+    if S <= 1:
+        return lambda xs: list(xs)
+    members = []
+    rs_bounds, ag_bounds = [], []
+    for x, _, _ in bounds:
+        if not hasattr(x, "shape") or not hasattr(x, "dtype"):
+            return None  # pytree payloads: fall back to per-member plans
+        scalar = len(tuple(x.shape)) == 0
+        shape = (1,) if scalar else tuple(x.shape)
+        n = shape[0]
+        pad = (-n) % S
+        rest = shape[1:]
+        members.append((scalar, n, pad, rest, x.dtype))
+        rs_bounds.append((jax.ShapeDtypeStruct((n + pad,) + rest, x.dtype),
+                          op, comm, 0))
+        ag_bounds.append((jax.ShapeDtypeStruct(((n + pad) // S,) + rest,
+                                               x.dtype), comm, 0))
+    rs_run = ctx.plan_group_dep("reduce_scatter", rs_bounds)
+    ag_run = ctx.plan_group_dep("allgather", ag_bounds)
+
+    def run(xs):
+        mids = []
+        for (scalar, n, pad, rest, dtype), x in zip(members, xs):
+            if scalar:
+                x = jnp.reshape(x, (1,))
+            if pad:
+                x = jnp.concatenate([x, jnp.zeros((pad,) + rest, dtype)],
+                                    axis=0)
+            mids.append(x)
+        outs = ag_run(rs_run(mids))  # all rs legs, then all ag legs
+        final = []
+        for (scalar, n, pad, rest, dtype), o in zip(members, outs):
+            if pad or scalar:
+                o = o[:n]
+            final.append(o[0] if scalar else o)
+        return final
+
+    return run
+
+
+def plan_group_reduce(ctx: PlanContext, bounds) -> Callable:
+    # SPMD: computed everywhere, defined at root (the MPI contract).
+    return ctx.plan_group_dep(
+        "allreduce", [(x, op, comm) for x, op, root, comm in bounds])

@@ -139,12 +139,15 @@ class MukBackend(Backend):
         ``PaxABI.capabilities()`` distinguishes "the foreign library exports
         ``Allreduce`` behind the trampoline" from "the ABI layer emulated
         ``reduce`` because ``libompix`` has no ``Reduce`` symbol"."""
-        return {
+        info = {
             "backend": self.name,
             "native": self.supports(entry),
             "impl": self.lib.name,
             "impl_symbol": entry.impl_name,
         }
+        if entry.persistent:
+            info["group_hook"] = self.supports_persistent_group(entry)
+        return info
 
     # ------------------------------------------------------------------
     # predefined-handle maps (the compile-time knowledge of both ABIs)
@@ -422,6 +425,49 @@ def _plan_src(entry: abi_spec.AbiEntry) -> str:
     return "\n".join(lines) + "\n"
 
 
+def _plan_group_src(entry: abi_spec.AbiEntry) -> str:
+    """Generated plan-group hook (the ``Startall`` analogue of the WRAP_*
+    layer): every member's handle conversion runs once at group-build time,
+    and the fused run is one tight loop over the foreign symbol with the
+    cached IMPL-domain argument tuples — per start, the translation layer
+    pays N rc translations and nothing else.  Generated only for
+    single-payload value-returning entries; the rest fall back to the ABI
+    layer's per-member composition of the (also conversion-cached)
+    ``plan_*`` hooks."""
+    names = [a.name for a in entry.args]
+    frozen_exprs = []
+    for a in entry.args:
+        if a.kind == abi_spec.PAYLOAD:
+            continue
+        if a.kind == abi_spec.DATATYPE_VEC:
+            frozen_exprs.append(
+                f"tuple(self._convert_dtype(_t) for _t in {a.name})")
+        elif a.kind in _CONVERT_EXPR:
+            frozen_exprs.append(_CONVERT_EXPR[a.kind].format(a=a.name))
+        else:
+            frozen_exprs.append(a.name)
+    lines = [
+        f"def plan_group_{entry.backend_method}(self, bounds):",
+        f"    _lib_fn = self.lib.{entry.impl_name}",
+        "    _rc = self._rc",
+        "    _frozen = []",
+        "    for _b in bounds:",
+        f"        ({', '.join(names)},) = _b",
+        f"        _frozen.append(({', '.join(frozen_exprs)},))",
+        "    def _run(_payloads):",
+        "        _out = []",
+        "        _append = _out.append",
+        "        for _x, _f in zip(_payloads, _frozen):",
+        "            _code, _v = _lib_fn(_x, *_f)",
+        "            if _code:",
+        "                _rc(_code)",
+        "            _append(_v)",
+        "        return _out",
+        "    return _run",
+    ]
+    return "\n".join(lines) + "\n"
+
+
 def _install_generated_wraps() -> None:
     for entry in abi_spec.ABI_TABLE:
         fn = abi_spec.compile_method(_wrap_src(entry), {}, entry.backend_method)
@@ -437,6 +483,20 @@ def _install_generated_wraps() -> None:
                 "conversion cached at plan time (paper §6.2, MPI-4 _init)."
             )
             setattr(MukBackend, f"plan_{entry.backend_method}", pfn)
+            if (entry.payload_args == (0,) and not entry.temps
+                    and entry.muk_ret == "value"):
+                gfn = abi_spec.compile_method(
+                    _plan_group_src(entry), {},
+                    f"plan_group_{entry.backend_method}")
+                gfn.__qualname__ = (
+                    f"MukBackend.plan_group_{entry.backend_method}")
+                gfn.__doc__ = (
+                    f"Generated group WRAP_{entry.impl_name}: every member's "
+                    "foreign-handle conversion cached at group-build time; "
+                    "the fused run is one loop of foreign calls plus rc "
+                    "translation (MPI Startall, PR 5)."
+                )
+                setattr(MukBackend, f"plan_group_{entry.backend_method}", gfn)
 
 
 _install_generated_wraps()

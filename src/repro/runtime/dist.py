@@ -29,8 +29,10 @@ class DistContext:
     world: int = PAX_COMM_WORLD
     # optional second context whose backend compresses on the wire
     abi_compressed: Optional[PaxABI] = None
-    # persistent zero1 collective plans (grad_sync.Zero1Plans), built once by
-    # train_loop.init_state when the ZeRO-1 flat layout is active
+    # persistent zero1 collective plans + their Startall groups
+    # (grad_sync.Zero1Plans), built once by train_loop.init_state when the
+    # ZeRO-1 flat layout is active; kept as-is across re-inits whose layout
+    # matches (the ABI's layout-keyed plan cache makes rebuilds identity)
     zero1_plans: Optional[object] = None
 
     @property
@@ -40,6 +42,13 @@ class DistContext:
     @property
     def tp_size(self) -> int:
         return self.mesh.shape[self.tp_axis]
+
+    def drop_zero1_plans(self) -> None:
+        """Retire the zero1 plans' and groups' request slots (layout change
+        or teardown); the next ``init_state`` re-plans from scratch."""
+        if self.zero1_plans is not None:
+            self.zero1_plans.free()
+            self.zero1_plans = None
 
 
 def make_dist(

@@ -8,9 +8,12 @@ Modes (config ``parallelism.grad_sync``):
   shard, and the updated shard is **all-gathered** back.  Collective bytes:
   2x the parameter bytes per step (vs 2x for plain all-reduce but with 1/dp
   optimizer memory).  Options:
-    - bucketing: the vector is split into N buckets issued as nonblocking
-      ``ireduce_scatter`` requests (XLA's latency-hiding scheduler can
-      overlap them with the optimizer math of earlier buckets);
+    - bucketing: the vector is split into N buckets; with persistent plans
+      (``Zero1Plans``) all buckets ride ONE Startall plan-group start/wait
+      pair per leg (a single fused, backend-stacked collective), and the
+      pooled nonblocking ``ireduce_scatter`` path remains the fallback
+      (XLA's latency-hiding scheduler can overlap either with the
+      optimizer math of earlier buckets);
     - compression: ``bf16`` casts the wire payload (+error feedback);
       ``int8`` routes through a ring backend that quantizes per hop.
 * ``gspmd`` — implicit: gradients/optimizer state are sharded by XLA via
@@ -55,22 +58,35 @@ def _interleave_bucket_gathers(outs, dp: int, rest: tuple = ()):
 
 
 # ---------------------------------------------------------------------------
-# Persistent plans for the zero1 round trip (MPI-4 <name>_init).  The
-# bucketed reduce-scatter/all-gather a training loop issues is *identical*
-# every step — same shapes, same comm, same op — which is exactly the shape
-# persistent collectives amortize: the plans are built once (init_state) and
-# every step's start() is a bare closure call into the backend.
+# Persistent plan groups for the zero1 round trip (MPI-4 <name>_init +
+# MPI Startall).  The bucketed reduce-scatter/all-gather a training loop
+# issues is *identical* every step — same shapes, same comm, same op — which
+# is exactly the shape persistent collectives amortize: the plans are built
+# once (init_state, idempotent via the ABI's layout-keyed plan cache) and
+# every step drives ONE group.start()/group.wait() pair per leg instead of
+# N per-bucket starts — one inactive-check, one fused (backend-stacked)
+# collective, one completion scan.
 # ---------------------------------------------------------------------------
+def zero1_wire_dtype(compression: Optional[str]):
+    """The dtype the reduce-scatter leg puts on the wire for a compression
+    mode — one definition for plan building and layout matching."""
+    return jnp.bfloat16 if compression == "bf16" else jnp.float32
+
+
 @dataclasses.dataclass(frozen=True)
 class Zero1Plans:
-    """Per-bucket persistent plans for one zero1 layout.
+    """Per-bucket persistent plans + their Startall groups for one zero1
+    layout.
 
-    ``rs`` lives on the wire context (the compressed ring context for int8),
-    ``ag`` on the primary context; both are keyed by the layout contract
-    (padded length, dp, bucket count, wire dtype AND compression mode — the
-    mode picks the wire *context*, which the dtype alone cannot distinguish:
-    ``None`` and ``"int8"`` both ship f32) so callers can verify the plans
-    match the sync they are about to run and fall back otherwise.
+    ``rs``/``rs_group`` live on the wire context (the compressed ring
+    context for int8), ``ag``/``ag_group`` on the primary context; all are
+    keyed by the layout contract (padded length, dp, bucket count, wire
+    dtype AND compression mode — the mode picks the wire *context*, which
+    the dtype alone cannot distinguish: ``None`` and ``"int8"`` both ship
+    f32) so callers can verify the plans match the sync they are about to
+    run and fall back otherwise.  Because ``<name>_init`` is layout-cached,
+    the ``rs``/``ag`` tuples typically repeat ONE cached plan per leg; the
+    groups bind one payload slot per bucket regardless.
     """
 
     dp: int
@@ -78,8 +94,10 @@ class Zero1Plans:
     padded: int
     wire_dtype: object
     compression: Optional[str]
-    rs: tuple    # bucket -> reduce_scatter Plan (wire context)
-    ag: tuple    # bucket -> allgather Plan (primary context)
+    rs: tuple          # bucket -> reduce_scatter Plan (wire context)
+    ag: tuple          # bucket -> allgather Plan (primary context)
+    rs_group: object   # PlanGroup fusing all rs buckets (one start/wait)
+    ag_group: object   # PlanGroup fusing all ag buckets
 
     def matches(self, n: int, dp: int, buckets: int, wire_dtype,
                 compression: Optional[str]) -> bool:
@@ -89,23 +107,31 @@ class Zero1Plans:
                 and jnp.dtype(self.wire_dtype) == jnp.dtype(wire_dtype))
 
     def free(self) -> None:
-        """Retire every plan's request slot (rebuild/teardown path)."""
-        for p in self.rs + self.ag:
+        """Retire the groups' and every distinct plan's request slot
+        (layout-change/teardown path; the plan cache is evicted too, so the
+        next build re-plans from scratch)."""
+        self.rs_group.free()
+        self.ag_group.free()
+        for p in {id(p): p for p in self.rs + self.ag}.values():
             p.free()
 
 
 def build_zero1_plans(dist: DistContext, padded: int, buckets: int = 1,
                       compression: Optional[str] = None) -> Zero1Plans:
-    """Build the per-bucket persistent plans for a (padded, buckets) layout.
+    """Build the per-bucket persistent plans + groups for a (padded,
+    buckets) layout.
 
     Payloads are bound abstractly (shape/dtype): each reduce-scatter bucket
     carries ``padded / buckets`` wire elements, each all-gather bucket this
-    rank's ``padded / (dp * buckets)`` updated shard slice.
+    rank's ``padded / (dp * buckets)`` updated shard slice.  The per-bucket
+    ``<name>_init`` calls hit the ABI's layout-keyed plan cache (buckets
+    share one layout), and the Startall groups bind one payload slot per
+    bucket on top.
     """
     dp = dist.dp_size
     b = max(buckets, 1)
     assert padded % (dp * b) == 0, (padded, dp, b)
-    wire_dtype = jnp.bfloat16 if compression == "bf16" else jnp.float32
+    wire_dtype = zero1_wire_dtype(compression)
     abi_w, comm = dp_comm_of(dist, compression == "int8")
     blen = padded // b
     ex_rs = jax.ShapeDtypeStruct((blen,), wire_dtype)
@@ -113,10 +139,28 @@ def build_zero1_plans(dist: DistContext, padded: int, buckets: int = 1,
     rs = tuple(abi_w.reduce_scatter_init(ex_rs, PAX_SUM, comm)
                for _ in range(b))
     ag = tuple(dist.abi.allgather_init(ex_ag, dist.dp_comm) for _ in range(b))
-    return Zero1Plans(dp, b, padded, wire_dtype, compression, rs, ag)
+    rs_group = abi_w.plan_group(rs, name="zero1-rs")
+    ag_group = dist.abi.plan_group(ag, name="zero1-ag")
+    return Zero1Plans(dp, b, padded, wire_dtype, compression, rs, ag,
+                      rs_group, ag_group)
 
 
-def reduce_scatter_grads(
+@dataclasses.dataclass
+class PendingShard:
+    """An in-flight reduce-scatter leg: issued by
+    :func:`reduce_scatter_grads_start`, completed by
+    :func:`reduce_scatter_grads_finish`.  Splitting issue from completion
+    lets the caller put independent work (param flatten / rank slice — or,
+    across jit steps, the next microbatch's backward) between the two, so
+    XLA's latency-hiding scheduler can overlap the collective with it."""
+
+    abi: object
+    mode: str       # "group" | "pooled" | "value"
+    pending: object  # group Request | list[Request] | the computed wire value
+    dp: int
+
+
+def reduce_scatter_grads_start(
     dist: DistContext,
     flat_g: jax.Array,
     *,
@@ -125,12 +169,14 @@ def reduce_scatter_grads(
     ef: Optional[jax.Array] = None,
     plans: Optional[Zero1Plans] = None,
 ):
-    """flat_g: (padded_n,) f32, padded_n % dp_size == 0.
-    Returns (g_shard (padded_n/dp,), new_ef).  Mean over dp ranks.
+    """Issue the reduce-scatter of ``flat_g`` ((padded_n,) f32, padded_n %
+    dp_size == 0); returns ``(PendingShard, new_ef)``.
 
-    With ``plans`` matching the layout, the bucketed round trip rides the
-    persistent reduce-scatter plans (start on restartable pooled requests)
-    instead of re-dispatching ``ireduce_scatter`` per bucket per step."""
+    With ``plans`` matching the layout, all buckets ride ONE
+    ``rs_group.start()`` — a single inactive-check and a single fused
+    (backend-stacked) collective on the restartable group slot — instead of
+    per-bucket dispatch; otherwise the pooled nonblocking ``i*`` path (or
+    the blocking single-bucket call) is used."""
     dp = dist.dp_size
     n = flat_g.shape[0]
     assert n % dp == 0
@@ -147,21 +193,54 @@ def reduce_scatter_grads(
 
     if plans is not None and plans.matches(n, dp, buckets, wire.dtype,
                                            compression):
-        # persistent path: one start per bucket plan on the restartable
-        # slots, waitall through the shared pool API
         parts = _transposed_bucket_parts(wire, dp, plans.buckets)
-        reqs = [plans.rs[b].start(p) for b, p in enumerate(parts)]
-        shard = jnp.concatenate(abi.waitall(reqs))
+        pending = PendingShard(abi, "group", plans.rs_group.start(parts), dp)
     elif buckets <= 1:
-        shard = abi.reduce_scatter(wire, PAX_SUM, comm)
+        pending = PendingShard(abi, "value",
+                               abi.reduce_scatter(wire, PAX_SUM, comm), dp)
     else:
         assert n % (dp * buckets) == 0, "bucket count must divide the shard"
         parts = _transposed_bucket_parts(wire, dp, buckets)
-        reqs = [abi.ireduce_scatter(p, PAX_SUM, comm) for p in parts]
-        shards = abi.waitall(reqs)
-        shard = jnp.concatenate(shards)
-    shard = shard.astype(jnp.float32) / dp
-    return shard, new_ef
+        pending = PendingShard(
+            abi, "pooled",
+            [abi.ireduce_scatter(p, PAX_SUM, comm) for p in parts], dp)
+    return pending, new_ef
+
+
+def reduce_scatter_grads_finish(pending: PendingShard) -> jax.Array:
+    """Complete an in-flight reduce-scatter leg: one group wait (one
+    completion scan for every bucket), or the pooled waitall fallback.
+    Returns the dp-mean (padded_n/dp,) f32 shard."""
+    if pending.mode == "group":
+        outs = pending.abi.wait(pending.pending)
+        shard = outs[0] if len(outs) == 1 else jnp.concatenate(outs)
+    elif pending.mode == "pooled":
+        shard = jnp.concatenate(pending.abi.waitall(pending.pending))
+    else:
+        shard = pending.pending
+    return shard.astype(jnp.float32) / pending.dp
+
+
+def reduce_scatter_grads(
+    dist: DistContext,
+    flat_g: jax.Array,
+    *,
+    compression: Optional[str] = None,
+    buckets: int = 1,
+    ef: Optional[jax.Array] = None,
+    plans: Optional[Zero1Plans] = None,
+):
+    """flat_g: (padded_n,) f32, padded_n % dp_size == 0.
+    Returns (g_shard (padded_n/dp,), new_ef).  Mean over dp ranks.
+
+    Convenience wrapper issuing and completing the leg back-to-back; the
+    train loop uses the start/finish split to overlap the in-flight group
+    with independent compute."""
+    pending, new_ef = reduce_scatter_grads_start(
+        dist, flat_g, compression=compression, buckets=buckets, ef=ef,
+        plans=plans,
+    )
+    return reduce_scatter_grads_finish(pending), new_ef
 
 
 def allgather_params(dist: DistContext, shard: jax.Array, *, buckets: int = 1,
@@ -172,7 +251,8 @@ def allgather_params(dist: DistContext, shard: jax.Array, *, buckets: int = 1,
     ``iallgather`` requests (the spec-generated path), so the scheduler can
     overlap the gather of early buckets with whatever consumes them; the
     bucket-major chunks are re-interleaved into rank-major order.  With
-    matching ``plans``, each bucket rides its persistent all-gather plan."""
+    matching ``plans``, every bucket rides ONE ``ag_group.start()``/
+    ``wait()`` pair on the persistent group slot."""
     abi = dist.abi
     use_plans = (plans is not None
                  and plans.dp == dist.dp_size
@@ -182,8 +262,8 @@ def allgather_params(dist: DistContext, shard: jax.Array, *, buckets: int = 1,
     if use_plans:
         parts = (jnp.split(shard, plans.buckets) if plans.buckets > 1
                  else [shard])
-        outs = abi.waitall([plans.ag[b].start(p.astype(jnp.float32))
-                            for b, p in enumerate(parts)])
+        outs = abi.wait(plans.ag_group.start(
+            [p.astype(jnp.float32) for p in parts]))
         if plans.buckets == 1:
             return outs[0].astype(jnp.float32)
         return _interleave_bucket_gathers(outs, dist.dp_size).astype(jnp.float32)
@@ -216,9 +296,9 @@ def zero1_step(
     so a steady-state training loop reuses one preallocated request batch
     per step instead of allocating per bucket (train_loop's ``body_zero1``
     drives this every step).  With ``plans`` (built once by
-    :func:`build_zero1_plans`), both legs ride persistent plans instead —
-    the requests are the plans' restartable slots and even the per-bucket
-    dispatch is plan-time work."""
+    :func:`build_zero1_plans`), each leg is ONE plan-group start/wait pair
+    over all buckets — per-bucket dispatch, the inactive-checks and the
+    completion scans are all group-build-time or once-per-step work."""
     g_shard, new_ef = reduce_scatter_grads(
         dist, flat_g, compression=compression, buckets=buckets, ef=ef,
         plans=plans,

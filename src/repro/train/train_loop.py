@@ -44,7 +44,8 @@ from ..optim import adamw
 from ..optim.adamw import AdamState, AdamWConfig, FlatAdamState
 from ..runtime.dist import DistContext, dp_comm_of
 from ..runtime.sharding import use_rules
-from .grad_sync import allgather_params, pad_to, reduce_scatter_grads
+from .grad_sync import (allgather_params, pad_to, reduce_scatter_grads_finish,
+                        reduce_scatter_grads_start)
 
 
 class TrainState(NamedTuple):
@@ -79,9 +80,15 @@ def init_state(api: ModelApi, key, dist: Optional[DistContext] = None) -> TrainS
     The zero1 layout also (a) allocates the error-feedback buffer when bf16
     wire compression is configured (per-rank residuals, see
     :func:`_flat_opt_specs`) and (b) builds the persistent collective plans
-    for the bucketed round trip (``dist.zero1_plans``) — argument binding,
-    handle conversion and recipe composition happen here, once, not per
-    step."""
+    and their Startall groups for the bucketed round trip
+    (``dist.zero1_plans``) — argument binding, handle conversion, recipe
+    composition and group fusion happen here, once, not per step.
+
+    Re-initialization is **layout-transparent** (the ABI's layout-keyed
+    plan cache): re-init with the same (padded, dp, buckets, wire) layout
+    keeps the live plans/groups untouched — zero new request slots — while
+    a genuine layout change (re-sharding, elastic dp, bucket retune)
+    retires the old slots and re-plans."""
     params = api.init(key)
     par = api.cfg.parallelism
     if dist is not None and par.grad_sync == "abi" and par.zero1:
@@ -89,13 +96,16 @@ def init_state(api: ModelApi, key, dist: Optional[DistContext] = None) -> TrainS
         with_ef = par.grad_compression == "bf16"
         opt = adamw.init_flat_global(
             params, dist.dp_size, buckets=buckets, with_ef=with_ef)
-        from .grad_sync import build_zero1_plans
-        if dist.zero1_plans is not None:
-            # re-init on the same dist: retire the old plans' request slots
-            # before rebuilding, or every re-init leaks 2*buckets slots
-            dist.zero1_plans.free()
-        dist.zero1_plans = build_zero1_plans(
-            dist, opt.m.shape[0], buckets, par.grad_compression)
+        from .grad_sync import build_zero1_plans, zero1_wire_dtype
+        old = dist.zero1_plans
+        if old is None or not old.matches(
+                opt.m.shape[0], dist.dp_size, buckets,
+                zero1_wire_dtype(par.grad_compression), par.grad_compression):
+            # genuine layout change: retire the old plans' request slots
+            # before rebuilding, or every re-init leaks slots
+            dist.drop_zero1_plans()
+            dist.zero1_plans = build_zero1_plans(
+                dist, opt.m.shape[0], buckets, par.grad_compression)
     else:
         opt = adamw.init_tree(params)
     return TrainState(params, opt, jnp.zeros((), jnp.int32))
@@ -193,13 +203,18 @@ def make_train_step_abi(
         return new_params, new_opt, loss, gnorm
 
     def body_zero1(params, opt: FlatAdamState, step, batch):
-        """Explicit ZeRO-1 round trip (the ROADMAP wiring): bucketed
-        reduce-scatter -> shard-local AdamW -> bucketed all-gather, riding
-        the persistent plans built at ``init_state`` (``dist.zero1_plans``;
-        pooled nonblocking ``i*`` requests as the fallback).  With bf16 wire
-        compression the per-rank error-feedback residual (``opt.ef``) is
-        folded into the next step's gradient and refreshed from this step's
-        quantization error."""
+        """Explicit ZeRO-1 round trip (the ROADMAP wiring): one
+        reduce-scatter *group* start -> shard-local AdamW -> one all-gather
+        group start/wait, riding the Startall plan groups built at
+        ``init_state`` (``dist.zero1_plans``; pooled nonblocking ``i*``
+        requests as the fallback).  The reduce-scatter group is issued
+        BEFORE the param flatten/rank-slice compute and waited after, so
+        the in-flight fused collective overlaps the independent work (and,
+        across jitted steps, the next microbatch's backward — XLA's
+        latency-hiding scheduler sees the start/wait dataflow gap).  With
+        bf16 wire compression the per-rank error-feedback residual
+        (``opt.ef``) is folded into the next step's gradient and refreshed
+        from this step's quantization error."""
         dp = dist.dp_size
         plans = dist.zero1_plans
         with use_rules(dist.rules):
@@ -210,18 +225,20 @@ def make_train_step_abi(
             # error feedback: opt.ef is this rank's full-length residual
             # exactly when compression is on (a (1,)-dummy otherwise)
             ef = opt.ef if opt.ef.shape[0] == flat_g.shape[0] else None
-            g_shard, new_ef = reduce_scatter_grads(
+            pending, new_ef = reduce_scatter_grads_start(
                 dist, flat_g, compression=compression, buckets=buckets,
                 ef=ef, plans=plans)
-            # ||mean grad||²: each element lives on exactly one rank's shard
-            gnorm = jnp.sqrt(dist.abi.allreduce(
-                jnp.sum(jnp.square(g_shard)), PAX_SUM, dist.dp_comm))
-            # this rank's contiguous param slice (same layout as g_shard and
-            # as the P(dp_axes)-sharded moment vectors)
+            # overlapped with the in-flight reduce-scatter group: this
+            # rank's contiguous param slice (same layout as g_shard and as
+            # the P(dp_axes)-sharded moment vectors) depends only on params
             flat_p = pad_to(adamw.flatten(params), dp * buckets)
             shard_len = flat_p.shape[0] // dp
             r = comm_rank_traced(dist.abi.comms.info(dist.dp_comm))
             p_shard = jax.lax.dynamic_slice_in_dim(flat_p, r * shard_len, shard_len)
+            g_shard = reduce_scatter_grads_finish(pending)
+            # ||mean grad||²: each element lives on exactly one rank's shard
+            gnorm = jnp.sqrt(dist.abi.allreduce(
+                jnp.sum(jnp.square(g_shard)), PAX_SUM, dist.dp_comm))
             lr_scale = schedule(step) if schedule is not None else jnp.float32(1.0)
             new_p_shard, new_opt = adamw.update_flat_shard(
                 opt_cfg, g_shard, opt, p_shard, gnorm, lr_scale)

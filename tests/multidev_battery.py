@@ -451,4 +451,88 @@ np.testing.assert_allclose(g1, w1, rtol=0, atol=1e-7)  # dp-mean of wires
 np.testing.assert_allclose(g1 + g2, 2 * v_np - ef2[:NV], rtol=0, atol=1e-6)
 print(f"  zero1 bf16 error feedback dp=2 OK (residual max {np.abs(e1).max():.2e})")
 
+# ---------------------------------------------------------------------------
+section("10. plan groups (Startall): group == per-plan zero1, dp=2 and dp=8")
+# The whole-group start/wait pair must deliver byte-identical math to the
+# pooled per-bucket path, across a native backend (paxi: stacked-collective
+# group hooks), the emulated-minimal backend (recipe stage fusion: all rs
+# legs before any ag leg) and a Mukautuva-wrapped backend (generated group
+# wrappers, conversion cached at group-build time) — at dp=2 (2x4 mesh) and
+# dp=8 (8x1 mesh).
+mesh8 = make_mesh((8, 1), ("data", "model"))
+for impl10 in ("paxi", "minimal", "ompix"):
+    for m10, dp10 in ((mesh, 2), (mesh8, 8)):
+        d10 = make_dist(m10, impl=impl10)
+        assert d10.dp_size == dp10
+        plans10 = build_zero1_plans(d10, NV, 2)
+        caps10 = d10.abi.capabilities()
+        if impl10 == "minimal":
+            assert caps10["allreduce"]["plan_group"] == "recipe-stage"
+        else:
+            assert caps10["allreduce"]["plan_group"] == "backend-hook"
+        vin10 = np.arange(dp10 * NV, dtype=np.float32)
+        exp10 = vin10.reshape(dp10, NV).mean(0) * 2.0
+
+        def body10(v, _d=d10, _p=plans10):
+            grouped = zero1_step(_d, v, lambda s: s * 2.0, buckets=2,
+                                 plans=_p)[0]
+            pooled = zero1_step(_d, v, lambda s: s * 2.0, buckets=2)[0]
+            return grouped, pooled
+
+        f10 = d10.abi.shard_region(body10, in_specs=P("data"),
+                                   out_specs=(P(), P()))
+        grouped, pooled = jax.jit(f10)(jnp.asarray(vin10))
+        np.testing.assert_allclose(np.asarray(grouped[:NV]), exp10, rtol=1e-6,
+                                   err_msg=f"{impl10} dp={dp10}")
+        np.testing.assert_allclose(np.asarray(grouped), np.asarray(pooled),
+                                   rtol=0, atol=0,
+                                   err_msg=f"{impl10} dp={dp10}")
+        assert d10.abi.outstanding_requests == 0
+        print(f"  {impl10} dp={dp10}: group == per-plan (bitwise) OK")
+
+# the ring backend's fused compressed wire: the grouped rs/ag ride ONE ring
+# schedule whose per-hop quantization covers all buckets; error stays within
+# the section-6 budget and the uncompressed group is exact vs the oracle
+for impl10, bound10 in (("ring", 0.0), ("ring-bf16", 0.01)):
+    d10 = make_dist(mesh, impl=impl10)
+    plans10 = build_zero1_plans(d10, NV, 2)
+    vin10 = np.arange(2 * NV, dtype=np.float32) + 1.0
+    exp10 = vin10.reshape(2, NV).mean(0) * 2.0
+    f10 = d10.abi.shard_region(
+        lambda v, _d=d10, _p=plans10: zero1_step(
+            _d, v, lambda s: s * 2.0, buckets=2, plans=_p)[0],
+        in_specs=P("data"), out_specs=P())
+    out10 = np.asarray(jax.jit(f10)(jnp.asarray(vin10))[:NV])
+    if bound10 == 0.0:
+        np.testing.assert_allclose(out10, exp10, rtol=1e-6, err_msg=impl10)
+    else:
+        rel10 = np.abs(out10 - exp10) / np.maximum(np.abs(exp10), 1e-6)
+        assert rel10.max() < bound10, (impl10, rel10.max())
+    assert d10.abi.outstanding_requests == 0
+    print(f"  {impl10}: fused-wire grouped zero1 OK")
+
+# ---------------------------------------------------------------------------
+section("11. hierarchical multi-axis alltoallv (world comm, 2x4 mesh)")
+# alltoallv over the 8-rank world communicator decomposes axis by axis (the
+# ring_scan_sum_multi pattern): with c=1 and rank r holding XG[r], peer j
+# receives element r — the result is the global transpose.  c=2 checks the
+# block layout too.  Oracles are pure numpy; every backend must agree
+# (paxi/ring lower natively, minimal emulates over allgather, ompix crosses
+# Mukautuva).
+for impl11 in ("paxi", "ring", "minimal", "ompix"):
+    abi11 = C.pax_init(mesh, impl=impl11)
+    f11 = abi11.shard_region(
+        lambda x: abi11.alltoallv(x, (1,) * 8, (1,) * 8, world),
+        in_specs=P(("data", "model")), out_specs=P(("data", "model")))
+    out11 = np.asarray(jax.jit(f11)(jnp.asarray(XG.reshape(-1)))).reshape(8, 8)
+    np.testing.assert_allclose(out11, XG.T, err_msg=impl11)
+    X2 = np.arange(128.0).reshape(8, 16)
+    f11b = abi11.shard_region(
+        lambda x: abi11.alltoallv(x, (2,) * 8, (2,) * 8, world),
+        in_specs=P(("data", "model")), out_specs=P(("data", "model")))
+    out11b = np.asarray(jax.jit(f11b)(jnp.asarray(X2.reshape(-1)))).reshape(8, 16)
+    exp11b = np.stack([X2[:, 2 * r:2 * r + 2].reshape(-1) for r in range(8)])
+    np.testing.assert_allclose(out11b, exp11b, err_msg=impl11)
+    print(f"  {impl11}: multi-axis alltoallv == transpose oracle OK")
+
 print("BATTERY PASSED")

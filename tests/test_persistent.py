@@ -314,6 +314,269 @@ def test_generic_plan_freezes_emulated_entry(mesh1):
 
 
 # ---------------------------------------------------------------------------
+# layout-keyed plan cache: <name>_init is idempotent per layout
+# ---------------------------------------------------------------------------
+def test_plan_cache_hit_is_identity(abi):
+    p1 = abi.allreduce_init(X, C.PAX_SUM, C.PAX_COMM_SELF)
+    pool = len(abi._req_pool)
+    issued = abi.requests_issued
+    p2 = abi.allreduce_init(X, C.PAX_SUM, C.PAX_COMM_SELF)
+    assert p2 is p1                        # same live plan, not a twin
+    assert len(abi._req_pool) == pool      # zero new slots
+    assert abi.requests_issued == issued   # zero allocations
+    # an abstract example with the same signature hits the same entry
+    p3 = abi.allreduce_init(jax.ShapeDtypeStruct(X.shape, X.dtype),
+                            C.PAX_SUM, C.PAX_COMM_SELF)
+    assert p3 is p1
+    # a different layout is a different plan
+    p4 = abi.allreduce_init(X[:3], C.PAX_SUM, C.PAX_COMM_SELF)
+    assert p4 is not p1
+    p1.free()
+    p4.free()
+
+
+def test_plan_cache_skips_active_plans(abi):
+    """The MPI _init contract: every init yields an independently startable
+    request.  A cache hit on an IN-FLIGHT plan would break double-buffered
+    overlap, so it hands out a fresh twin instead (which takes over the
+    cache slot)."""
+    p1 = abi.allreduce_init(X, C.PAX_SUM, C.PAX_COMM_SELF)
+    p1.start(X)
+    p2 = abi.allreduce_init(X, C.PAX_SUM, C.PAX_COMM_SELF)
+    assert p2 is not p1            # active plans are never handed out twice
+    p2.start(X * 2)                # both in flight at once
+    np.testing.assert_allclose(np.asarray(p1.wait()), np.asarray(X))
+    np.testing.assert_allclose(np.asarray(p2.wait()), np.asarray(X) * 2)
+    # both inactive now: the newest owns the cache slot
+    assert abi.allreduce_init(X, C.PAX_SUM, C.PAX_COMM_SELF) is p2
+    p1.free()
+    p2.free()
+
+
+def test_plan_group_start_checks_payload_count(abi):
+    plan = abi.allreduce_init(X, C.PAX_SUM, C.PAX_COMM_SELF)
+    group = abi.plan_group([plan] * 3, name="counted")
+    with pytest.raises(PaxError) as e:
+        group.start([X, X])        # short list must not truncate silently
+    assert e.value.code == PAX_ERR_REQUEST and "counted" in str(e.value)
+    with pytest.raises(PaxError):
+        group.start([X] * 4)
+    abi.wait(group.start([X, X, X]))
+    group.free()
+    plan.free()
+
+
+def test_entry_envs_bounded_across_respecialization(abi1):
+    """attach/detach cycles must not grow the compiled-globals ledger (one
+    env per entry, replaced on respecialization — no leak)."""
+    count0 = len(abi1._entry_envs)
+    cc = C.CallCounter()
+    for _ in range(5):
+        abi1.attach_tool(cc)
+        abi1.detach_tool(cc)
+    assert len(abi1._entry_envs) == count0
+    assert all(not isinstance(v, list) for v in abi1._entry_envs.values())
+
+
+def test_plan_cache_evicts_on_free(abi):
+    p1 = abi.reduce_scatter_init(X, C.PAX_SUM, C.PAX_COMM_SELF)
+    p1.free()
+    p2 = abi.reduce_scatter_init(X, C.PAX_SUM, C.PAX_COMM_SELF)
+    assert p2 is not p1                    # freed plans never resurrect
+    abi.wait(p2.start(X))
+    p2.free()
+
+
+def test_plan_cache_keys_every_non_payload_arg(abi):
+    a = abi.reduce_scatter_init(X, C.PAX_SUM, C.PAX_COMM_SELF)
+    b = abi.reduce_scatter_init(X, C.PAX_MAX, C.PAX_COMM_SELF)
+    c = abi.reduce_scatter_init(X, C.PAX_SUM, C.PAX_COMM_WORLD)
+    assert len({id(a), id(b), id(c)}) == 3
+    for p in (a, b, c):
+        p.free()
+
+
+# ---------------------------------------------------------------------------
+# plan groups (MPI Startall)
+# ---------------------------------------------------------------------------
+def test_plan_group_matches_per_plan_semantics(mesh1):
+    for impl in ("paxi", "ring", "minimal", "ompix", "muk:paxi"):
+        abi = C.pax_init(mesh1, impl=impl)
+        plan = abi.allreduce_init(X, C.PAX_SUM, C.PAX_COMM_SELF)
+        group = abi.plan_group([plan, plan, plan], name="g3")
+        req = group.start([X, X * 2, X * 3])
+        outs = abi.wait(req)
+        assert len(outs) == 3
+        for k, o in enumerate(outs):
+            np.testing.assert_allclose(
+                np.asarray(o), np.asarray(X) * (k + 1), err_msg=impl)
+        # restart: same group slot, new payloads
+        group.start([X * 4, X * 5, X * 6])
+        outs2 = group.wait()
+        np.testing.assert_allclose(np.asarray(outs2[0]), np.asarray(X) * 4)
+        group.free()
+        plan.free()
+        assert abi.outstanding_requests == 0
+
+
+def test_plan_group_mixed_entries_and_payloadless_members(abi):
+    par = abi.allreduce_init(X, C.PAX_SUM, C.PAX_COMM_SELF)
+    pbar = abi.barrier_init(C.PAX_COMM_SELF)
+    pag = abi.allgather_init(X, C.PAX_COMM_SELF)
+    group = abi.plan_group([par, pbar, pag], name="mixed")
+    outs = abi.wait(group.start([X, None, X * 2]))
+    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(X))
+    assert outs[1] is None
+    np.testing.assert_allclose(np.asarray(outs[2]), np.asarray(X) * 2)
+    group.free()
+
+
+def test_plan_group_misuse_names_the_group(abi):
+    """Satellite: an aborted trace leaves the group active; the double
+    start surfaces PAX_ERR_REQUEST *with the group name*, and reset()
+    recovers exactly like Plan.reset."""
+    plan = abi.allreduce_init(X, C.PAX_SUM, C.PAX_COMM_SELF)
+    group = abi.plan_group([plan, plan], name="zero1-rs-test")
+    group.start([X, X])
+    with pytest.raises(PaxError) as e:
+        group.start([X, X])
+    assert e.value.code == PAX_ERR_REQUEST
+    assert "zero1-rs-test" in str(e.value)
+    group.reset()  # the escape hatch, e.g. a trace aborted mid-flight
+    group.start([X, X])
+    group.wait()
+    # the member plan is independent: its own misuse error names the entry
+    plan.start(X)
+    with pytest.raises(PaxError) as e2:
+        plan.start(X)
+    assert e2.value.code == PAX_ERR_REQUEST and "allreduce" in str(e2.value)
+    plan.reset()
+    plan.start(X)
+    plan.wait()
+    group.free()
+
+
+def test_plan_group_free_contract(abi):
+    plan = abi.allreduce_init(X, C.PAX_SUM, C.PAX_COMM_SELF)
+    group = abi.plan_group([plan], name="solo")
+    group.start([X])
+    with pytest.raises(PaxError):
+        group.free()  # active groups refuse to free
+    group.wait()
+    handle = group.request.handle
+    group.free()
+    with pytest.raises(PaxError):
+        group.start([X])
+    with pytest.raises(PaxError):
+        abi.wait(Request(handle, persistent=True))  # handles dead forever
+    group.free()  # idempotent
+    abi.wait(plan.start(X))  # members untouched by group free
+    plan.free()
+
+
+def test_plan_group_active_blocks_finalize(mesh1):
+    abi = C.pax_init(mesh1, impl="paxi")
+    plan = abi.allreduce_init(X, C.PAX_SUM, C.PAX_COMM_SELF)
+    group = abi.plan_group([plan])
+    group.start([X])
+    assert abi.outstanding_requests == 1
+    with pytest.raises(PaxError):
+        abi.finalize()
+    group.wait()
+    abi.finalize()
+
+
+def test_plan_group_churn_allocates_nothing(abi):
+    plan = abi.allreduce_init(X, C.PAX_SUM, C.PAX_COMM_SELF)
+    group = abi.plan_group([plan] * 4, name="churn")
+    payloads = [X, X, X, X]
+    req0 = group.start(payloads)
+    group.wait()
+    pool_len = len(abi._req_pool)
+    issued = abi.requests_issued
+    gens = list(abi._req_gen)
+    for _ in range(500):
+        assert group.start(payloads) is req0
+        group.wait()
+    assert len(abi._req_pool) == pool_len
+    assert abi.requests_issued == issued
+    assert abi._req_gen == gens
+    group.free()
+    plan.free()
+
+
+def test_tools_respecialize_live_groups(abi):
+    """attach_tool/detach_tool recompile live groups: one interposition per
+    group start, bytes summed over every member's bound shape."""
+    plan = abi.allreduce_init(X, C.PAX_SUM, C.PAX_COMM_SELF)
+    group = abi.plan_group([plan, plan], name="tooled-group")
+    abi.wait(group.start([X, X]))
+    cc = C.CallCounter()
+    bc = C.ByteCounter()
+    abi.attach_tool(cc)
+    abi.attach_tool(bc)
+    abi.wait(group.start([X, X]))
+    assert cc.counts["tooled-group"] == 1          # ONE interposition
+    assert bc.bytes["tooled-group"] == 2 * X.size * 4  # group-summed bytes
+    abi.detach_tool(cc)
+    abi.detach_tool(bc)
+    abi.wait(group.start([X, X]))
+    assert cc.counts["tooled-group"] == 1
+    group.free()
+    plan.free()
+
+
+def test_plan_group_rejects_foreign_and_freed_members(mesh1, abi):
+    other = C.pax_init(mesh1, impl="paxi")
+    p_other = other.allreduce_init(X, C.PAX_SUM, C.PAX_COMM_SELF)
+    with pytest.raises(PaxError):
+        abi.plan_group([p_other], name="alien")
+    p = abi.allreduce_init(X * 7, C.PAX_SUM, C.PAX_COMM_SELF)
+    p.free()
+    with pytest.raises(PaxError):
+        abi.plan_group([p], name="dead")
+
+
+def test_capabilities_report_group_sources(mesh1):
+    caps = C.pax_init(mesh1, impl="paxi").capabilities()
+    assert caps["allreduce"]["plan_group"] == "backend-hook"
+    assert caps["allreduce"]["group_hook"] is True
+    assert caps["alltoall"]["plan_group"] == "generic"
+    assert "plan_group" not in caps["comm_size"]
+    caps_min = C.pax_init(mesh1, impl="minimal").capabilities()
+    assert caps_min["allreduce"]["plan_group"] == "recipe-stage"
+    assert caps_min["reduce_scatter"]["plan_group"] == "backend-hook"
+    caps_muk = C.pax_init(mesh1, impl="ompix").capabilities()
+    assert caps_muk["allreduce"]["plan_group"] == "backend-hook"
+    assert caps_muk["allreduce"]["group_hook"] is True
+
+
+# ---------------------------------------------------------------------------
+# lazy-shim self-patch (the PR-4 footgun, fixed)
+# ---------------------------------------------------------------------------
+def test_lazy_shim_self_patches_hoisted_callables(mesh1):
+    """A callable hoisted BEFORE the first call must run the built closure
+    afterwards — the shim's cell and the compiled entry's globals are both
+    patched in place, so no warmup re-fetch is ever needed."""
+    abi = C.pax_init(mesh1, impl="minimal")
+    shim = abi._table["allreduce"]
+    hoisted = abi.allreduce                  # specialized entry, pre-build
+    assert shim.__lazy_recipe__["impl"] is None
+    assert hoisted.__globals__["_impl"] is shim
+    out = hoisted(X, C.PAX_SUM, C.PAX_COMM_SELF)  # first call builds
+    np.testing.assert_allclose(np.asarray(out), np.asarray(X))
+    built = abi._table["allreduce"]
+    assert getattr(built, "__emulated__", False)
+    # the shim now dispatches through one cell index, not a dict+branch...
+    assert shim.__lazy_cell__[0] is built
+    # ...and the hoisted specialized entry was respecialized in place
+    assert hoisted.__globals__["_impl"] is built
+    np.testing.assert_allclose(
+        np.asarray(hoisted(X * 2, C.PAX_SUM, C.PAX_COMM_SELF)),
+        np.asarray(X) * 2)
+
+
+# ---------------------------------------------------------------------------
 # zero1 wiring: plans built at init_state + bf16 error feedback threaded
 # ---------------------------------------------------------------------------
 def _zero1_setup(mesh1, compression):
@@ -346,9 +609,13 @@ def test_init_state_builds_zero1_plans(mesh1):
     assert state.opt.ef.shape[0] == dist.dp_size
 
 
-def test_reinit_frees_old_zero1_plans(mesh1):
-    """Rebuilding state on the same dist retires the old plans' slots —
-    repeated init_state must not leak request-pool slots."""
+def test_reinit_same_layout_keeps_zero1_plans(mesh1):
+    """Re-init with an unchanged layout is identity (the layout-keyed plan
+    cache): the live plans/groups are kept, zero new request slots.  A
+    genuine layout change retires the old slots and re-plans — repeated
+    re-init must never leak pool slots either way."""
+    import dataclasses as _dc
+
     from repro.train import train_loop
 
     api, dist = _zero1_setup(mesh1, None)
@@ -358,10 +625,18 @@ def test_reinit_frees_old_zero1_plans(mesh1):
     old = dist.zero1_plans
     for i in range(3):
         train_loop.init_state(api, jax.random.PRNGKey(i), dist=dist)
-    assert len(dist.abi._req_pool) == pool      # slots recycled, not grown
+    assert dist.zero1_plans is old              # layout unchanged: identity
+    assert len(dist.abi._req_pool) == pool      # zero new slots
     assert len(dist.abi._req_free) == free0
-    with pytest.raises(PaxError):               # the old plans are dead
-        old.rs[0].start(jnp.zeros(old.padded // old.buckets))
+    # a genuine layout change (bucket retune) retires the old plans/groups
+    api.cfg = _dc.replace(api.cfg, parallelism=_dc.replace(
+        api.cfg.parallelism, zero1_buckets=4))
+    train_loop.init_state(api, jax.random.PRNGKey(7), dist=dist)
+    assert dist.zero1_plans is not old
+    assert dist.zero1_plans.buckets == 4
+    with pytest.raises(PaxError):               # the old group is dead
+        old.rs_group.start([jnp.zeros(old.padded // old.buckets)] * old.buckets)
+    assert len(dist.abi._req_pool) == pool      # slots recycled, not grown
 
 
 def test_plans_mismatched_compression_fall_back(mesh1):
