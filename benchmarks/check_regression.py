@@ -42,6 +42,19 @@ baseline box and the CI runner:
 * **request-scan flatness**: per-request ``testall`` scan cost at 1000
   outstanding requests must stay within ±20% of the 10-request cost (the
   pool's O(1) contract), as recorded by the run itself.
+* **fused wire-kernel gates** (PR 6): ``wire_hbm_bytes_ratio`` (jaxpr
+  materialized-intermediate bytes of the fused int8 hop over the lax
+  composition, current run alone) must stay ≤ 0.5 — the fused kernel's
+  one-read/one-write contract; ``wire_quantize_bytes_fused`` must be
+  exactly 0 — the fused hop may not materialize a separate quantize or
+  dequantize intermediate (the acceptance claim of the PR); and
+  ``fused_hop_speedup_vs_lax`` must stay above
+  ``max(baseline·(1-tolerance), 0.5)`` — a *sanity* floor, not a perf
+  claim: on CPU the kernel runs in interpret mode, whose masked
+  load/store lowering costs a bounded constant factor vs the bare lax
+  composition of the same math (~0.7× measured); the floor catches the
+  interpret path degenerating to per-op dispatch, not absolute speed.
+  The real perf win is the bytes ratio, realized on TPU/GPU.
 * **plan-group gates** (PR 5, from the current run alone):
   ``startall_marginal_ns_per_plan`` (group-of-16 start+wait divided by 16)
   must be ≤ 0.5× the same run's single-plan
@@ -195,6 +208,44 @@ def main(argv=None) -> int:
             failures.append("REGRESSION " + line)
         else:
             print("OK " + line)
+
+    # -- fused wire-kernel gates (PR 6) -------------------------------------
+    if "wire_hbm_bytes_ratio" not in cur:
+        failures.append("missing record: wire_hbm_bytes_ratio")
+    else:
+        ratio = cur["wire_hbm_bytes_ratio"]
+        line = (f"wire_hbm_bytes_ratio={ratio:.3f} "
+                "(ceiling 0.50: fused hop must halve materialized bytes)")
+        if ratio > 0.5:
+            failures.append("REGRESSION " + line)
+        else:
+            print("OK " + line)
+
+    if "wire_quantize_bytes_fused" not in cur:
+        failures.append("missing record: wire_quantize_bytes_fused")
+    else:
+        qb = cur["wire_quantize_bytes_fused"]
+        line = (f"wire_quantize_bytes_fused={qb:.0f}B "
+                "(required: 0 — no separate quantize/dequantize "
+                "intermediates on the fused hop)")
+        if qb != 0.0:
+            failures.append("REGRESSION " + line)
+        else:
+            print("OK " + line)
+
+    try:
+        cur_w = cur["fused_hop_speedup_vs_lax"]
+        base_w = base["fused_hop_speedup_vs_lax"]
+        floor = max(base_w * (1.0 - args.tolerance), 0.5)
+        line = (f"fused/lax hop speedup (CPU-interpret sanity): "
+                f"current={cur_w:.3f} baseline={base_w:.3f} "
+                f"floor={floor:.3f}")
+        if cur_w < floor:
+            failures.append("REGRESSION " + line)
+        else:
+            print("OK " + line)
+    except KeyError as e:
+        failures.append(f"missing wire-kernel record: {e}")
 
     # -- request-scan flatness (from the current run alone) ----------------
     for impl in ("paxi", "ompix"):

@@ -22,6 +22,13 @@ from jax import lax
 from .. import compat
 from ..emulation import prefix_fold
 
+#: jaxpr primitives that put payload on the inter-chip wire — the canonical
+#: list for traffic classification (launch/hlo_analysis.wire_breakdown
+#: separates these from the HBM-side intermediates a fused kernel removes)
+WIRE_PRIMITIVES = frozenset({
+    "ppermute", "psum", "all_gather", "psum_scatter", "all_to_all",
+})
+
 
 def rank(axes: Sequence[str]):
     if not axes:

@@ -107,6 +107,14 @@ class Backend(abc.ABC):
             info["group_hook"] = self.supports_persistent_group(entry)
         return info
 
+    def wire_pad_multiple(self) -> int:
+        """Element-count multiple that keeps this backend's wire on its
+        fastest path for padded payloads.  Emulation recipes that invent
+        padding (the composed all-reduce) round up to this multiple so the
+        padded reduce-scatter leg stays eligible for the backend's wire
+        kernels; 1 means no preference (padding stays minimal)."""
+        return 1
+
     # -- persistent plans (MPI-4 <name>_init) ------------------------------
     # A backend declares *native persistent support* for an entry by
     # defining ``plan_<backend_method>(self, <entry args>)`` returning a run

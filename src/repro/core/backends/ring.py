@@ -85,6 +85,51 @@ def ring_reduce_scatter(x, axis_name: str, compress: Optional[str] = None):
     return travel  # chunk index == own rank
 
 
+def ring_reduce_scatter_fused(x, axis_name: str, compress: str,
+                              interpret: bool):
+    """:func:`ring_reduce_scatter` on the fused Pallas wire
+    (:mod:`repro.kernels.ring_wire`): the traveling block stays *quantized*
+    between hops and each hop's dequantize + accumulate + re-quantize is one
+    kernel pass — one read of the traveling block, one write of the outgoing
+    block, instead of three materialized lax intermediates.  Same
+    quantization-point sequence as the lax schedule (quantize at every send,
+    plain dequant-accumulate after the last hop), so the bf16 wire is
+    bitwise-identical; int8 upgrades the global absmax scale to per-block
+    scales (strictly finer — bounded in the battery, section 12).
+
+    Only called from plan closures: eligibility (compressed wire, f32,
+    WIRE_BLOCK-divisible chunk, platform) is decided at plan time by
+    ``RingBackend._wire_kernel_axes``.
+    """
+    from ...kernels.ring_wire import ops as wire_ops
+
+    S = compat.axis_size(axis_name)
+    if S == 1:
+        return x
+    i = lax.axis_index(axis_name)
+    n = x.shape[0]
+    assert n % S == 0, f"ring reduce_scatter needs {S} | {n}"
+    c = n // S
+    perm = [(s, (s + 1) % S) for s in range(S)]
+
+    def chunk_at(idx):
+        return lax.dynamic_slice_in_dim(x, idx * c, c, axis=0)
+
+    q, scales = wire_ops.quant(chunk_at((i - 1) % S), compress,
+                               interpret=interpret)
+    for t in range(S - 1):
+        q = lax.ppermute(q, axis_name, perm)
+        if scales is not None:
+            scales = lax.ppermute(scales, axis_name, perm)
+        local = chunk_at((i - 2 - t) % S)
+        if t < S - 2:
+            q, scales = wire_ops.hop_add_quant(q, scales, local, compress,
+                                               interpret=interpret)
+        else:
+            return wire_ops.hop_accum(q, scales, local, compress,
+                                      interpret=interpret)
+
+
 def ring_allgather(x, axis_name: str):
     """Inverse of ring_reduce_scatter: collect every rank's chunk. S-1 hops."""
     S = compat.axis_size(axis_name)
@@ -211,6 +256,59 @@ class RingBackend(PaxiBackend):
         mesh = self.comms.mesh
         return [mesh.shape[a] if mesh else 1 for a in axes]
 
+    # -- fused-wire kernel selection (plan time only) -----------------------
+    def _wire_kernel_mode(self) -> str:
+        """``"pallas"`` iff the fused ring-wire kernels can carry this
+        backend's compressed wire on the current platform (kernel registry
+        answer); plain-ring and unknown platforms stay ``"lax"``."""
+        if self.compress is None:
+            return "lax"
+        from ...kernels import kernel_mode
+        return kernel_mode("ring_wire")
+
+    def _wire_kernel_axes(self, shape, dtype, axes) -> list[bool]:
+        """Per-axis fused-kernel eligibility for a reduce-scatter plan bound
+        to ``shape``/``dtype``: the hop chunk along each axis (after the
+        preceding axes' reductions shrank the leading dim) must satisfy
+        :func:`repro.kernels.ring_wire.wire_eligible`.  Ineligible axes run
+        the lax schedule — selection is per hop-loop, not all-or-nothing."""
+        if self._wire_kernel_mode() != "pallas":
+            return [False] * len(axes)
+        from ...kernels.ring_wire import ops as wire_ops
+        trailing = math.prod(shape[1:]) if len(shape) > 1 else 1
+        rows = shape[0]
+        flags = []
+        for S in self._axis_sizes(axes):
+            if S <= 1:
+                flags.append(False)
+            else:
+                flags.append(wire_ops.wire_eligible(
+                    ((rows // S) * trailing,), dtype, self.compress))
+            rows //= max(S, 1)
+        return flags
+
+    def capability(self, entry):
+        """Extend the per-entry report with the wire-kernel source: which
+        implementation a plan bound to an eligible payload would run.  The
+        fused kernels exist only for the reduce-scatter hop loop; every
+        other wire-bearing entry (and plain ring) reports ``"lax"`` — the
+        fallback the battery keeps exercised."""
+        info = super().capability(entry)
+        if entry.name in ("reduce_scatter", "allgather", "scan", "exscan"):
+            info["wire_kernel"] = (self._wire_kernel_mode()
+                                   if entry.name == "reduce_scatter"
+                                   else "lax")
+        return info
+
+    def wire_pad_multiple(self) -> int:
+        """Padding granule for emulation recipes: with the fused wire
+        active, rounding invented padding up to WIRE_BLOCK keeps the
+        composed all-reduce's reduce-scatter leg kernel-eligible."""
+        if self._wire_kernel_mode() != "pallas":
+            return 1
+        from ...kernels.ring_wire import ops as wire_ops
+        return wire_ops.WIRE_BLOCK
+
     def reduce_scatter(self, x, op: int, comm: int, axis: int = 0):
         axes = self.comm_axes(comm)
         if op != H.PAX_SUM or not axes or axis != 0:
@@ -250,10 +348,18 @@ class RingBackend(PaxiBackend):
                 or tuple(x.shape)[0] % math.prod(self._axis_sizes(axes))):
             return super().plan_reduce_scatter(x, op, comm, axis)
         compress = self.compress
+        # kernel-vs-lax decided HERE, from the bound shape/dtype/platform —
+        # the run closure carries a fixed per-axis schedule, callers never
+        # see the choice (capabilities() reports it as `wire_kernel`)
+        fused = self._wire_kernel_axes(tuple(x.shape), x.dtype, axes)
+        if any(fused):
+            from ...kernels.ring_wire import ops as wire_ops
+            interp = wire_ops.interpret_on()
 
         def run(x):
-            for a in axes:  # forward axis order: chunk == linearized rank
-                x = ring_reduce_scatter(x, a, compress)
+            for a, k in zip(axes, fused):  # forward order: chunk == rank
+                x = (ring_reduce_scatter_fused(x, a, compress, interp)
+                     if k else ring_reduce_scatter(x, a, compress))
             return x
 
         return run
@@ -285,11 +391,19 @@ class RingBackend(PaxiBackend):
             return super().plan_group_reduce_scatter(bounds)
         compress = self.compress
         n = len(bounds)
+        # same plan-time selection as the single plan, against the *stacked*
+        # payload the group wire actually carries
+        stacked = (u[0][0], n) + tuple(u[0][1:])
+        fused = self._wire_kernel_axes(stacked, u[1], axes)
+        if any(fused):
+            from ...kernels.ring_wire import ops as wire_ops
+            interp = wire_ops.interpret_on()
 
         def run(xs):
             x = jnp.stack(xs, axis=1)  # (rows, members, ...): one fused wire
-            for a in axes:  # forward axis order: chunk == linearized rank
-                x = ring_reduce_scatter(x, a, compress)
+            for a, k in zip(axes, fused):  # forward order: chunk == rank
+                x = (ring_reduce_scatter_fused(x, a, compress, interp)
+                     if k else ring_reduce_scatter(x, a, compress))
             return [x[:, i] for i in range(n)]
 
         return run

@@ -105,6 +105,15 @@ class PlanContext(EmulationContext):
         collectives whenever the backend can fuse them."""
         return self._abi._plan_group_run(name, bounds)
 
+    def wire_block(self) -> int:
+        """The backend's preferred padding granule
+        (:meth:`Backend.wire_pad_multiple`): recipe plans that invent
+        padding round up to a multiple of this so the padded legs stay on
+        the backend's fast wire (e.g. the ring backend's fused Pallas hop
+        kernels need WIRE_BLOCK-divisible chunks).  The extra zeros are
+        reduced and sliced off like any padding — numerics unchanged."""
+        return max(1, int(self._abi.backend.wire_pad_multiple()))
+
 
 def _tag(fn: Callable, name: str, deps: tuple) -> Callable:
     fn.__name__ = name
@@ -315,7 +324,10 @@ def plan_allreduce(ctx: PlanContext, x, op, comm) -> Callable:
     scalar = len(getattr(x, "shape", ())) == 0
     shape = (1,) if scalar else tuple(x.shape)
     n = shape[0]
-    pad = (-n) % S
+    # round invented padding up to the backend's wire granule so the rs leg
+    # lands on its fast path (kernel-eligible chunks); S*blk keeps both the
+    # rank split and the per-rank chunk aligned
+    pad = (-n) % (S * ctx.wire_block())
     rest = shape[1:]
     dtype = x.dtype
     rs = ctx.plan_dep(
@@ -410,13 +422,14 @@ def plan_group_allreduce(ctx: PlanContext, bounds) -> Callable:
         return lambda xs: list(xs)
     members = []
     rs_bounds, ag_bounds = [], []
+    blk = ctx.wire_block()
     for x, _, _ in bounds:
         if not hasattr(x, "shape") or not hasattr(x, "dtype"):
             return None  # pytree payloads: fall back to per-member plans
         scalar = len(tuple(x.shape)) == 0
         shape = (1,) if scalar else tuple(x.shape)
         n = shape[0]
-        pad = (-n) % S
+        pad = (-n) % (S * blk)  # wire-granule-aligned (see plan_allreduce)
         rest = shape[1:]
         members.append((scalar, n, pad, rest, x.dtype))
         rs_bounds.append((jax.ShapeDtypeStruct((n + pad,) + rest, x.dtype),

@@ -1,0 +1,202 @@
+"""Fused ring-wire Pallas kernels: one HBM round trip per hop.
+
+The ring backend's compressed wire (``core/backends/ring.py``) composes each
+hop from separate lax ops — dequantize the received block, add the local
+chunk, re-quantize for the next hop — which materializes three full-size
+intermediates per hop.  Each kernel here does the whole per-hop update in a
+single pass: one read of the traveling block, one read of the local chunk,
+one write of the outgoing block (plus the tiny per-block scale vector).
+
+Layout convention: every payload is viewed as ``(nblocks, WIRE_BLOCK)`` —
+the wire block is the quantization granule (int8 absmax scale per block,
+an upgrade over the lax path's single global scale) and the lane dimension
+of the TPU tile.  The ops wrappers (:mod:`.ops`) own the reshape; kernels
+are no-grid ``pallas_call``s over the whole (VMEM-resident) payload, which
+is exactly the traveling-chunk regime: a ring hop moves ``n/S`` elements,
+far below VMEM at training shard sizes.  ``interpret=True`` runs the same
+kernels as jnp ops on CPU (the test/CI story); eligibility for real
+TPU/GPU payloads is gated at plan time by :func:`ops.wire_eligible`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: quantization granule and TPU lane width: one absmax scale per 128 wire
+#: elements, and the minor dimension of every kernel block view
+WIRE_BLOCK = 128
+
+#: absmax floor matching ``ring._quantize`` (avoids 0/0 on all-zero blocks)
+_QEPS = 1e-30
+
+#: scale = absmax * (1/127) as a single f32 multiply — a divide here is
+#: lowered differently inside vs outside the fused kernel body (1-ULP
+#: drift), which would break the bitwise kernel==ref parity contract
+_INV127 = float(jnp.float32(1.0) / jnp.float32(127.0))
+
+
+def _i8_scales(x):
+    """Per-block int8 absmax scale of a (nb, WIRE_BLOCK) f32 view."""
+    return jnp.maximum(jnp.max(jnp.abs(x), axis=1, keepdims=True),
+                       _QEPS) * _INV127
+
+
+def _i8_pack(x, s):
+    return jnp.clip(jnp.round(x / s), -127.0, 127.0).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# int8 wire: quantize / hop-update / final-accumulate
+# ---------------------------------------------------------------------------
+def _quant_i8_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...]
+    s = _i8_scales(x)
+    q_ref[...] = _i8_pack(x, s)
+    s_ref[...] = s
+
+
+def quant_i8(x2d, *, interpret: bool):
+    """(nb, B) f32 -> ((nb, B) int8, (nb, 1) f32 scales)."""
+    nb, b = x2d.shape
+    return pl.pallas_call(
+        _quant_i8_kernel,
+        out_shape=(jax.ShapeDtypeStruct((nb, b), jnp.int8),
+                   jax.ShapeDtypeStruct((nb, 1), jnp.float32)),
+        interpret=interpret,
+    )(x2d)
+
+
+def _hop_add_quant_i8_kernel(q_ref, s_ref, a_ref, q2_ref, s2_ref):
+    # dequantize + accumulate + re-quantize: ONE read of the traveling
+    # block, one write of the outgoing block — the lax composition
+    # materializes `received`, `travel` and the quantized result separately
+    y = q_ref[...].astype(jnp.float32) * s_ref[...] + a_ref[...]
+    s2 = _i8_scales(y)
+    q2_ref[...] = _i8_pack(y, s2)
+    s2_ref[...] = s2
+
+
+def hop_add_quant_i8(q2d, s, a2d, *, interpret: bool):
+    """Middle ring hop: (q, scales, local chunk) -> (q', scales')."""
+    nb, b = q2d.shape
+    return pl.pallas_call(
+        _hop_add_quant_i8_kernel,
+        out_shape=(jax.ShapeDtypeStruct((nb, b), jnp.int8),
+                   jax.ShapeDtypeStruct((nb, 1), jnp.float32)),
+        interpret=interpret,
+    )(q2d, s, a2d)
+
+
+def _hop_accum_i8_kernel(q_ref, s_ref, a_ref, o_ref):
+    o_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[...] + a_ref[...]
+
+
+def hop_accum_i8(q2d, s, a2d, *, interpret: bool):
+    """Final ring hop: dequantize-and-accumulate into f32, one pass."""
+    nb, b = q2d.shape
+    return pl.pallas_call(
+        _hop_accum_i8_kernel,
+        out_shape=jax.ShapeDtypeStruct((nb, b), jnp.float32),
+        interpret=interpret,
+    )(q2d, s, a2d)
+
+
+# ---------------------------------------------------------------------------
+# bf16 wire: pack is a bare cast (bitwise == lax astype); the fused work is
+# the add+cast hop update and the final accumulate
+# ---------------------------------------------------------------------------
+def _hop_add_quant_bf16_kernel(w_ref, a_ref, w2_ref):
+    w2_ref[...] = (w_ref[...].astype(jnp.float32) + a_ref[...]).astype(jnp.bfloat16)
+
+
+def hop_add_quant_bf16(w2d, a2d, *, interpret: bool):
+    nb, b = w2d.shape
+    return pl.pallas_call(
+        _hop_add_quant_bf16_kernel,
+        out_shape=jax.ShapeDtypeStruct((nb, b), jnp.bfloat16),
+        interpret=interpret,
+    )(w2d, a2d)
+
+
+def _hop_accum_bf16_kernel(w_ref, a_ref, o_ref):
+    o_ref[...] = w_ref[...].astype(jnp.float32) + a_ref[...]
+
+
+def hop_accum_bf16(w2d, a2d, *, interpret: bool):
+    nb, b = w2d.shape
+    return pl.pallas_call(
+        _hop_accum_bf16_kernel,
+        out_shape=jax.ShapeDtypeStruct((nb, b), jnp.float32),
+        interpret=interpret,
+    )(w2d, a2d)
+
+
+# ---------------------------------------------------------------------------
+# fused grad flatten/bucket: the zero1 transposed-bucket gather
+# (grad_sync._transposed_bucket_parts) as one kernel pass, optionally fused
+# with the bf16 wire cast + error-feedback residual refresh
+# ---------------------------------------------------------------------------
+def _pack_kernel(x_ref, o_ref, *, dp: int, buckets: int, wire_dtype):
+    # x: (dp*buckets, seg) rank-major; o: (buckets, dp, seg) bucket-major —
+    # the transposed split whose per-bucket reduce-scatter results
+    # concatenate into each rank's contiguous slice of the full vector
+    x = x_ref[...]
+    seg = x.shape[1]
+    o_ref[...] = jnp.swapaxes(
+        x.reshape(dp, buckets, seg), 0, 1).astype(wire_dtype)
+
+
+def pack_transposed(x2d, dp: int, buckets: int, wire_dtype, *, interpret: bool):
+    """(dp*buckets, seg) -> (buckets, dp, seg) in the wire dtype."""
+    seg = x2d.shape[1]
+    return pl.pallas_call(
+        functools.partial(_pack_kernel, dp=dp, buckets=buckets,
+                          wire_dtype=wire_dtype),
+        out_shape=jax.ShapeDtypeStruct((buckets, dp, seg), wire_dtype),
+        interpret=interpret,
+    )(x2d)
+
+
+def _pack_ef_kernel(x_ref, e_ref, o_ref, ef_ref, *, dp: int, buckets: int):
+    # error-feedback fold + bf16 wire cast + residual refresh + transposed
+    # split, one pass: y = g + ef; wire = bf16(y); ef' = y - f32(wire).
+    # The lax path materializes y, wire and ef' as three full vectors.
+    y = x_ref[...] + e_ref[...]
+    w = y.astype(jnp.bfloat16)
+    ef_ref[...] = y - w.astype(jnp.float32)
+    seg = y.shape[1]
+    o_ref[...] = jnp.swapaxes(w.reshape(dp, buckets, seg), 0, 1)
+
+
+def pack_transposed_ef(x2d, e2d, dp: int, buckets: int, *, interpret: bool):
+    """((dp*buckets, seg) f32 grads, same-shape ef) ->
+    ((buckets, dp, seg) bf16 wire, (dp*buckets, seg) f32 new ef)."""
+    seg = x2d.shape[1]
+    return pl.pallas_call(
+        functools.partial(_pack_ef_kernel, dp=dp, buckets=buckets),
+        out_shape=(jax.ShapeDtypeStruct((buckets, dp, seg), jnp.bfloat16),
+                   jax.ShapeDtypeStruct(x2d.shape, jnp.float32)),
+        interpret=interpret,
+    )(x2d, e2d)
+
+
+def _unpack_kernel(x_ref, o_ref, *, dp: int, buckets: int):
+    # inverse gather (grad_sync._interleave_bucket_gathers): bucket-major
+    # (buckets, dp, seg) back to the rank-major flat layout
+    x = x_ref[...]
+    seg = x.shape[2]
+    o_ref[...] = jnp.swapaxes(x, 0, 1).reshape(dp * buckets, seg).astype(
+        jnp.float32)
+
+
+def unpack_transposed(x3d, *, interpret: bool):
+    """(buckets, dp, seg) -> (dp*buckets, seg) f32."""
+    buckets, dp, seg = x3d.shape
+    return pl.pallas_call(
+        functools.partial(_unpack_kernel, dp=dp, buckets=buckets),
+        out_shape=jax.ShapeDtypeStruct((dp * buckets, seg), jnp.float32),
+        interpret=interpret,
+    )(x3d)

@@ -1,0 +1,149 @@
+"""Shape-polymorphic wrappers around the fused ring-wire kernels.
+
+These are the functions the backend plan hooks call.  Payloads arrive as
+flat (or leading-axis) arrays; the wrappers view them as ``(nblocks,
+WIRE_BLOCK)``, invoke the no-grid kernel, and restore the caller's shape.
+Eligibility predicates (:func:`wire_eligible`, :func:`pack_eligible`) are
+evaluated at **plan time** against the bound shape/dtype/platform — callers
+never see the kernel-vs-lax decision, only ``capabilities()`` does.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _k
+
+WIRE_BLOCK = _k.WIRE_BLOCK
+
+#: per-hop payloads above this stay on the lax path on real accelerators —
+#: the no-grid kernels hold the whole block view in VMEM (~16 MiB/core);
+#: 1M f32 elements is 4 MiB traveling + 4 MiB accumulator, a safe ceiling.
+MAX_WIRE_ELEMS = 1 << 20
+
+
+def _platform(platform: Optional[str]) -> str:
+    return platform or jax.default_backend()
+
+
+def interpret_on(platform: Optional[str] = None) -> bool:
+    """Pallas interpret mode: on for CPU (tests/CI), off on TPU/GPU."""
+    return _platform(platform) == "cpu"
+
+
+def wire_eligible(shape, dtype, compress: Optional[str],
+                  platform: Optional[str] = None) -> bool:
+    """Can the fused hop kernels carry this per-hop chunk?
+
+    Requires a compressed wire (the fusion exists to kill the quantize /
+    dequantize intermediates), an f32 payload, and a WIRE_BLOCK-divisible
+    element count (the per-block scale layout).  On TPU/GPU additionally
+    cap at :data:`MAX_WIRE_ELEMS` so the no-grid kernel stays VMEM-resident.
+    """
+    if compress not in ("int8", "bf16"):
+        return False
+    if jnp.dtype(dtype) != jnp.float32:
+        return False
+    total = 1
+    for d in shape:
+        total *= int(d)
+    if total <= 0 or total % WIRE_BLOCK != 0:
+        return False
+    plat = _platform(platform)
+    if plat not in ("cpu", "tpu", "gpu"):
+        return False
+    if plat != "cpu" and total > MAX_WIRE_ELEMS:
+        return False
+    return True
+
+
+def _as_blocks(x):
+    return x.reshape(-1, WIRE_BLOCK)
+
+
+def quant(x, compress: str, *, interpret: bool):
+    """Quantize a chunk for the wire.
+
+    Returns ``(q, scales)`` where ``q`` has ``x``'s shape (int8 or bf16)
+    and ``scales`` is the per-block scale vector (``None`` for bf16).
+    """
+    if compress == "bf16":
+        # bare cast: bitwise-identical to the lax astype, no kernel needed
+        return x.astype(jnp.bfloat16), None
+    q, s = _k.quant_i8(_as_blocks(x), interpret=interpret)
+    return q.reshape(x.shape), s
+
+
+def hop_add_quant(q, scales, addend, compress: str, *, interpret: bool):
+    """Middle-hop update: dequantize + add local chunk + re-quantize."""
+    if compress == "bf16":
+        w2 = _k.hop_add_quant_bf16(_as_blocks(q), _as_blocks(addend),
+                                   interpret=interpret)
+        return w2.reshape(q.shape), None
+    q2, s2 = _k.hop_add_quant_i8(_as_blocks(q), scales, _as_blocks(addend),
+                                 interpret=interpret)
+    return q2.reshape(q.shape), s2
+
+
+def hop_accum(q, scales, addend, compress: str, *, interpret: bool):
+    """Final-hop update: dequantize + add local chunk, f32 out."""
+    if compress == "bf16":
+        o = _k.hop_accum_bf16(_as_blocks(q), _as_blocks(addend),
+                              interpret=interpret)
+    else:
+        o = _k.hop_accum_i8(_as_blocks(q), scales, _as_blocks(addend),
+                            interpret=interpret)
+    return o.reshape(addend.shape)
+
+
+# ---------------------------------------------------------------------------
+# fused grad flatten/bucket (zero1 plan-group payload gather)
+# ---------------------------------------------------------------------------
+def pack_eligible(padded: int, dp: int, buckets: int,
+                  platform: Optional[str] = None) -> bool:
+    """Can the fused pack/unpack kernels build the zero1 bucket parts?"""
+    if padded <= 0 or dp <= 0 or buckets <= 0 or padded % (dp * buckets) != 0:
+        return False
+    plat = _platform(platform)
+    if plat not in ("cpu", "tpu", "gpu"):
+        return False
+    if plat != "cpu" and padded > 4 * MAX_WIRE_ELEMS:
+        return False
+    return True
+
+
+def pack_parts(flat, dp: int, buckets: int, wire_dtype, *, interpret: bool):
+    """Fused ``_transposed_bucket_parts`` + wire cast.
+
+    ``flat``: (padded,) f32 -> list of ``buckets`` parts, each
+    ``(padded // buckets,)`` in ``wire_dtype``.
+    """
+    seg = flat.shape[0] // (dp * buckets)
+    out = _k.pack_transposed(flat.reshape(dp * buckets, seg), dp, buckets,
+                             jnp.dtype(wire_dtype), interpret=interpret)
+    return [out[b].reshape(-1) for b in range(buckets)]
+
+
+def pack_parts_ef(flat, ef, dp: int, buckets: int, *, interpret: bool):
+    """Fused error-feedback fold + bf16 cast + residual + bucket gather.
+
+    Returns ``(parts, new_ef)``: ``parts`` as in :func:`pack_parts` (bf16),
+    ``new_ef`` the refreshed (padded,) f32 residual ``(g + ef) - f32(wire)``.
+    """
+    seg = flat.shape[0] // (dp * buckets)
+    out, new_ef = _k.pack_transposed_ef(
+        flat.reshape(dp * buckets, seg), ef.reshape(dp * buckets, seg),
+        dp, buckets, interpret=interpret)
+    return [out[b].reshape(-1) for b in range(buckets)], new_ef.reshape(-1)
+
+
+def unpack_gathers(outs, dp: int, *, interpret: bool):
+    """Fused ``_interleave_bucket_gathers``: per-bucket allgather outputs
+    (each ``(padded // buckets,)``) back to one (padded,) f32 vector."""
+    buckets = len(outs)
+    seg = outs[0].shape[0] // dp
+    x3d = jnp.stack([o.reshape(dp, seg) for o in outs], axis=0)
+    flat = _k.unpack_transposed(x3d, interpret=interpret)
+    return flat.reshape(-1)

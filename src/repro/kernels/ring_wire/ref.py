@@ -1,0 +1,59 @@
+"""Pure-lax references for the fused ring-wire kernels.
+
+Two flavours:
+
+* ``*_block``: the *same math* as the Pallas kernels (per-block int8 absmax
+  scales) written as unfused jnp ops — the parity oracle for
+  ``tests/test_wire_kernels.py``.  Quantize, the bf16 paths and pack/unpack
+  match the kernels **bitwise** in interpret mode; the int8 hop paths match
+  to one quantum (the kernel's dequant+add contracts to an FMA — single
+  rounding — which the unfused composition cannot express).
+* ``lax_hop_global``: the original ring-backend hop composition (global
+  absmax scale, ``ring._quantize``/``_dequantize``), used by the benchmark
+  to measure what the fusion removed.  It is *numerically different* from
+  the per-block kernels (coarser scale), so comparisons against it are
+  bounded-error, not bitwise.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import WIRE_BLOCK, _INV127, _QEPS
+
+
+def _blocks(x):
+    return x.reshape(-1, WIRE_BLOCK)
+
+
+def quant_i8_block(x):
+    """Per-block int8 quantization, unfused: (n,) f32 -> (q, (nb,1) scales)."""
+    xb = _blocks(x)
+    s = jnp.maximum(jnp.max(jnp.abs(xb), axis=1, keepdims=True),
+                    _QEPS) * _INV127
+    q = jnp.clip(jnp.round(xb / s), -127.0, 127.0).astype(jnp.int8)
+    return q.reshape(x.shape), s
+
+
+def dequant_i8_block(q, s):
+    return (_blocks(q).astype(jnp.float32) * s).reshape(q.shape)
+
+
+def hop_add_quant_i8_block(q, s, addend):
+    """Unfused middle hop with per-block scales (kernel parity oracle)."""
+    y = dequant_i8_block(q, s) + addend
+    return quant_i8_block(y)
+
+
+def hop_accum_i8_block(q, s, addend):
+    return dequant_i8_block(q, s) + addend
+
+
+def lax_hop_global(q, scale, addend):
+    """The pre-fusion ring hop body (``ring.py`` lax composition): global
+    absmax dequantize, add, global absmax re-quantize — three materialized
+    full-size intermediates.  Benchmark/breakdown baseline only."""
+    received = q.astype(jnp.float32) * scale
+    y = received + addend
+    s2 = jnp.maximum(jnp.max(jnp.abs(y)), 1e-30) / 127.0
+    q2 = jnp.clip(jnp.round(y / s2), -127, 127).astype(jnp.int8)
+    return q2, s2

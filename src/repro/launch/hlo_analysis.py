@@ -60,6 +60,10 @@ def shape_bytes(shape_str: str) -> int:
 class CollectiveStats:
     bytes_by_op: dict
     count_by_op: dict
+    # per-op HBM traffic: operand bytes + result bytes (both sides touch
+    # HBM), vs ``bytes_by_op``'s max(in, out) wire convention — the term a
+    # fused-kernel wire removes is memory traffic, not link traffic
+    hbm_by_op: dict = dataclasses.field(default_factory=dict)
 
     @property
     def total_bytes(self) -> int:
@@ -68,6 +72,10 @@ class CollectiveStats:
     @property
     def total_count(self) -> int:
         return sum(self.count_by_op.values())
+
+    @property
+    def total_hbm_bytes(self) -> int:
+        return sum(self.hbm_by_op.values())
 
 
 def collective_bytes(hlo_text: str) -> CollectiveStats:
@@ -80,6 +88,7 @@ def collective_bytes(hlo_text: str) -> CollectiveStats:
 
     bytes_by_op: dict[str, int] = defaultdict(int)
     count_by_op: dict[str, int] = defaultdict(int)
+    hbm_by_op: dict[str, int] = defaultdict(int)
     for line in hlo_text.splitlines():
         m = _DEF_RE.match(line)
         if not m:
@@ -103,7 +112,113 @@ def collective_bytes(hlo_text: str) -> CollectiveStats:
                     in_bytes += shape_bytes(result_shape[ref])
         bytes_by_op[base] += max(out_bytes, in_bytes)
         count_by_op[base] += 1
-    return CollectiveStats(dict(bytes_by_op), dict(count_by_op))
+        hbm_by_op[base] += out_bytes + in_bytes
+    return CollectiveStats(dict(bytes_by_op), dict(count_by_op),
+                           dict(hbm_by_op))
+
+
+# ---------------------------------------------------------------------------
+# per-op wire breakdown (jaxpr level): what a fused wire kernel removed
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class WireBreakdown:
+    """Materialized-output bytes of a wire schedule, split by op class.
+
+    Counted at jaxpr level (sum of output aval bytes per equation), which is
+    the robust fusion metric on CPU: XLA's elementwise fuser makes compiled
+    ``cost_analysis()`` bytes identical for the fused and unfused paths,
+    while the jaxpr shows exactly which intermediates each path *names* —
+    the lax hop names the dequantized block, the accumulated block and the
+    re-quantized block; the fused hop names only the kernel outputs.
+
+    Classes: ``wire`` (ppermute & friends — inter-chip payload, identical on
+    both paths), ``kernel`` (pallas_call outputs), ``quantize`` (narrowing
+    dtype converts), ``dequantize`` (widening converts), ``compute``
+    (everything else).  Pure-metadata ops (reshape/squeeze/expand_dims)
+    count zero bytes.
+    """
+
+    bytes_by_class: dict
+    count_by_class: dict
+
+    @property
+    def materialized_bytes(self) -> int:
+        """HBM-side bytes: every class except the inter-chip ``wire``."""
+        return sum(v for k, v in self.bytes_by_class.items() if k != "wire")
+
+    def as_dict(self) -> dict:
+        return {
+            "bytes_by_class": dict(self.bytes_by_class),
+            "count_by_class": dict(self.count_by_class),
+            "materialized_bytes": self.materialized_bytes,
+        }
+
+
+_METADATA_PRIMS = frozenset({"reshape", "squeeze", "expand_dims"})
+
+
+def _aval_bytes(aval) -> int:
+    try:
+        n = 1
+        for d in aval.shape:
+            n *= int(d)
+        return n * aval.dtype.itemsize
+    except (AttributeError, TypeError):
+        return 0
+
+
+def wire_breakdown(fn, *args) -> WireBreakdown:
+    """Trace ``fn(*args)`` and classify every materialized intermediate.
+
+    Works on any wire schedule (per-hop closures, whole plan runs).  Call
+    bodies (pjit/remat/custom_*) are walked transparently; ``pallas_call``
+    is a leaf — its outputs are the kernel's one write.
+    """
+    import jax
+    from jax._src import core as jax_core
+
+    from ..core.backends._lax import WIRE_PRIMITIVES
+
+    bytes_by_class: dict[str, int] = defaultdict(int)
+    count_by_class: dict[str, int] = defaultdict(int)
+
+    def classify(eqn) -> Optional[str]:
+        name = eqn.primitive.name
+        if name in _METADATA_PRIMS:
+            return None
+        if name in WIRE_PRIMITIVES:
+            return "wire"
+        if name == "pallas_call":
+            return "kernel"
+        if name == "convert_element_type":
+            src = eqn.invars[0].aval.dtype.itemsize
+            dst = eqn.outvars[0].aval.dtype.itemsize
+            return ("quantize" if dst < src
+                    else "dequantize" if dst > src else "compute")
+        return "compute"
+
+    def walk(jaxpr):
+        for eqn in jaxpr.eqns:
+            subs = []
+            if eqn.primitive.name != "pallas_call":
+                for v in eqn.params.values():
+                    if isinstance(v, jax_core.ClosedJaxpr):
+                        subs.append(v.jaxpr)
+                    elif isinstance(v, jax_core.Jaxpr):
+                        subs.append(v)
+            if subs:  # call-like: count the body, not the call
+                for s in subs:
+                    walk(s)
+                continue
+            cls = classify(eqn)
+            if cls is None:
+                continue
+            count_by_class[cls] += 1
+            bytes_by_class[cls] += sum(_aval_bytes(v.aval)
+                                       for v in eqn.outvars)
+
+    walk(jax.make_jaxpr(fn)(*args).jaxpr)
+    return WireBreakdown(dict(bytes_by_class), dict(count_by_class))
 
 
 # ---------------------------------------------------------------------------

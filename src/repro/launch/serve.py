@@ -12,6 +12,7 @@ import jax
 import numpy as np
 
 import repro.configs as cfgs
+from repro.configs.base import apply_xla_flags
 from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
 from repro.runtime.dist import make_dist
@@ -29,6 +30,8 @@ def main(argv=None):
     ap.add_argument("--impl", default=None)
     args = ap.parse_args(argv)
 
+    # before the first jax operation: XLA_FLAGS is read at client creation
+    apply_xla_flags()
     cfg = cfgs.smoke_config(args.arch) if args.smoke else cfgs.get_config(args.arch)
     api = build_model(cfg)
     mesh = make_host_mesh()

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.configs as cfgs
+from repro.configs.base import apply_xla_flags
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.data.pipeline import DataPipeline, SyntheticSource
 from repro.launch.mesh import make_host_mesh, make_production_mesh
@@ -50,6 +51,10 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     logging.basicConfig(level=logging.INFO)
+    # XLA_FLAGS is parsed at backend-client creation, so install the
+    # latency-hiding/async-collective set before the first jax operation
+    # (idempotent; hand-set flags win — configs/base.py)
+    apply_xla_flags()
     cfg = cfgs.smoke_config(args.arch) if args.smoke else cfgs.get_config(args.arch)
     api = build_model(cfg)
     mesh = (make_production_mesh() if args.production_mesh

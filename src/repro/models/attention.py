@@ -136,6 +136,19 @@ def _sdpa_blockwise(q, k, v, *, block_q: int = BLOCKWISE_Q):
     return jnp.concatenate(outs, axis=1)
 
 
+def _flash_or_sdpa(q, k, v):
+    """``attention_impl == "flash"``: route through the kernel registry
+    (:mod:`repro.kernels`) — the Pallas flash kernel with ``interpret=``
+    bound for the platform, or the lax ``_sdpa`` fallback when the registry
+    has no runnable variant.  Same contract as the backend wire kernels:
+    the config names the kernel, the registry picks the implementation."""
+    from ..kernels import resolve
+    mode, fn = resolve("flash_attention")
+    if mode != "pallas" or fn is None:
+        return _sdpa(q, k, v, causal=True)
+    return fn(q, k, v, causal=True)
+
+
 def attention(params, x, cfg, *, positions, causal=True, kv_cache: Optional[KVCache] = None,
               cache_index=None, cross_kv=None):
     """Returns (out, new_cache).
@@ -165,6 +178,8 @@ def attention(params, x, cfg, *, positions, causal=True, kv_cache: Optional[KVCa
     if kv_cache is None:
         if causal and cfg.attention_impl == "blockwise":
             out = _sdpa_blockwise(q, k, v)
+        elif causal and cfg.attention_impl == "flash":
+            out = _flash_or_sdpa(q, k, v)
         else:
             out = _sdpa(q, k, v, causal=causal)
     else:

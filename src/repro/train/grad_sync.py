@@ -98,6 +98,15 @@ class Zero1Plans:
     ag: tuple          # bucket -> allgather Plan (primary context)
     rs_group: object   # PlanGroup fusing all rs buckets (one start/wait)
     ag_group: object   # PlanGroup fusing all ag buckets
+    # fused flatten/bucket kernels, attached at build time when the
+    # ring_wire Pallas pack is available for this layout/platform:
+    # ``pack(flat_g, ef) -> (parts, new_ef)`` replaces the ef fold + wire
+    # cast + `_transposed_bucket_parts` chain with one kernel pass;
+    # ``unpack(outs) -> flat`` replaces `_interleave_bucket_gathers`.
+    # None -> the lax pipeline below runs (the permanent fallback).
+    pack: Optional[object] = None
+    unpack: Optional[object] = None
+    wire_kernel: str = "lax"   # observability: which pipeline pack/unpack use
 
     def matches(self, n: int, dp: int, buckets: int, wire_dtype,
                 compression: Optional[str]) -> bool:
@@ -141,8 +150,38 @@ def build_zero1_plans(dist: DistContext, padded: int, buckets: int = 1,
     ag = tuple(dist.abi.allgather_init(ex_ag, dist.dp_comm) for _ in range(b))
     rs_group = abi_w.plan_group(rs, name="zero1-rs")
     ag_group = dist.abi.plan_group(ag, name="zero1-ag")
+
+    # Plan-time kernel selection (mirrors the backend plan hooks): attach
+    # the fused flatten/bucket kernels iff the registry says Pallas can run
+    # here and the layout divides cleanly; otherwise pack/unpack stay None
+    # and callers run the identical lax pipeline.  No caller changes —
+    # the choice is frozen into the plans object.
+    pack = unpack = None
+    wire_kernel = "lax"
+    from ..kernels import kernel_mode
+    if kernel_mode("ring_wire") == "pallas":
+        from ..kernels.ring_wire import ops as wire_ops
+        if wire_ops.pack_eligible(padded, dp, b):
+            interp = wire_ops.interpret_on()
+            wire_kernel = "pallas"
+
+            def pack(flat_g, ef, _dp=dp, _b=b, _wd=wire_dtype,
+                     _c=compression):
+                fold = ef is not None and ef.shape[0] == flat_g.shape[0]
+                if _c == "bf16" and fold:
+                    # ef fold + bf16 cast + residual + bucket gather fused
+                    return wire_ops.pack_parts_ef(flat_g, ef, _dp, _b,
+                                                  interpret=interp)
+                if fold:
+                    flat_g = flat_g + ef
+                return (wire_ops.pack_parts(flat_g, _dp, _b, _wd,
+                                            interpret=interp), ef)
+
+            def unpack(outs, _dp=dp):
+                return wire_ops.unpack_gathers(outs, _dp, interpret=interp)
+
     return Zero1Plans(dp, b, padded, wire_dtype, compression, rs, ag,
-                      rs_group, ag_group)
+                      rs_group, ag_group, pack, unpack, wire_kernel)
 
 
 @dataclasses.dataclass
@@ -180,6 +219,17 @@ def reduce_scatter_grads_start(
     dp = dist.dp_size
     n = flat_g.shape[0]
     assert n % dp == 0
+    abi, comm = dp_comm_of(dist, compression == "int8")
+
+    if (plans is not None and plans.pack is not None
+            and plans.matches(n, dp, buckets, zero1_wire_dtype(compression),
+                              compression)):
+        # fused path: ef fold + wire cast + transposed bucket gather in one
+        # kernel pass (plan-time selection — see build_zero1_plans)
+        parts, new_ef = plans.pack(flat_g, ef)
+        return (PendingShard(abi, "group", plans.rs_group.start(parts), dp),
+                new_ef)
+
     if ef is not None and ef.shape[0] == n:
         flat_g = flat_g + ef
     wire = flat_g
@@ -189,7 +239,6 @@ def reduce_scatter_grads_start(
         if ef is not None and ef.shape[0] == n:
             new_ef = flat_g - wire16.astype(jnp.float32)
         wire = wire16
-    abi, comm = dp_comm_of(dist, compression == "int8")
 
     if plans is not None and plans.matches(n, dp, buckets, wire.dtype,
                                            compression):
@@ -266,6 +315,8 @@ def allgather_params(dist: DistContext, shard: jax.Array, *, buckets: int = 1,
             [p.astype(jnp.float32) for p in parts]))
         if plans.buckets == 1:
             return outs[0].astype(jnp.float32)
+        if plans.unpack is not None:  # fused inverse gather (f32 out)
+            return plans.unpack(outs)
         return _interleave_bucket_gathers(outs, dist.dp_size).astype(jnp.float32)
     if buckets <= 1:
         return abi.allgather(shard, dist.dp_comm).astype(jnp.float32)

@@ -82,7 +82,10 @@ def init_state(api: ModelApi, key, dist: Optional[DistContext] = None) -> TrainS
     :func:`_flat_opt_specs`) and (b) builds the persistent collective plans
     and their Startall groups for the bucketed round trip
     (``dist.zero1_plans``) — argument binding, handle conversion, recipe
-    composition and group fusion happen here, once, not per step.
+    composition, group fusion AND the wire-kernel choice (the fused Pallas
+    flatten/bucket pack when the registry + layout allow it, the lax
+    pipeline otherwise — ``Zero1Plans.wire_kernel`` records which) happen
+    here, once, not per step.
 
     Re-initialization is **layout-transparent** (the ABI's layout-keyed
     plan cache): re-init with the same (padded, dp, buckets, wire) layout

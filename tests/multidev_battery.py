@@ -11,6 +11,12 @@ Sections:
   4. user ops + MINLOC across ranks (callback path)
   5. Mukautuva across ranks: alltoallw with per-peer dtypes + request map
   6. ring compression error bounds
+  7. ZeRO-1 flat round trip across dp ranks (pooled nonblocking path)
+  8. tiered negotiation: minimal backend emulation chains end-to-end
+  9. persistent plans: plan-time hoisting == per-call semantics
+ 10. plan groups (Startall): group == per-plan zero1, dp=2 and dp=8
+ 11. hierarchical multi-axis alltoallv (world comm, 2x4 mesh)
+ 12. fused wire kernels inside real ring schedules (plan-time selection)
 """
 import os
 
@@ -534,5 +540,107 @@ for impl11 in ("paxi", "ring", "minimal", "ompix"):
     exp11b = np.stack([X2[:, 2 * r:2 * r + 2].reshape(-1) for r in range(8)])
     np.testing.assert_allclose(out11b, exp11b, err_msg=impl11)
     print(f"  {impl11}: multi-axis alltoallv == transpose oracle OK")
+
+# ---------------------------------------------------------------------------
+section("12. fused wire kernels inside real ring schedules (plan-time selection)")
+# Sections 6/10 exercised the compressed ring at shapes the Pallas hop
+# kernels decline (per-hop chunks not WIRE_BLOCK-divisible) — proving the
+# lax fallback.  Here the shapes are kernel-eligible: at dp=2 a 1024-element
+# zero1 with 2 buckets gives 256-element ring chunks (fused hop kernels
+# live), at dp=8 the 64-element chunks fall back to lax while the fused
+# flatten/bucket pack kernels stay engaged — both legs of the plan-time
+# selection contract in one section.
+from repro.kernels.ring_wire.kernel import WIRE_BLOCK as _WB
+
+NV12 = 8 * _WB  # 1024
+
+# capability tags: the compressed ring advertises its wire pipeline
+for impl12, want12 in (("ring-int8", "pallas"), ("ring-bf16", "pallas"),
+                       ("ring", "lax"), ("paxi", None)):
+    caps12 = C.pax_init(mesh, impl=impl12).capabilities()
+    got12 = caps12["reduce_scatter"].get("wire_kernel")
+    assert got12 == want12, (impl12, got12)
+print("  capabilities()[reduce_scatter][wire_kernel] tags OK")
+
+# grouped zero1 over the compressed ring at a kernel-eligible layout
+for impl12, bound12 in (("ring-bf16", 0.01), ("ring-int8", 0.05)):
+    d12 = make_dist(mesh, impl=impl12)
+    plans12 = build_zero1_plans(d12, NV12, 2)
+    assert plans12.wire_kernel == "pallas"  # fused pack/unpack attached
+    vin12 = np.linspace(0.1, 33.0, 2 * NV12, dtype=np.float32)
+    exp12 = vin12.reshape(2, NV12).mean(0) * 2.0
+    f12 = d12.abi.shard_region(
+        lambda v, _d=d12, _p=plans12: zero1_step(
+            _d, v, lambda s: s * 2.0, buckets=2, plans=_p)[0],
+        in_specs=P("data"), out_specs=P())
+    out12 = np.asarray(jax.jit(f12)(jnp.asarray(vin12))[:NV12])
+    rel12 = np.abs(out12 - exp12) / np.maximum(np.abs(exp12), 1e-6)
+    assert rel12.max() < bound12, (impl12, rel12.max())
+    assert d12.abi.outstanding_requests == 0
+    print(f"  {impl12}: fused-hop grouped zero1 (256-elem chunks) "
+          f"max rel err {rel12.max():.4f} < {bound12}")
+
+# the EF identity of section 9d re-proven on the FUSED pack path (the
+# pack_parts_ef kernel folds ef + casts + gathers in one pass) at dp=2 and
+# dp=8 — residual semantics must be bit-identical to the lax pipeline
+vfine12 = jnp.asarray(np.linspace(0.1, 1.7, NV12, dtype=np.float32))
+for m12, dp12 in ((mesh, 2), (mesh8, 8)):
+    d12 = make_dist(m12, impl="paxi")
+    plans12 = build_zero1_plans(d12, NV12, 2, compression="bf16")
+    assert plans12.wire_kernel == "pallas" and plans12.pack is not None
+
+    def body12(ef, _d=d12, _p=plans12):
+        g1, ef1 = reduce_scatter_grads(_d, vfine12, compression="bf16",
+                                       buckets=2, ef=ef, plans=_p)
+        g2, ef2 = reduce_scatter_grads(_d, vfine12, compression="bf16",
+                                       buckets=2, ef=ef1, plans=_p)
+        return g1, g2, ef1, ef2
+
+    f12b = d12.abi.shard_region(body12, in_specs=P("data"),
+                                out_specs=(P("data"),) * 4)
+    g1, g2, ef1, ef2 = (np.asarray(a)
+                        for a in jax.jit(f12b)(jnp.zeros((dp12 * NV12,),
+                                                         jnp.float32)))
+    v_np = np.asarray(vfine12)
+    w1 = np.asarray(vfine12.astype(jnp.bfloat16).astype(jnp.float32))
+    e1 = v_np - w1
+    assert np.abs(e1).max() > 0
+    np.testing.assert_allclose(ef1[:NV12], e1, atol=0)  # fused residual exact
+    np.testing.assert_allclose(g1, w1, rtol=0, atol=1e-7)
+    np.testing.assert_allclose(g1 + g2, 2 * v_np - ef2[:NV12],
+                               rtol=0, atol=1e-6)
+    assert d12.abi.outstanding_requests == 0
+    print(f"  fused-pack bf16 error feedback dp={dp12} OK "
+          f"(residual max {np.abs(e1).max():.2e})")
+
+# emulated allreduce over the compressed ring at a non-aligned length: the
+# recipe plan pads 1000 -> 1024 (S * wire_block) at plan time, so the rs
+# leg's 128-element chunks stay kernel-eligible (per-block scales), while
+# the blocking call pads only to S (125-element chunks -> lax global-scale
+# fallback).  The two are *different* valid int8 approximations — each must
+# meet the section-6 budget against the exact oracle, and the kernel path
+# (finer scale granularity) must not be the worse of the two.
+abi12 = C.pax_init(mesh, impl="ring-int8")
+assert abi12.backend.wire_pad_multiple() == _WB
+plan12 = abi12.allreduce_init(jnp.zeros(1000, jnp.float32), C.PAX_SUM, world)
+f12c = abi12.shard_region(
+    lambda x: (abi12.wait(plan12.start(x)),
+               abi12.allreduce(x, C.PAX_SUM, world)),
+    in_specs=P(), out_specs=(P(), P()))
+x12 = jnp.asarray(np.linspace(0.5, 40.0, 1000, dtype=np.float32))
+v_pers12, v_block12 = jax.jit(f12c)(x12)
+gold12 = 8.0 * np.asarray(x12)
+rel_pers = np.abs(np.asarray(v_pers12) - gold12) / gold12
+rel_block = np.abs(np.asarray(v_block12) - gold12) / gold12
+assert rel_pers.max() < 0.05, rel_pers.max()
+# the global-scale fallback is coarser on this 80x-dynamic-range input;
+# it gets a proportionally looser budget (the kernel path is the one the
+# section-6 0.05 budget must hold for)
+assert rel_block.max() < 0.06, rel_block.max()
+assert rel_pers.max() <= rel_block.max() + 1e-6, (rel_pers.max(),
+                                                  rel_block.max())
+print(f"  ring-int8 persistent allreduce n=1000 (block-padded recipe) "
+      f"max rel err {rel_pers.max():.4f} (blocking lax {rel_block.max():.4f})"
+      " OK")
 
 print("BATTERY PASSED")
