@@ -1,0 +1,112 @@
+"""PR 7 fault-tier perf contracts: the fault tier must be free until used,
+and recovery replay must be bounded by the checkpoint cadence.
+
+* ``fault_tier_dispatch_ratio`` — specialized allreduce dispatch cost on a
+  paxi context whose fault tier has been *exercised* (a spare communicator
+  shrunk off WORLD and revoked, failures acked, an agree run — the comm
+  table carries non-empty revoked/acked state) over a twin context that
+  never touched a fault entry.  Revoked-comm enforcement is by
+  construction — ``CommTable.revoke`` pops the handle from the hot-path
+  axes table, so live comms dispatch through exactly the same code with no
+  added branch — and the gate pins the ratio to 1.0 ± 5%.  Both sides are
+  timed in ONE interleaved session and the gated figure is the median of
+  per-round pairs (the only statistic stable for a ratio of two
+  sub-microsecond identical paths on a shared runner; see
+  bench_message_rate._persistent_session_ns).
+* ``recovery_steps_overhead`` — a tiny in-process ``run_supervised`` run
+  with a ``PAX_ERR_PROC_FAILED`` injected off a checkpoint boundary; the
+  record counts completed steps that were *re-executed* after the restore
+  (steps the crash rolled back).  Gate: must stay ≤ the companion
+  ``recovery_checkpoint_every`` — restart replays at most one checkpoint
+  interval, never more (a regression here means the supervisor restored an
+  older checkpoint than the latest, or the save cadence silently drifted).
+
+The end-to-end elastic legs (kill a rank at dp=8, shrink, bitwise resume
+at dp=4) live in tests/multidev_battery.py sections 13–14; this module
+only measures the two numeric contracts check_regression.py gates.
+"""
+from __future__ import annotations
+
+import tempfile
+from collections import Counter
+
+import jax.numpy as jnp
+
+import repro.core as C
+from benchmarks.bench_message_rate import (_median, _mesh,
+                                           _persistent_session_ns)
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.core.errors import PAX_ERR_PROC_FAILED, PaxError
+from repro.runtime.fault import run_supervised
+
+
+def _exercised_abi(mesh):
+    """A paxi context with the full fault sequence behind it: spare comm
+    shrunk off WORLD, revoked; WORLD acked, queried, agreed on.  What the
+    dispatch ratio pins is that none of this state taxes live comms."""
+    abi = C.pax_init(mesh, impl="paxi")
+    spare = abi.comm_shrink(C.PAX_COMM_WORLD)   # no failures -> clone
+    abi.comm_revoke(spare)                      # non-empty revoked set
+    abi.comm_failure_ack(C.PAX_COMM_WORLD)      # non-empty acked map
+    abi.comm_get_failed(C.PAX_COMM_WORLD)
+    abi.comm_agree(1, C.PAX_COMM_WORLD)
+    return abi
+
+
+def _replay_overhead(total: int, every: int, fail_at: int) -> float:
+    """Count completed steps re-executed after an injected process failure
+    at step ``fail_at`` (not a checkpoint boundary): the supervisor restores
+    the latest checkpoint, so steps in [last_save, fail_at) run twice."""
+    calls: Counter = Counter()
+    armed = {"fail": True}
+
+    def step_fn(state, batch):
+        step = int(batch)
+        calls[step] += 1
+        if step == fail_at and armed["fail"]:
+            armed["fail"] = False
+            raise PaxError(PAX_ERR_PROC_FAILED, "bench: injected rank death")
+        return state + 1.0, None
+
+    with tempfile.TemporaryDirectory() as d:
+        report = run_supervised(
+            step_fn, jnp.zeros((4,), jnp.float32), lambda i: i,
+            checkpointer=Checkpointer(d), total_steps=total,
+            checkpoint_every=every, max_restarts=1)
+    assert report.steps_completed == total and report.restarts == 1, report
+    # the failed attempt itself is not replay; completed steps before the
+    # failure that ran again are
+    return float(sum(1 for s, n in calls.items() if s < fail_at and n > 1))
+
+
+def run() -> list[tuple[str, float, str, str]]:
+    mesh = _mesh()
+    rows = []
+
+    abi_pre = C.pax_init(mesh, impl="paxi")     # fault tier never touched
+    abi_post = _exercised_abi(mesh)
+    x8 = jnp.ones((1,), jnp.float32)
+    ses = _persistent_session_ns(
+        {"pre": abi_pre.allreduce, "post": abi_post.allreduce}, x8)
+    ratio = _median([p / b for p, b in zip(ses["post"], ses["pre"])])
+    rows.append(("fault_tier_dispatch_ratio", ratio, "x",
+                 f"specialized allreduce after the fault sequence "
+                 f"{min(ses['post']):.0f}ns vs untouched twin "
+                 f"{min(ses['pre']):.0f}ns; median per-round ratio, "
+                 "interleaved session (gate: 0.95..1.05)"))
+
+    total, every, fail_at = 10, 4, 6
+    replayed = _replay_overhead(total, every, fail_at)
+    rows.append(("recovery_steps_overhead", replayed, "steps",
+                 f"completed steps re-executed after PROC_FAILED at step "
+                 f"{fail_at} with checkpoint_every={every} "
+                 "(gate: <= recovery_checkpoint_every)"))
+    rows.append(("recovery_checkpoint_every", float(every), "steps",
+                 "companion bound for recovery_steps_overhead: the save "
+                 "cadence of the measured supervised run"))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(",".join(str(x) for x in row))

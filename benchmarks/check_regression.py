@@ -68,6 +68,17 @@ baseline box and the CI runner:
   be exactly 1 — a second same-layout ``<name>_init`` returning anything
   but the cached plan (or allocating a slot) breaks the re-plan
   transparency contract.
+* **fault-tier gates** (PR 7, from the current run alone):
+  ``fault_tier_dispatch_ratio`` (specialized allreduce dispatch on a
+  context with the fault sequence behind it — spare comm revoked,
+  failures acked, agree run — over an untouched twin, median of
+  interleaved per-round pairs) must stay within 0.95..1.05 — revoked-comm
+  enforcement is by construction (the handle is popped from the hot-path
+  table), so the fault tier's presence may not tax live comms; and
+  ``recovery_steps_overhead`` (completed steps re-executed after an
+  injected ``PAX_ERR_PROC_FAILED`` in a supervised run) must stay ≤ the
+  same run's ``recovery_checkpoint_every`` — restart replays at most one
+  checkpoint interval.
 """
 from __future__ import annotations
 
@@ -246,6 +257,35 @@ def main(argv=None) -> int:
             print("OK " + line)
     except KeyError as e:
         failures.append(f"missing wire-kernel record: {e}")
+
+    # -- fault-tier gates (PR 7; current run alone) ------------------------
+    if "fault_tier_dispatch_ratio" not in cur:
+        failures.append("missing record: fault_tier_dispatch_ratio")
+    else:
+        ratio = cur["fault_tier_dispatch_ratio"]
+        lo, hi = 0.95, 1.05
+        line = (f"fault_tier_dispatch_ratio={ratio:.3f} "
+                f"(allowed {lo:.2f}..{hi:.2f}: an exercised fault tier may "
+                "not tax the live-comm dispatch path)")
+        if not lo <= ratio <= hi:
+            failures.append("REGRESSION " + line)
+        else:
+            print("OK " + line)
+
+    if ("recovery_steps_overhead" not in cur
+            or "recovery_checkpoint_every" not in cur):
+        failures.append("missing record: recovery_steps_overhead / "
+                        "recovery_checkpoint_every")
+    else:
+        replayed = cur["recovery_steps_overhead"]
+        every = cur["recovery_checkpoint_every"]
+        line = (f"recovery_steps_overhead={replayed:.0f} steps "
+                f"(ceiling: checkpoint_every={every:.0f} — restart replays "
+                "at most one checkpoint interval)")
+        if replayed > every:
+            failures.append("REGRESSION " + line)
+        else:
+            print("OK " + line)
 
     # -- request-scan flatness (from the current run alone) ----------------
     for impl in ("paxi", "ompix"):

@@ -11,6 +11,7 @@ and gates on — see ``benchmarks/check_regression.py``).
 * Table 1 message rate with/without ABI layers             bench_message_rate
 * §6.2   request-pool worst case                           bench_request_map
 * suppl. handle-code operation costs                       bench_handles
+* fault  tier hot-path tax + recovery replay bound (PR 7)  bench_fault
 * §Roofline summary from the dry-run artifacts             roofline
 
 Sections may return rows as ``(name, value, unit, note)`` or the legacy
@@ -35,7 +36,7 @@ def _normalize(row) -> dict:
 
 
 def collect() -> tuple[list[dict], int]:
-    from benchmarks import (bench_handles, bench_message_rate,
+    from benchmarks import (bench_fault, bench_handles, bench_message_rate,
                             bench_request_map, bench_type_size, roofline)
 
     sections = [
@@ -43,6 +44,7 @@ def collect() -> tuple[list[dict], int]:
         ("paper_table1_message_rate", bench_message_rate),
         ("paper_6.2_request_map", bench_request_map),
         ("handle_code", bench_handles),
+        ("fault_tier", bench_fault),
         ("roofline", roofline),
     ]
     records: list[dict] = []

@@ -400,6 +400,32 @@ def _lazy_entry(abi: "PaxABI", entry: abi_spec.AbiEntry):
     return lazy
 
 
+def _comm_arg_index(entry: abi_spec.AbiEntry) -> Optional[int]:
+    for i, a in enumerate(entry.args):
+        if a.kind == abi_spec.COMM:
+            return i
+    return None
+
+
+def _wrap_revoke(abi: "PaxABI", inner: Callable) -> Callable:
+    """The ``comm_revoke`` entry point with ABI-layer consequences attached:
+    after the (native or emulated) revoke lands, plans and plan groups bound
+    to the comm are reset.  Control-plane path — never specialized away."""
+
+    def comm_revoke(comm):
+        out = inner(comm)
+        abi._after_revoke(comm)
+        return out
+
+    comm_revoke.__wrapped__ = inner
+    comm_revoke.__name__ = "comm_revoke"
+    if hasattr(inner, "__generated_src__"):
+        # the wrapper adds bookkeeping around the compiled entry point; the
+        # specialized source that runs underneath is unchanged
+        comm_revoke.__generated_src__ = inner.__generated_src__
+    return comm_revoke
+
+
 class PaxABI:
     """One initialized ABI context (``MPI_Init`` .. ``MPI_Finalize``)."""
 
@@ -552,6 +578,13 @@ class PaxABI:
         # place when a lazy recipe resolves — hoisted specialized callables
         # then run the built closure directly, no shim indirection
         self._entry_envs[entry.name] = env
+        if entry.name == "comm_revoke":
+            # ABI-layer revoke bookkeeping rides on the entry point (not the
+            # backend impl, which may be native or emulated): after a revoke
+            # lands in the CommTable, live plans and plan groups bound to the
+            # revoked comm are forced inactive via their reset() escape
+            # hatches — their frozen axes closures must never start again.
+            fn = _wrap_revoke(self, fn)
         object.__setattr__(self, entry.name, fn)
         if entry.nonblocking:
             ienv = {
@@ -1018,6 +1051,15 @@ class PaxABI:
         Mukautuva translates the foreign library's symbol table across the
         layer, so the report distinguishes ABI-layer emulation from
         foreign-library support.
+
+        The fault tier (``tier == "fault"``: ``comm_revoke`` /
+        ``comm_shrink`` / ``comm_agree`` / ``comm_failure_ack`` /
+        ``comm_get_failed``) reports through the same per-entry sources:
+        ``"native"`` on backends with ULFM-style hooks (paxi), ``"emulated"``
+        where the spec recipes synthesize the tier (minimal, and Mukautuva
+        fronting libraries that dropped the symbols, e.g. ompix) — so
+        "does this stack have a fault model, and whose?" is answered per
+        entry without calling anything.
         """
         report: dict[str, dict] = {}
         for entry in abi_spec.ABI_TABLE:
@@ -1084,6 +1126,25 @@ class PaxABI:
 
     def comm_free(self, comm: int) -> None:
         self.comms.comm_free(comm)
+
+    def _after_revoke(self, comm: int) -> None:
+        """Revoked-comm plan semantics: every live plan or plan group bound
+        to ``comm`` is forced inactive (``reset()``) — their plan-time-frozen
+        axes closures must not be startable once the comm is revoked.  The
+        layout-keyed plan cache needs no flush: cached plans on the revoked
+        comm key by its handle, and recovery plans over the survivor comm
+        key differently, so re-planning allocates only genuinely new
+        layouts.  Plans on *other* comms are untouched."""
+        for plan in list(self._plans):
+            ci = _comm_arg_index(plan.entry)
+            if ci is not None and plan.bound[ci] == comm:
+                plan.reset()
+        for group in list(self._plan_groups):
+            for member in group.plans:
+                ci = _comm_arg_index(member.entry)
+                if ci is not None and member.bound[ci] == comm:
+                    group.reset()
+                    break
 
     # -- datatypes ----------------------------------------------------------
     def type_contiguous(self, count: int, base: int) -> int:

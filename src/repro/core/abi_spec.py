@@ -57,6 +57,12 @@ from . import handles as H
 # ---------------------------------------------------------------------------
 REQUIRED = "required"
 OPTIONAL = "optional"
+#: ULFM-style fault-tolerance extension entries (comm_revoke / comm_shrink /
+#: comm_agree / comm_failure_ack / comm_get_failed).  Negotiates exactly like
+#: OPTIONAL — native when the backend exports the symbol, recipe-emulated
+#: otherwise — but is reported as its own tier by ``capabilities()`` so a
+#: caller can ask "does this stack have a fault model?" as one question.
+FAULT = "fault"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -153,8 +159,8 @@ class AbiEntry:
     fills_status: bool = False       # ABI-level `status=None` out-param
     muk_ret: str = "value"           # "value" | "rc_only" | "status"
     temps: bool = False              # stash converted vectors for the request map
-    tier: str = OPTIONAL             # REQUIRED | OPTIONAL (negotiation tier)
-    recipe: Optional[Recipe] = None  # emulation of this entry, if OPTIONAL
+    tier: str = OPTIONAL             # REQUIRED | OPTIONAL | FAULT (negotiation tier)
+    recipe: Optional[Recipe] = None  # emulation of this entry, if not REQUIRED
     #: generate the MPI-4 persistent variant (``<name>_init`` plan
     #: constructor).  ``None`` (default) derives from ``nonblocking`` — every
     #: entry with an ``i*`` twin gets a plan constructor, the way MPI-4 gave
@@ -256,6 +262,30 @@ ABI_TABLE: Tuple[AbiEntry, ...] = (
        [Arg("x", PAYLOAD), Arg("root", ROOT), Arg("comm", COMM), Arg("axis", AXIS, 0)],
        nonblocking=True, bytes_arg="x",
        recipe=Recipe(("allgather",), em.build_gather, em.plan_gather)),
+    # -- fault tier (ULFM-style extension entries; "The Case for ABI
+    #    Interoperability in a Fault Tolerant MPI").  Blocking-only — the
+    #    recovery path is control plane, not hot path.  Every entry carries a
+    #    recipe grounding in REQUIRED queries, so even `minimal` negotiates a
+    #    complete fault model; backends that lack the symbols (ompix) fall
+    #    back to the same recipes through Mukautuva, whose generated wrappers
+    #    translate foreign PROC_FAILED/REVOKED rcs when the symbols do exist.
+    _e("comm_revoke", "Comm_revoke", [Arg("comm", COMM)],
+       muk_ret="rc_only", tier=FAULT,
+       recipe=Recipe((), em.build_comm_revoke)),
+    _e("comm_failure_ack", "Comm_failure_ack", [Arg("comm", COMM)],
+       muk_ret="rc_only", tier=FAULT,
+       recipe=Recipe((), em.build_comm_failure_ack)),
+    _e("comm_get_failed", "Comm_get_failed", [Arg("comm", COMM)],
+       tier=FAULT,
+       recipe=Recipe((), em.build_comm_get_failed)),
+    _e("comm_agree", "Comm_agree",
+       [Arg("flag", PAYLOAD), Arg("comm", COMM)],
+       tier=FAULT,
+       recipe=Recipe((), em.build_comm_agree)),
+    _e("comm_shrink", "Comm_shrink", [Arg("comm", COMM)],
+       tier=FAULT,
+       recipe=Recipe(("comm_agree", "comm_get_failed"),
+                     em.build_comm_shrink)),
 )
 
 

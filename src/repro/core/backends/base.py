@@ -107,6 +107,19 @@ class Backend(abc.ABC):
             info["group_hook"] = self.supports_persistent_group(entry)
         return info
 
+    # -- fault model (ULFM tier) -------------------------------------------
+    def local_failed(self, comm: Any) -> tuple:
+        """Ranks this backend knows to be dead on ``comm``.
+
+        The failure-detector hook of the fault tier: the default backend
+        never observes failures (an empty report keeps every fault entry a
+        cheap no-op), while fault-injecting wrappers
+        (:mod:`repro.core.backends.faulty`) report the killed rank here.
+        Both the native paxi fault hooks and the emulation recipes read
+        failures exclusively through this method.
+        """
+        return ()
+
     def wire_pad_multiple(self) -> int:
         """Element-count multiple that keeps this backend's wire on its
         fastest path for padded payloads.  Emulation recipes that invent

@@ -1,0 +1,291 @@
+"""Fault injection below the ABI: a backend wrapper that kills a rank.
+
+The fault tier is only testable if something can actually fail, and a
+single-controller JAX stack has no ranks to ``kill -9``.  This module is the
+deterministic stand-in: a :class:`FaultyBackend` wraps any paxi-convention
+backend (and :class:`FaultyLib` wraps a foreign ompix-convention library),
+counts collective calls, and at a configured call count declares a
+configured rank dead.  From that point every collective on a communicator
+that still *contains* the dead rank raises ``PAX_ERR_PROC_FAILED`` — until
+the caller walks the ULFM sequence (revoke → ack → agree → shrink) and
+continues on a survivor communicator, which excludes the corpse and is
+therefore absolved.
+
+Placement matters: the wrapper sits **below the ABI**, like a tool sits
+above it.  Negotiation resolves the function table against the wrapper, so
+the injected failures surface through exactly the dispatch path real
+failures would take — native entries trip in the wrapped method, emulated
+recipes trip in their grounded primitives, Mukautuva translates the foreign
+``OMPIX_ERR_PROC_FAILED`` rc through its :class:`ErrorTranslator`.
+
+Deliberately NOT registered in the backend registry's factory table: the
+battery's backend sweep must never meet a booby-trapped backend by accident.
+Selection is by the explicit ``faulty:<inner>`` prefix
+(:func:`repro.core.registry.get_backend`) or by constructing the wrapper
+directly; the kill schedule comes from ``PAX_FAULT_SCHEDULE`` (deterministic
+CI chaos — ``"rank=5,at=12"``) or from :meth:`FaultSchedule.arm`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Callable, Optional
+
+from .. import abi_spec
+from ..errors import PAX_ERR_PROC_FAILED, PaxError
+from . import ompix as ox
+from .base import Backend
+
+ENV_VAR = "PAX_FAULT_SCHEDULE"
+
+
+@dataclasses.dataclass
+class FaultSchedule:
+    """When which rank dies, plus the call counter that decides it.
+
+    ``kill_rank`` is a linearized world rank; ``at_call`` is the collective
+    call count after which the rank is dead (-1 disarms).  The same schedule
+    object is shared by every wrapper layer of one backend, so the counter
+    is global per context — deterministic for a fixed call sequence.
+    """
+
+    kill_rank: int = -1
+    at_call: int = -1
+    calls: int = 0
+    dead: bool = False
+
+    @classmethod
+    def from_env(cls, text: Optional[str] = None) -> "FaultSchedule":
+        """Parse ``"rank=R,at=N"`` (the CI chaos knob); empty → disarmed."""
+        if text is None:
+            text = os.environ.get(ENV_VAR, "")
+        sched = cls()
+        for part in text.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            key, _, val = part.partition("=")
+            key = key.strip()
+            if key == "rank":
+                sched.kill_rank = int(val)
+            elif key == "at":
+                sched.at_call = int(val)
+            else:
+                raise ValueError(f"bad {ENV_VAR} field {part!r} "
+                                 "(expected rank=R,at=N)")
+        return sched
+
+    @property
+    def armed(self) -> bool:
+        return self.kill_rank >= 0 and (self.at_call >= 0 or self.dead)
+
+    def arm(self, kill_rank: int, after: int = 0) -> None:
+        """Kill ``kill_rank`` after ``after`` more collective calls."""
+        self.kill_rank = kill_rank
+        self.at_call = self.calls + after
+
+    def on_call(self) -> bool:
+        """Count one collective call; returns whether the rank is now dead."""
+        self.calls += 1
+        if (not self.dead and self.kill_rank >= 0 and self.at_call >= 0
+                and self.calls > self.at_call):
+            self.dead = True
+        return self.dead
+
+
+def _comm_arg(entry: abi_spec.AbiEntry):
+    for i, a in enumerate(entry.args):
+        if a.kind == abi_spec.COMM:
+            return i, a.name
+    return None, None
+
+
+class FaultyBackend(Backend):
+    """Registry-composable fault-injection wrapper for abi-convention
+    backends (paxi, minimal, ring).
+
+    Shares the inner backend's handle tables (it IS the same context), and
+    resolves the function table per entry:
+
+    * REQUIRED queries delegate untouched (a dead rank still has metadata);
+    * OPTIONAL collectives are wrapped with the kill-schedule tripwire;
+    * FAULT entries are **rebound** onto this wrapper, so the inner
+      backend's native ULFM hooks observe this wrapper's ``local_failed``
+      failure detector instead of the base no-failures default.
+    """
+
+    convention = "abi"
+
+    def __init__(self, inner: Backend, schedule: Optional[FaultSchedule] = None) -> None:
+        super().__init__(inner.mesh)
+        self.inner = inner
+        self.schedule = schedule if schedule is not None else FaultSchedule.from_env()
+        self.name = f"faulty:{inner.name}"
+        # shared context tables — the wrapper adds failures, not a new world
+        self.comms = inner.comms
+        self.ops = inner.ops
+        self.datatypes = inner.datatypes
+        for entry in abi_spec.ABI_TABLE:
+            if not inner.supports(entry):
+                continue  # the ABI emulates it; recipes trip in the ground entries
+            method = entry.backend_method
+            if entry.tier == abi_spec.FAULT:
+                # rebind the inner *class* function onto this wrapper: the
+                # hook's `self.local_failed` / `self.comms` must be ours
+                setattr(self, method,
+                        getattr(type(inner), method).__get__(self))
+            elif entry.tier == abi_spec.REQUIRED:
+                setattr(self, method, getattr(inner, method))
+            else:
+                setattr(self, method, self._tripwire(entry, getattr(inner, method)))
+
+    # -- capability negotiation: the wrapper is exactly as capable ---------
+    def supports(self, entry: abi_spec.AbiEntry) -> bool:
+        return self.inner.supports(entry)
+
+    def capability(self, entry: abi_spec.AbiEntry) -> dict:
+        info = self.inner.capability(entry)
+        info["fault_injection"] = True
+        return info
+
+    def supports_persistent(self, entry: abi_spec.AbiEntry) -> bool:
+        # no type-level plan hooks here: plans compile through the generic
+        # argument-freezing path around the *wrapped* instance methods, so
+        # a plan start() hits the tripwire exactly like a plain call
+        return False
+
+    def supports_persistent_group(self, entry: abi_spec.AbiEntry) -> bool:
+        return False
+
+    # -- handle domain ------------------------------------------------------
+    def comm_axes(self, comm: Any):
+        return self.inner.comm_axes(comm)
+
+    def op_fn(self, op: Any) -> Callable:
+        return self.inner.op_fn(op)
+
+    def op_is_native(self, op: Any) -> bool:
+        return self.inner.op_is_native(op)
+
+    def wire_pad_multiple(self) -> int:
+        return self.inner.wire_pad_multiple()
+
+    # -- the failure detector ----------------------------------------------
+    def local_failed(self, comm: Any) -> tuple:
+        if not self.schedule.dead:
+            return ()
+        try:
+            info = self.comms.info(comm, allow_revoked=True)
+        except PaxError:
+            return ()
+        k = self.schedule.kill_rank
+        if not info.axes or k in info.excludes or k >= info.full_size:
+            return ()
+        return (k,)
+
+    # -- the tripwire -------------------------------------------------------
+    def _tripwire(self, entry: abi_spec.AbiEntry, inner_fn: Callable) -> Callable:
+        schedule = self.schedule
+        comms = self.comms
+        idx, cname = _comm_arg(entry)
+
+        def wrapped(*args, **kwargs):
+            if schedule.on_call():
+                comm = (args[idx] if idx is not None and idx < len(args)
+                        else kwargs.get(cname))
+                # revoked comms raise PAX_ERR_REVOKED in the inner backend
+                # (hot-path poisoning) — REVOKED outranks PROC_FAILED, ULFM
+                if comm is not None and not comms.is_revoked(comm):
+                    info = comms.info(comm)
+                    k = schedule.kill_rank
+                    if info.axes and k not in info.excludes and k < info.full_size:
+                        raise PaxError(
+                            PAX_ERR_PROC_FAILED,
+                            f"rank {k} died (injected, call "
+                            f"{schedule.calls}) on {info.name or 'comm'}",
+                        )
+            return inner_fn(*args, **kwargs)
+
+        wrapped.__name__ = entry.backend_method
+        wrapped.__qualname__ = f"faulty.{entry.backend_method}"
+        return wrapped
+
+
+class FaultyLib:
+    """Fault injection for the *foreign* convention: wraps an ompix-style
+    library, returning ``(OMPIX_ERR_PROC_FAILED, None)`` from collectives
+    once the scheduled rank is dead — the ompix rc convention, so the
+    failure crosses the Mukautuva layer through its generated wrappers and
+    :class:`ErrorTranslator` exactly like a real implementation's rc would.
+
+    The fault symbols themselves stay **absent** (``hasattr`` negotiation
+    reports them missing, as for plain ompix), so the ABI's recipes supply
+    revoke/agree/shrink while the rc path proves the translation story.
+    Communicators created after the death are survivor comms (recovery
+    re-registration) and are absolved from injection.
+    """
+
+    _COLLECTIVES = (
+        "Allreduce", "Bcast", "Reduce_scatter", "Allgather", "Alltoall",
+        "Alltoallv", "Alltoallw", "Scan", "Exscan", "Sendrecv", "Barrier",
+        "Scatter",
+    )
+
+    def __init__(self, lib, schedule: Optional[FaultSchedule] = None) -> None:
+        self._lib = lib
+        self.schedule = schedule if schedule is not None else FaultSchedule.from_env()
+        self._absolved: set = set()  # comms registered post-mortem (identity)
+        for sym in self._COLLECTIVES:
+            if hasattr(lib, sym):
+                setattr(self, sym, self._wrap(sym))
+
+    def __getattr__(self, attr):
+        return getattr(self._lib, attr)
+
+    def Comm_from_axes(self, axes):
+        code, comm = self._lib.Comm_from_axes(axes)
+        if code == 0 and self.schedule.dead:
+            self._absolved.add(comm)
+        return code, comm
+
+    def local_failed(self, comm) -> tuple:
+        """Failure detector surfaced to Mukautuva (ABI-domain comm handle;
+        membership filtering happens in the shared ``comm_failure_view``)."""
+        return (self.schedule.kill_rank,) if self.schedule.dead else ()
+
+    #: per-symbol failure return, matching each symbol's rc convention
+    #: (Barrier returns a bare rc, Sendrecv a (rc, value, status) triple)
+    _FAIL_RC = {
+        "Barrier": ox.OMPIX_ERR_PROC_FAILED,
+        "Sendrecv": (ox.OMPIX_ERR_PROC_FAILED, None, None),
+    }
+
+    def _wrap(self, sym: str) -> Callable:
+        inner = getattr(self._lib, sym)
+        schedule = self.schedule
+        absolved = self._absolved
+        fail_rc = self._FAIL_RC.get(sym, (ox.OMPIX_ERR_PROC_FAILED, None))
+
+        def wrapped(*args, **kwargs):
+            if schedule.on_call():
+                comm = next(
+                    (a for a in args if isinstance(a, ox.OmpixComm)), None)
+                if comm is not None and comm not in absolved and comm.axes:
+                    return fail_rc
+            return inner(*args, **kwargs)
+
+        wrapped.__name__ = sym
+        wrapped.__qualname__ = f"FaultyLib.{sym}"
+        return wrapped
+
+
+def fault_schedule_of(backend) -> Optional[FaultSchedule]:
+    """The kill schedule driving ``backend``, however it is wrapped:
+    a :class:`FaultyBackend` directly, or a Mukautuva adapter over a
+    :class:`FaultyLib`.  ``None`` when no injection layer is present."""
+    sched = getattr(backend, "schedule", None)
+    if isinstance(sched, FaultSchedule):
+        return sched
+    lib = getattr(backend, "lib", None)
+    sched = getattr(lib, "schedule", None)
+    return sched if isinstance(sched, FaultSchedule) else None

@@ -42,6 +42,14 @@ OMPIX_ERR_UNSUPPORTED = 75
 OMPIX_ERR_COUNT = 76
 OMPIX_ERR_RANK = 77
 OMPIX_ERR_INTERN = 78
+# ULFM-shaped fault codes.  ompix itself never raises them — it deliberately
+# drops the fault symbols (Comm_revoke/Comm_shrink/Comm_agree/...), the way
+# most MPI implementations shipped without ULFM for a decade; the codes exist
+# so a fault-*injecting* wrapper library (backends/faulty.FaultyLib) can
+# return them through the ompix rc convention and Mukautuva's translator can
+# carry them across the layer as PAX_ERR_PROC_FAILED / PAX_ERR_REVOKED.
+OMPIX_ERR_PROC_FAILED = 79
+OMPIX_ERR_REVOKED = 80
 
 
 # ---------------------------------------------------------------------------

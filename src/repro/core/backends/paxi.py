@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from .. import handles as H
 from ..communicator import CommTable
 from ..datatypes import DatatypeRegistry
+from ..emulation import agree_value, comm_failure_view
 from ..ops import NATIVE_COLLECTIVE_OPS, OpRegistry
 from . import _lax
 from .base import Backend
@@ -152,6 +153,41 @@ class PaxiBackend(Backend):
             out[i].astype(self.datatypes.to_numpy_dtype(recvtypes[i]))
             for i in range(out.shape[0])
         ]
+
+    # -- fault tier (ULFM analogues, native hooks) --------------------------
+    # paxi IS the ABI, so the native hooks act directly on the shared
+    # CommTable; the failure detector is `local_failed` (the base default
+    # reports nothing — a FaultyBackend wrapper reports the killed rank).
+    # The agree/shrink semantics are the shared single-controller kernels
+    # from core.emulation, so native and recipe-emulated backends cannot
+    # diverge on the agreement value.
+    def comm_revoke(self, comm: int):
+        self.comms.revoke(comm)
+        return None
+
+    def comm_failure_ack(self, comm: int):
+        _, failed, acked = comm_failure_view(self.comms, self.local_failed, comm)
+        self.comms.acked[comm] = acked | failed
+        return None
+
+    def comm_get_failed(self, comm: int) -> tuple[int, ...]:
+        _, failed, _ = comm_failure_view(self.comms, self.local_failed, comm)
+        return tuple(sorted(failed))
+
+    def comm_agree(self, flag, comm: int):
+        return agree_value(self.comms, self.local_failed, flag, comm)
+
+    def comm_shrink(self, comm: int) -> int:
+        # implicit ack + agreement on the failure-set bitmask, then dense
+        # survivor registration (see build_comm_shrink for the recipe twin)
+        info, failed, acked = comm_failure_view(self.comms, self.local_failed, comm)
+        self.comms.acked[comm] = acked | failed
+        mask = 0
+        for r in failed:
+            mask |= 1 << r
+        agreed = self.comm_agree(mask, comm)
+        excludes = [r for r in range(info.full_size) if (agreed >> r) & 1]
+        return self.comms.register_shrunk(comm, excludes)
 
     # -- persistent plans (MPI-4 <name>_init) ------------------------------
     # Native plan hooks for the heavy-traffic entries: the comm→axes lookup

@@ -49,6 +49,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from . import handles as H
+from .errors import PAX_ERR_PROC_FAILED, PaxError
 
 
 class EmulationContext:
@@ -78,6 +79,27 @@ class EmulationContext:
     @property
     def datatypes(self):
         return self._abi.datatypes
+
+    # -- fault-tier accessors (ULFM recipes) --------------------------------
+    # The fault entries are the one recipe family that may reach past the
+    # entry table into the shared CommTable: they must operate on *revoked*
+    # communicators (the ULFM contract), and every plain entry — including
+    # `comm_size` — raises PAX_ERR_REVOKED there by design.
+    @property
+    def comms(self):
+        return self._abi.comms
+
+    def local_failed(self, comm: int) -> tuple:
+        """Ranks the backend knows dead on ``comm`` (fault injection hook)."""
+        return tuple(self._abi.backend.local_failed(comm))
+
+    def register_shrunk(self, parent: int, excludes, name: str = "") -> int:
+        """Register the shrink survivor comm; mirror it into foreign libs."""
+        new = self._abi.comms.register_shrunk(parent, excludes, name)
+        reg = getattr(self._abi.backend, "register_comm", None)
+        if reg is not None:  # foreign convention: keep the impl table in sync
+            reg(new, self._abi.comms.info(new).axes)
+        return new
 
 
 class PlanContext(EmulationContext):
@@ -140,6 +162,120 @@ def prefix_fold(g, r, fn: Callable, x, inclusive: bool):
         acc = fn(prev, g[j])
         out = jnp.where(r == j, acc if inclusive else prev, out)
     return out
+
+
+def masked_agree_fold(contribs, alive):
+    """The shared ULFM-agree kernel: bitwise-AND fold over the per-rank
+    contributions ``contribs``, masked by the survivor vector ``alive`` —
+    dead ranks contribute the AND identity (all ones), i.e. are skipped.
+
+    This is the single-controller collapse of agree's masked allreduce-AND
+    (the same replication argument as ``build_reduce``: in SPMD every rank
+    holds the controller's view, so the wire reduction folds locally).  One
+    definition serves the native paxi hook and the emulation recipe, so the
+    agreement value cannot diverge between native and emulated backends.
+    """
+    acc = None
+    for c, a in zip(contribs, alive):
+        if not a:
+            continue
+        acc = c if acc is None else acc & c
+    if acc is None:
+        raise PaxError(PAX_ERR_PROC_FAILED, "agree with no surviving ranks")
+    return acc
+
+
+def comm_failure_view(comms, local_failed, comm: int):
+    """Shared fault-entry bookkeeping: the comm's info (revocation allowed),
+    the known-failed *member* set, and the acknowledged subset.  Ranks
+    already excluded from the group (a shrunk comm) are non-members, not
+    failures — ULFM's shrink result reports no failed procs — so the
+    backend-reported failure set is intersected with the membership.  Used
+    by both the native paxi hooks and the emulation recipes so their
+    failure model is one definition."""
+    info = comms.info(comm, allow_revoked=True)
+    failed = frozenset(local_failed(comm)) - frozenset(info.excludes)
+    return info, failed, comms.acked.get(comm, frozenset())
+
+
+def agree_value(comms, local_failed, flag, comm: int):
+    """ULFM agree semantics over the single-controller view: raise
+    PAX_ERR_PROC_FAILED while unacknowledged failures exist, else fold the
+    masked AND over surviving contributions (all equal to ``flag`` — SPMD)."""
+    info, failed, acked = comm_failure_view(comms, local_failed, comm)
+    pending = failed - acked
+    if pending:
+        raise PaxError(
+            PAX_ERR_PROC_FAILED,
+            f"comm_agree with unacknowledged failed ranks {sorted(pending)} "
+            f"on {info.name or hex(comm)}",
+        )
+    full = info.full_size
+    return masked_agree_fold([flag] * full,
+                             [r not in failed for r in range(full)])
+
+
+def build_comm_revoke(ctx: EmulationContext) -> Callable:
+    comms = ctx.comms
+
+    def comm_revoke(comm):
+        comms.revoke(comm)
+        return None
+
+    return _tag(comm_revoke, "comm_revoke", ())
+
+
+def build_comm_failure_ack(ctx: EmulationContext) -> Callable:
+    comms, local_failed = ctx.comms, ctx.local_failed
+
+    def comm_failure_ack(comm):
+        _, failed, acked = comm_failure_view(comms, local_failed, comm)
+        comms.acked[comm] = acked | failed
+        return None
+
+    return _tag(comm_failure_ack, "comm_failure_ack", ())
+
+
+def build_comm_get_failed(ctx: EmulationContext) -> Callable:
+    comms, local_failed = ctx.comms, ctx.local_failed
+
+    def comm_get_failed(comm):
+        _, failed, _ = comm_failure_view(comms, local_failed, comm)
+        return tuple(sorted(failed))
+
+    return _tag(comm_get_failed, "comm_get_failed", ())
+
+
+def build_comm_agree(ctx: EmulationContext) -> Callable:
+    comms, local_failed = ctx.comms, ctx.local_failed
+
+    def comm_agree(flag, comm):
+        return agree_value(comms, local_failed, flag, comm)
+
+    return _tag(comm_agree, "comm_agree", ())
+
+
+def build_comm_shrink(ctx: EmulationContext) -> Callable:
+    agree, get_failed = ctx.dep("comm_agree"), ctx.dep("comm_get_failed")
+    comms, local_failed = ctx.comms, ctx.local_failed
+
+    def comm_shrink(comm):
+        # ULFM shrink = implicit ack of the known failures, agreement on the
+        # failure set (as a rank bitmask through agree's AND fold — identical
+        # contributions join trivially in the single-controller view), then
+        # dense survivor-comm registration.
+        _, failed, acked = comm_failure_view(comms, local_failed, comm)
+        comms.acked[comm] = acked | failed
+        mask = 0
+        for r in failed:
+            mask |= 1 << r
+        agreed = agree(mask, comm)
+        info = comms.info(comm, allow_revoked=True)
+        excludes = [r for r in range(info.full_size) if (agreed >> r) & 1]
+        assert sorted(excludes) == sorted(get_failed(comm))
+        return ctx.register_shrunk(comm, excludes)
+
+    return _tag(comm_shrink, "comm_shrink", ("comm_agree", "comm_get_failed"))
 
 
 def build_allreduce(ctx: EmulationContext) -> Callable:

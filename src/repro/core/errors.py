@@ -38,6 +38,12 @@ PAX_ERR_KEYVAL = 20
 PAX_ERR_NO_MEM = 21
 PAX_ERR_INFO = 22
 PAX_ERR_UNSUPPORTED_OPERATION = 23
+# Fault tier (ULFM-style, "The Case for ABI Interoperability in a Fault
+# Tolerant MPI"): a peer process is known dead / the communicator has been
+# revoked.  Below PAX_ERR_LASTCODE like every other class; backends that
+# lack the fault symbols never return these (the ABI's recipes raise them).
+PAX_ERR_PROC_FAILED = 24
+PAX_ERR_REVOKED = 25
 PAX_ERR_LASTCODE = 64
 
 _ERROR_NAMES = {

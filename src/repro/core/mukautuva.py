@@ -60,7 +60,9 @@ from .errors import (
     PAX_ERR_COUNT,
     PAX_ERR_INTERN,
     PAX_ERR_OP,
+    PAX_ERR_PROC_FAILED,
     PAX_ERR_RANK,
+    PAX_ERR_REVOKED,
     PAX_ERR_TYPE,
     PAX_ERR_UNSUPPORTED_OPERATION,
     ErrorTranslator,
@@ -122,6 +124,11 @@ class MukBackend(Backend):
                 ox.OMPIX_ERR_COUNT: PAX_ERR_COUNT,
                 ox.OMPIX_ERR_RANK: PAX_ERR_RANK,
                 ox.OMPIX_ERR_INTERN: PAX_ERR_INTERN,
+                # fault-tier rc translation: a fault-injecting foreign lib
+                # reports dead peers / revoked comms in its own numbering;
+                # the ABI caller sees the standard ULFM-shaped classes.
+                ox.OMPIX_ERR_PROC_FAILED: PAX_ERR_PROC_FAILED,
+                ox.OMPIX_ERR_REVOKED: PAX_ERR_REVOKED,
             }
         )
         self.last_alltoallw_temps: Any = None
@@ -148,6 +155,13 @@ class MukBackend(Backend):
         if entry.persistent:
             info["group_hook"] = self.supports_persistent_group(entry)
         return info
+
+    # -- fault model: the failure detector lives in the foreign library
+    # (a fault-injecting lib reports its killed rank); quiet libs report
+    # nothing and the fault tier stays a set of cheap no-ops.
+    def local_failed(self, comm: int) -> tuple:
+        fn = getattr(self.lib, "local_failed", None)
+        return tuple(fn(comm)) if fn is not None else ()
 
     # ------------------------------------------------------------------
     # predefined-handle maps (the compile-time knowledge of both ABIs)
@@ -214,6 +228,13 @@ class MukBackend(Backend):
     # CONVERT_* (paper §6.2 listing shape: predefined fast path, then table)
     # ------------------------------------------------------------------
     def _convert_comm(self, comm: int) -> ox.OmpixComm:
+        # revoked-comm gate first: Mukautuva's comm table mirrors the ABI
+        # CommTable, so revocation state lives there (one empty-set membership
+        # test — the conversion below already hashes, this adds no lookup
+        # class the path didn't have).  Fault-tier entries never convert
+        # comms through here; they act on the ABI-side table directly.
+        if comm in self.comms.revoked:
+            raise PaxError(PAX_ERR_REVOKED, H.describe(comm))
         if comm == H.PAX_COMM_WORLD:
             return self.lib.comm_world
         if comm == H.PAX_COMM_SELF:
@@ -500,3 +521,27 @@ def _install_generated_wraps() -> None:
 
 
 _install_generated_wraps()
+
+
+# Fault-tier exception to the generated table (installed after it, on
+# purpose): a shrunk survivor communicator is an ABI-side construct — the
+# foreign implementation has no ULFM and sees only the parent axes, so its
+# Comm_size answers the *full* extent.  Group-membership queries for comms
+# with exclusions are therefore answered from Mukautuva's mirrored ABI
+# table; comms without exclusions keep the generated foreign path.
+_generated_comm_size = MukBackend.size  # comm_size's backend_method
+
+
+def _comm_size_excludes_aware(self, comm):
+    info = self.comms.info(comm)
+    if info.excludes:
+        return info.size
+    return _generated_comm_size(self, comm)
+
+
+_comm_size_excludes_aware.__name__ = "size"
+_comm_size_excludes_aware.__qualname__ = "MukBackend.size"
+# the override *wraps* the generated foreign path; keep its provenance
+_comm_size_excludes_aware.__generated_src__ = \
+    _generated_comm_size.__generated_src__
+MukBackend.size = _comm_size_excludes_aware

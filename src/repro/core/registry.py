@@ -76,6 +76,20 @@ register_backend("minimal", lambda mesh: MinimalBackend(mesh))
 
 
 def get_backend(name: str, mesh: Optional[jax.sharding.Mesh] = None) -> Backend:
+    # Fault injection composes by prefix, NOT by factory registration: the
+    # battery's available_backends() sweep must never meet a booby-trapped
+    # backend by accident.  "faulty:<inner>" wraps the inner backend with
+    # the kill schedule from PAX_FAULT_SCHEDULE (see backends/faulty.py);
+    # the foreign ompix path wraps the *library* instead, so the injected
+    # failure crosses Mukautuva as a translated rc.
+    if name.startswith("faulty:"):
+        from .backends.faulty import FaultSchedule, FaultyBackend, FaultyLib
+
+        inner_name = name[len("faulty:"):]
+        schedule = FaultSchedule.from_env()
+        if inner_name == "ompix":
+            return MukBackend(FaultyLib(OmpixLib(mesh), schedule), mesh)
+        return FaultyBackend(get_backend(inner_name, mesh), schedule)
     try:
         factory = _FACTORIES[name]
     except KeyError:
@@ -98,7 +112,13 @@ def pax_init(
     swapped per-init without re-tracing anything built on the ABI.
     ``req_slot_bits`` sets this context's request-pool slot/generation split
     (slots = outstanding-request cap; generations are unbounded above).
+
+    ``impl`` may also be a prebuilt :class:`Backend` instance (a composed
+    fault-injection wrapper, a backend with a pre-armed kill schedule...);
+    it is used as-is, skipping name resolution.
     """
+    if isinstance(impl, Backend):
+        return PaxABI(impl, mesh=mesh, tools=tools, req_slot_bits=req_slot_bits)
     name = impl or os.environ.get(ENV_VAR, DEFAULT_IMPL)
     backend = get_backend(name, mesh)
     return PaxABI(backend, mesh=mesh, tools=tools, req_slot_bits=req_slot_bits)

@@ -59,6 +59,12 @@ def make_dist(
     sequence_parallel: bool = False,
     compression: Optional[str] = None,
 ) -> DistContext:
+    """Build the distributed context over ``mesh``.
+
+    ``impl`` is a backend name (``pax_init`` resolution rules) or a prebuilt
+    ``Backend`` instance — the fault-injection path hands a composed
+    ``FaultyBackend`` straight through.
+    """
     abi = pax_init(mesh, impl=impl, tools=tools)
     names = tuple(mesh.axis_names)
     tp_axis = "model" if "model" in names else names[-1]
@@ -80,6 +86,32 @@ def make_dist(
     dist = DistContext(abi, mesh, rules, dp_axes, tp_axis, dp_comm, tp_comm,
                        abi_compressed=abi_c)
     return dist
+
+
+def survivor_mesh(mesh: jax.sharding.Mesh, failed_ranks) -> jax.sharding.Mesh:
+    """The dense mesh over the devices that survive ``failed_ranks``.
+
+    Ranks are linearized positions in ``mesh.devices.flat`` (the ABI's rank
+    convention).  The data-parallel leading axis shrinks by the number of
+    casualties; every non-data axis keeps its extent, so model-parallel
+    groups stay intact — elastic-dp recovery, not re-sharding.  The failure
+    set must therefore be closed under model-parallel groups (with tp=1,
+    any set works).
+    """
+    failed = frozenset(failed_ranks)
+    devices = [d for r, d in enumerate(mesh.devices.flat) if r not in failed]
+    names = tuple(mesh.axis_names)
+    tail = [mesh.shape[a] for a in names[1:]]
+    tail_prod = math.prod(tail) if tail else 1
+    if not devices or len(devices) % tail_prod:
+        raise ValueError(
+            f"cannot shrink mesh {dict(mesh.shape)} by ranks {sorted(failed)}: "
+            f"{len(devices)} survivors do not fill the non-data axes {tail}")
+    import numpy as np
+
+    shaped = np.array(devices, dtype=object).reshape(
+        [len(devices) // tail_prod] + tail)
+    return jax.sharding.Mesh(shaped, names)
 
 
 def dp_comm_of(dist: DistContext, compressed: bool) -> tuple[PaxABI, int]:

@@ -1,5 +1,5 @@
 """Fault tolerance: supervised training with checkpoint/restart, step-time
-watchdog, and bounded-retry restart on failure.
+watchdog, and ULFM-style elastic recovery on process failure.
 
 What 1000-node SPMD reality allows (DESIGN.md §9): a rank failure kills the
 step; recovery = restart from the latest checkpoint, possibly on a resized
@@ -7,13 +7,21 @@ mesh (elastic resharding via Checkpointer.restore(mesh=new_mesh)).  This
 module provides the in-process skeleton of that supervisor:
 
 * :class:`StepWatchdog` — records step latencies, flags stragglers
-  (> k * rolling median), and exposes the restart decision hook;
+  (> k * rolling median), and decides via :meth:`StepWatchdog.on_straggler`
+  whether to ride it out or to checkpoint-and-restart proactively;
+* :class:`RecoveryPolicy` — how to come back from ``PAX_ERR_PROC_FAILED``:
+  which communicator to revoke/shrink, and a ``rebuild`` callback that
+  re-derives (step_fn, state skeleton, mesh, specs) for the survivors;
 * :func:`run_supervised` — drives (step_fn, state, batches) with periodic
   async checkpoints; on exception it restores the latest checkpoint and
-  resumes, up to ``max_restarts`` with exponential backoff.
+  resumes, up to ``max_restarts`` with exponential backoff.  When a
+  :class:`RecoveryPolicy` is given and the exception is a process failure,
+  the restart first walks the fault tier — revoke → ack/get_failed →
+  agree → shrink — and resumes on the shrunk data-parallel world.
 
-The simulated-failure tests (tests/test_fault.py) inject exceptions at
-chosen steps and assert exactly-once-per-step semantics after recovery.
+Unit coverage lives in tests/test_fault_tier.py; the end-to-end
+kill-a-rank-mid-run legs (paxi native, minimal recipe-emulated, ompix
+rc-translated) live in tests/multidev_battery.py.
 """
 from __future__ import annotations
 
@@ -26,15 +34,22 @@ from typing import Callable, Iterable, Optional
 import jax
 
 from ..checkpoint.checkpointer import Checkpointer
+from ..core.errors import PAX_ERR_PROC_FAILED, PaxError
 
 log = logging.getLogger("repro.fault")
 
 
 class StepWatchdog:
-    def __init__(self, window: int = 32, straggler_factor: float = 3.0) -> None:
+    def __init__(
+        self,
+        window: int = 32,
+        straggler_factor: float = 3.0,
+        on_straggler: Optional[Callable[[int, float], str]] = None,
+    ) -> None:
         self.times: deque[float] = deque(maxlen=window)
         self.factor = straggler_factor
         self.stragglers: list[tuple[int, float]] = []
+        self._decide = on_straggler
 
     def observe(self, step: int, dt: float) -> bool:
         """Returns True if this step was a straggler."""
@@ -48,6 +63,68 @@ class StepWatchdog:
         self.times.append(dt)
         return is_straggler
 
+    def on_straggler(self, step: int, dt: float) -> str:
+        """The restart decision for a flagged straggler: ``"continue"`` to
+        ride it out, ``"restart"`` to checkpoint now and restart the step
+        loop (proactive recovery before a slow rank turns into a dead one).
+        Policy is injected via the constructor's ``on_straggler`` callable;
+        the default always continues.
+        """
+        if self._decide is None:
+            return "continue"
+        decision = self._decide(step, dt)
+        if decision not in ("continue", "restart"):
+            raise ValueError(f"on_straggler policy returned {decision!r} "
+                             "(expected 'continue' or 'restart')")
+        return decision
+
+
+@dataclasses.dataclass
+class RecoveryTarget:
+    """What ``RecoveryPolicy.rebuild`` returns: the training closure for the
+    survivor world.  ``mesh``/``specs`` feed ``Checkpointer.restore`` for the
+    elastic reshard; ``state_like`` is the restore skeleton (its tree
+    structure, not its values, is used)."""
+
+    step_fn: Callable
+    state_like: object
+    mesh: Optional[jax.sharding.Mesh] = None
+    specs: Optional[object] = None
+
+
+@dataclasses.dataclass
+class RecoveryPolicy:
+    """Elastic-dp recovery from ``PAX_ERR_PROC_FAILED``.
+
+    ``dist`` is the live context whose data-parallel communicator the
+    failure poisoned.  ``rebuild(survivors, failed)`` is called after the
+    shrink with the survivor count and the agreed failure set; it must
+    return a :class:`RecoveryTarget` for the shrunk world (typically:
+    ``survivor_mesh`` → ``make_dist`` → ``init_state``/``make_train_step``)
+    and may update ``dist`` to the new context for a subsequent failure.
+    """
+
+    dist: object
+    rebuild: Callable[[int, tuple], RecoveryTarget]
+
+
+def _execute_recovery(policy: RecoveryPolicy) -> RecoveryTarget:
+    """The ULFM sequence over the failed data-parallel communicator:
+    revoke → ack → get_failed → agree(resume) → shrink, then retire the
+    plans bound to the dead world and rebuild for the survivors."""
+    dist = policy.dist
+    abi, comm = dist.abi, dist.dp_comm
+    abi.comm_revoke(comm)          # poison the comm; reset plans/groups on it
+    abi.comm_failure_ack(comm)     # acknowledge the locally-detected deaths
+    failed = tuple(abi.comm_get_failed(comm))
+    abi.comm_agree(1, comm)        # survivors agree the failure set is stable
+    survivor = abi.comm_shrink(comm)
+    survivors = abi.comm_size(survivor)
+    log.warning("recovered comm: %d survivors after failure of ranks %s",
+                survivors, list(failed))
+    dist.drop_zero1_plans()
+    return policy.rebuild(survivors, failed)
+
 
 @dataclasses.dataclass
 class SupervisorReport:
@@ -56,6 +133,16 @@ class SupervisorReport:
     stragglers: int
     final_state: object
     losses: list
+    # first step of this supervisor run (nonzero when resuming a previous
+    # run's checkpoint): losses are recorded per step from here on
+    resumed_from: int = 0
+
+    def __post_init__(self) -> None:
+        # one loss per completed step — the replay-truncation invariant
+        # (step_fns with no loss metric legitimately record nothing)
+        assert not self.losses or (
+            len(self.losses) == self.steps_completed - self.resumed_from
+        ), (len(self.losses), self.steps_completed, self.resumed_from)
 
 
 def run_supervised(
@@ -69,6 +156,8 @@ def run_supervised(
     max_restarts: int = 3,
     backoff_s: float = 0.0,
     state_like=None,
+    watchdog: Optional[StepWatchdog] = None,
+    recover: Optional[RecoveryPolicy] = None,
 ) -> SupervisorReport:
     """Run ``total_steps`` of ``state, metrics = step_fn(state, batch)`` with
     checkpoint/restart fault tolerance.
@@ -77,18 +166,63 @@ def run_supervised(
     ``batches(step) -> batch`` or an indexable; iterables are materialized
     per step via the callable protocol to keep data/step alignment across
     restarts (exactly-once consumption per completed step).
+
+    ``recover`` arms elastic-dp recovery: a ``PAX_ERR_PROC_FAILED`` escaping
+    ``step_fn`` triggers the fault-tier sequence (revoke → ack → agree →
+    shrink), ``recover.rebuild`` swaps in the survivor world's step_fn and
+    restore skeleton, and the latest checkpoint is restored *onto the new
+    mesh* via its specs.  Without it, process failures take the plain
+    same-world restart path.  ``watchdog`` may carry an ``on_straggler``
+    policy; a ``"restart"`` decision checkpoints synchronously at the
+    current step (zero replay) and restarts through the same bounded-retry
+    backoff accounting as the exception path.
     """
     get_batch = batches if callable(batches) else (lambda i: batches[i])
-    watchdog = StepWatchdog()
+    if watchdog is None:
+        watchdog = StepWatchdog()
     restarts = 0
-    losses = []
+    losses: list[float] = []
+    restore_mesh = None
+    restore_specs = None
+
+    def _backoff(cause: Optional[BaseException], at_step: int, why: str) -> None:
+        nonlocal restarts
+        restarts += 1
+        if restarts > max_restarts:
+            raise RuntimeError(
+                f"exceeded {max_restarts} restarts at step {at_step}") from cause
+        log.warning("step %d %s; restart %d/%d", at_step, why, restarts,
+                    max_restarts)
+        if backoff_s:
+            time.sleep(backoff_s * (2 ** (restarts - 1)))
+
+    def _restore() -> tuple:
+        """Latest checkpoint → (state, step), resharded onto the recovery
+        mesh when one is active, with the loss record truncated to the
+        restored step (the replay steps get re-recorded — satellite of the
+        exactly-once-per-step contract)."""
+        checkpointer.wait()
+        latest = checkpointer.latest_step()
+        if latest is None:
+            if restore_mesh is not None:
+                raise RuntimeError(
+                    "elastic recovery requires a checkpoint to reshard from, "
+                    "and none was ever written")
+            losses.clear()
+            return init_state, 0
+        state, step = checkpointer.restore(
+            state_like or init_state, mesh=restore_mesh, specs=restore_specs)
+        del losses[max(0, step - resumed_from):]
+        return state, step
 
     state = init_state
     step = 0
+    resumed_from = 0
     # resume from an existing checkpoint if present
     latest = checkpointer.latest_step()
     if latest is not None:
         state, step = checkpointer.restore(state_like or init_state)
+        resumed_from = step
         log.info("resuming from checkpoint step %d", step)
 
     while step < total_steps:
@@ -98,27 +232,30 @@ def run_supervised(
             loss = getattr(metrics, "loss", None)
             if loss is not None:
                 losses.append(float(loss))
-            watchdog.observe(step, time.time() - t0)
+            dt = time.time() - t0
+            straggler = watchdog.observe(step, dt)
             step += 1
             if step % checkpoint_every == 0 or step == total_steps:
                 checkpointer.save_async(step, state)
+            if straggler and step < total_steps and \
+                    watchdog.on_straggler(step - 1, dt) == "restart":
+                _backoff(None, step - 1, f"straggled ({dt:.3f}s)")
+                checkpointer.save(step, state)  # sync: restart replays nothing
+                state, step = _restore()
         except KeyboardInterrupt:  # pragma: no cover
             raise
         except Exception as e:
-            restarts += 1
-            if restarts > max_restarts:
-                raise RuntimeError(
-                    f"exceeded {max_restarts} restarts at step {step}") from e
-            log.warning("step %d failed (%s); restart %d/%d", step, e, restarts,
-                        max_restarts)
-            if backoff_s:
-                time.sleep(backoff_s * (2 ** (restarts - 1)))
-            checkpointer.wait()
-            latest = checkpointer.latest_step()
-            if latest is not None:
-                state, step = checkpointer.restore(state_like or init_state)
-            else:
-                state, step = init_state, 0
+            _backoff(e, step, f"failed ({e})")
+            if (recover is not None and isinstance(e, PaxError)
+                    and e.code == PAX_ERR_PROC_FAILED):
+                target = _execute_recovery(recover)
+                step_fn = target.step_fn
+                if target.state_like is not None:
+                    state_like = target.state_like
+                restore_mesh = target.mesh
+                restore_specs = target.specs
+            state, step = _restore()
 
     checkpointer.wait()
-    return SupervisorReport(step, restarts, len(watchdog.stragglers), state, losses)
+    return SupervisorReport(step, restarts, len(watchdog.stragglers), state,
+                            losses, resumed_from)

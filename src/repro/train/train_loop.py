@@ -308,6 +308,76 @@ def make_train_step(api: ModelApi, dist, opt_cfg: AdamWConfig, **kw):
 
 
 # ---------------------------------------------------------------------------
+# elastic-dp recovery (the fault-tier consumer)
+# ---------------------------------------------------------------------------
+def with_failure_probe(dist: DistContext, step_fn: Callable) -> Callable:
+    """Prepend a host-side fault-tier probe to a (possibly jitted) step_fn.
+
+    A compiled step cannot raise on a later rank death — injection and
+    detection live at dispatch time in the single-controller simulation —
+    so the supervised loop's failure notification is an agreement on the
+    data-parallel communicator before each launch: ``comm_agree`` raises
+    ``PAX_ERR_PROC_FAILED`` the moment the failure detector reports an
+    unacknowledged death (the ULFM notification idiom)."""
+
+    def probed(state, batch):
+        dist.abi.comm_agree(1, dist.dp_comm)
+        return step_fn(state, batch)
+
+    return probed
+
+
+def elastic_recovery_policy(api: ModelApi, opt_cfg: AdamWConfig, dist: DistContext,
+                            key, *, impl=None, schedule=None, tools=()):
+    """The canonical ``RecoveryPolicy`` for elastic-dp training.
+
+    After ``run_supervised``'s fault-tier walk (revoke → ack → get_failed →
+    agree → shrink) the ``rebuild`` callback re-derives the training world:
+
+    * a dense mesh over the survivors (``survivor_mesh``), trimmed to the
+      largest power-of-two dp extent so batch and flat-layout divisibility
+      survive arbitrary casualty counts (8 ranks − 1 dead → dp=4);
+    * a fresh ``DistContext`` over it (``impl`` names the *recovered*
+      backend — typically the plain implementation underneath the
+      fault-injection wrapper);
+    * ``init_state`` on the new dist, which re-plans the zero1 collective
+      plans through the layout-keyed cache (a genuine layout change retires
+      the old slots; an identical layout reuses live plans);
+    * the new step_fn (jitted, failure-probed) and the restore specs for
+      ``Checkpointer.restore(mesh=new_mesh, specs=...)``.
+
+    Ranks are linearized mesh positions, so this assumes the dp axis leads
+    the mesh (tp groups must survive intact — elastic *data* parallelism).
+    ``policy.dist`` is updated to the rebuilt context, so a second failure
+    recovers from the already-shrunk world.
+    """
+    from ..runtime.dist import make_dist, survivor_mesh
+    from ..runtime.fault import RecoveryPolicy, RecoveryTarget
+
+    def rebuild(survivors: int, failed: tuple) -> RecoveryTarget:
+        mesh = survivor_mesh(policy.dist.mesh, failed)
+        names = tuple(mesh.axis_names)
+        dp_avail = mesh.shape[names[0]]
+        dp_new = 1 << (dp_avail.bit_length() - 1)
+        if dp_new != dp_avail:
+            mesh = jax.sharding.Mesh(mesh.devices[:dp_new], names)
+        new_dist = make_dist(mesh, impl=impl, tools=tools)
+        state_like = init_state(api, key, new_dist)
+        step_fn = with_failure_probe(
+            new_dist, jax.jit(make_train_step(api, new_dist, opt_cfg,
+                                              schedule=schedule)))
+        par = api.cfg.parallelism
+        zero1 = par.grad_sync == "abi" and par.zero1
+        specs = state_specs(api, "abi",
+                            dp_axes=new_dist.dp_axes if zero1 else None)
+        policy.dist = new_dist
+        return RecoveryTarget(step_fn, state_like, mesh=mesh, specs=specs)
+
+    policy = RecoveryPolicy(dist=dist, rebuild=rebuild)
+    return policy
+
+
+# ---------------------------------------------------------------------------
 # state sharding specs (for jit in_shardings / checkpoint layouts)
 # ---------------------------------------------------------------------------
 def state_specs(api: ModelApi, mode: str, fsdp="data", tp="model", dp_axes=None):

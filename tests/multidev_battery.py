@@ -643,4 +643,185 @@ print(f"  ring-int8 persistent allreduce n=1000 (block-padded recipe) "
       f"max rel err {rel_pers.max():.4f} (blocking lax {rel_block.max():.4f})"
       " OK")
 
+# ---------------------------------------------------------------------------
+section("13. fault tier: injected rank death on three dispatch paths (dp=8)")
+# The same ULFM walk — kill -> PROC_FAILED, revoke -> REVOKED exactly,
+# ack/agree, shrink 8 -> 7 — through three different dispatch stories:
+# paxi (native fault hooks, tripwired optional entries), minimal (recipe
+# emulation over the shared kernels) and ompix (failure injected as a
+# foreign rc, translated across Mukautuva).
+from repro.core.backends.faulty import (FaultSchedule, FaultyBackend,
+                                        FaultyLib, fault_schedule_of)
+from repro.core.backends.ompix import OmpixLib
+from repro.core.mukautuva import MukBackend
+from repro.core.errors import (PAX_ERR_PROC_FAILED, PAX_ERR_REVOKED, PaxError)
+
+
+def make_faulty(impl, m, sched):
+    if impl == "ompix":
+        return MukBackend(FaultyLib(OmpixLib(m), sched), m)
+    return FaultyBackend(C.get_backend(impl, m), sched)
+
+
+for impl13 in ("paxi", "minimal", "ompix"):
+    sched13 = FaultSchedule()
+    abi13 = C.pax_init(mesh8, impl=make_faulty(impl13, mesh8, sched13))
+    dp13 = abi13.comm_from_axes(("data",), "dp")
+    want13 = "native" if impl13 == "paxi" else "emulated"
+    caps13 = abi13.capabilities()
+    for e13 in ("comm_revoke", "comm_failure_ack", "comm_get_failed",
+                "comm_agree", "comm_shrink"):
+        assert caps13[e13]["tier"] == "fault", (impl13, e13)
+        assert caps13[e13]["source"] == want13, (impl13, e13, caps13[e13])
+
+    def run13(_abi=None, _dp=None):
+        _abi, _dp = _abi or abi13, _dp or dp13
+        f = _abi.shard_region(lambda x: _abi.allreduce(x, C.PAX_SUM, _dp),
+                              in_specs=P("data"), out_specs=P())
+        return np.asarray(jax.jit(f)(jnp.ones(8, np.float32)))
+
+    assert run13()[0] == 8.0  # pre-fault: clean dispatch
+    sched13.arm(5, after=0)
+    try:
+        run13()
+        raise AssertionError(f"{impl13}: injected death did not surface")
+    except PaxError as e13x:
+        assert e13x.code == PAX_ERR_PROC_FAILED, (impl13, e13x.code)
+    # the detector reports the corpse; agree refuses before acknowledgement
+    assert abi13.comm_get_failed(dp13) == (5,), impl13
+    try:
+        abi13.comm_agree(1, dp13)
+        raise AssertionError(f"{impl13}: agree accepted unacked failure")
+    except PaxError as e13x:
+        assert e13x.code == PAX_ERR_PROC_FAILED
+    abi13.comm_revoke(dp13)
+    try:
+        run13()
+        raise AssertionError(f"{impl13}: revoked comm still dispatches")
+    except PaxError as e13x:  # REVOKED outranks PROC_FAILED (ULFM)
+        assert e13x.code == PAX_ERR_REVOKED, (impl13, e13x.code)
+    # fault entries keep working on the revoked comm; shrink recovers
+    abi13.comm_failure_ack(dp13)
+    assert abi13.comm_agree(1, dp13) == 1
+    surv13 = abi13.comm_shrink(dp13)
+    assert abi13.comms.info(surv13).excludes == (5,)
+    assert abi13.comm_size(surv13) == 7
+    # on the survivor comm the corpse is a non-member, not a failure
+    assert abi13.comm_get_failed(surv13) == ()
+    assert abi13.comm_agree(1, surv13) == 1
+    print(f"  {impl13}: kill->PROC_FAILED, revoke->REVOKED, shrink 8->7 OK")
+
+# CI chaos leg: when PAX_FAULT_SCHEDULE is set, the registry's faulty:
+# prefix must arm from the environment and the schedule must fire at the
+# configured call count — the deterministic chaos contract.
+env13 = os.environ.get("PAX_FAULT_SCHEDULE")
+if env13:
+    abi13e = C.pax_init(mesh8, impl="faulty:paxi")
+    se13 = fault_schedule_of(abi13e.backend)
+    assert se13 is not None and se13.armed, env13
+    dpe13 = abi13e.comm_from_axes(("data",), "dp")
+    for _ in range(se13.at_call + 1):  # drive the counter to the kill point
+        se13.on_call()
+    assert se13.dead
+    try:
+        run13(abi13e, dpe13)
+        raise AssertionError("env-armed schedule did not fire")
+    except PaxError as e13x:
+        assert e13x.code == PAX_ERR_PROC_FAILED
+    abi13e.comm_revoke(dpe13)
+    abi13e.comm_failure_ack(dpe13)
+    surv13e = abi13e.comm_shrink(dpe13)
+    lost13 = 1 if 0 <= se13.kill_rank < 8 else 0
+    assert abi13e.comm_size(surv13e) == 8 - lost13
+    print(f"  env chaos schedule {env13!r}: fired and recovered OK")
+
+# ---------------------------------------------------------------------------
+section("14. elastic-dp: kill rank 5 at dp=8, shrink, bitwise resume at dp=4")
+# The end-to-end recovery contract: supervised training at dp=8 loses rank 5
+# mid-run; the fault-tier walk shrinks the world, the policy rebuilds a
+# dp=4 mesh over the survivors (power-of-two trim of the 7), the checkpoint
+# reshards onto it, and the resumed trajectory is BITWISE identical to an
+# uninterrupted dp=4 oracle restored from the same checkpoint.  Replay is
+# bounded by the checkpoint cadence (the recovery_steps_overhead gate).
+import shutil
+import tempfile
+
+import repro.configs as cfgs
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.models import build_model, make_batch
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.dist import survivor_mesh
+from repro.runtime.fault import run_supervised
+from repro.train import train_loop
+
+cfg14 = cfgs.smoke_config("qwen2-0.5b")
+api14 = build_model(cfg14)
+key14 = jax.random.PRNGKey(0)
+opt14 = AdamWConfig(lr=5e-3)
+TOTAL14, EVERY14, KILL_AT14, KILL_RANK14 = 8, 4, 6, 5
+
+n14 = sum(int(x.size) for x in jax.tree.leaves(api14.init(key14)))
+assert n14 % 8 == 0, n14  # flat zero1 layout identical at dp=8 and dp=4
+
+
+def batch_at14(step):
+    return make_batch(jax.random.PRNGKey(1000 + step), cfg14, 8, 16)
+
+
+mesh4 = jax.sharding.Mesh(
+    np.array(jax.devices()[:4], dtype=object).reshape(4, 1),
+    ("data", "model"))
+# the policy's survivor trim must land on exactly this mesh
+smesh14 = survivor_mesh(mesh8, (KILL_RANK14,))
+assert tuple(smesh14.devices.flat[:4]) == tuple(mesh4.devices.flat)
+
+for impl14 in ("paxi", "minimal", "ompix"):
+    sched14 = FaultSchedule()
+    dist8 = make_dist(mesh8, impl=make_faulty(impl14, mesh8, sched14))
+    assert dist8.dp_size == 8
+    state0 = train_loop.init_state(api14, key14, dist8)
+    step8 = train_loop.with_failure_probe(
+        dist8, jax.jit(train_loop.make_train_step(api14, dist8, opt14)))
+    policy14 = train_loop.elastic_recovery_policy(
+        api14, opt14, dist8, key14, impl=impl14)
+    killed14 = []
+
+    def get_batch14(i, _s=sched14, _k=killed14):
+        if i == KILL_AT14 and not _k:
+            _k.append(i)
+            _s.kill_rank = KILL_RANK14
+            _s.dead = True  # the detector now reports rank 5 dead
+        return batch_at14(i)
+
+    ckdir14 = tempfile.mkdtemp(prefix=f"elastic_{impl14}_")
+    ck14 = Checkpointer(ckdir14, keep=5)
+    report14 = run_supervised(
+        step8, state0, get_batch14, checkpointer=ck14,
+        total_steps=TOTAL14, checkpoint_every=EVERY14, max_restarts=2,
+        recover=policy14)
+    assert report14.restarts == 1, impl14
+    assert report14.steps_completed == TOTAL14
+    assert len(report14.losses) == TOTAL14  # one loss per step, replay-clean
+    assert policy14.dist.dp_size == 4      # 7 survivors -> power-of-two trim
+    assert policy14.dist is not dist8
+
+    # the oracle: an uninterrupted dp=4 run restored from the SAME step-4
+    # checkpoint, on the same survivor devices, with the plain backend
+    dist4 = make_dist(mesh4, impl=impl14)
+    like4 = train_loop.init_state(api14, key14, dist4)
+    specs4 = train_loop.state_specs(api14, "abi", dp_axes=dist4.dp_axes)
+    state4, step4 = ck14.restore(like4, step=EVERY14, mesh=mesh4, specs=specs4)
+    assert step4 == EVERY14  # replayed steps <= checkpoint_every
+    jstep4 = jax.jit(train_loop.make_train_step(api14, dist4, opt14))
+    for s14 in range(EVERY14, TOTAL14):
+        state4, _m14 = jstep4(state4, batch_at14(s14))
+    v_leaves = jax.tree.leaves(report14.final_state)
+    o_leaves = jax.tree.leaves(state4)
+    assert len(v_leaves) == len(o_leaves)
+    for a14, b14 in zip(v_leaves, o_leaves):
+        np.testing.assert_array_equal(np.asarray(a14), np.asarray(b14))
+    shutil.rmtree(ckdir14, ignore_errors=True)
+    print(f"  {impl14}: death at step {KILL_AT14} -> dp=4 resume "
+          "bitwise == oracle OK")
+
 print("BATTERY PASSED")

@@ -1,0 +1,313 @@
+"""Fault tier (ULFM analogue): revoke/ack/get_failed/agree/shrink semantics,
+the fault-injection backend, and the supervised loop's recovery satellites.
+
+Multi-rank end-to-end legs (kill a rank at dp=8, shrink, bitwise-identical
+resumption at dp=4) live in tests/multidev_battery.py; here we unit-test
+the host-level kernels on a synthetic 8-rank communicator table and the
+ABI integration on the 1-device mesh.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+import repro.core as C
+from repro.core import emulation as em
+from repro.core.backends.faulty import (FaultSchedule, FaultyBackend,
+                                        fault_schedule_of)
+from repro.core.communicator import CommTable
+from repro.core.errors import (PAX_ERR_PROC_FAILED, PAX_ERR_REVOKED, PaxError)
+
+
+class _FakeMesh:
+    """Duck-typed 8x1 mesh: CommTable only reads axis_names and shape."""
+
+    axis_names = ("data", "model")
+    shape = {"data": 8, "model": 1}
+
+
+def _table():
+    t = CommTable(_FakeMesh())
+    return t, C.PAX_COMM_WORLD
+
+
+# ---------------------------------------------------------------------------
+# shared kernels (one definition drives native paxi hooks AND recipes)
+# ---------------------------------------------------------------------------
+def test_masked_agree_fold_skips_dead_ranks():
+    contribs = [0b111, 0b101, 0b110, 0b011]
+    assert em.masked_agree_fold(contribs, [True] * 4) == 0b000
+    # rank 3 dead: its 0b011 contribution must not participate
+    assert em.masked_agree_fold(contribs, [True, True, True, False]) == 0b100
+    # determinism: same inputs, same agreement value, every time
+    for _ in range(3):
+        assert em.masked_agree_fold(contribs, [True, False, True, True]) == 0b010
+
+
+def test_masked_agree_fold_no_survivors_raises():
+    with pytest.raises(PaxError) as ei:
+        em.masked_agree_fold([1, 1], [False, False])
+    assert ei.value.code == PAX_ERR_PROC_FAILED
+
+
+def test_comm_failure_view_excluded_ranks_are_not_failures():
+    t, world = _table()
+    detector = lambda comm: (3, 5)
+    info, failed, acked = em.comm_failure_view(t, detector, world)
+    assert failed == frozenset({3, 5}) and acked == frozenset()
+    # a shrunk comm excluding rank 5: the corpse is a non-member there
+    child = t.register_shrunk(world, (5,))
+    info_c, failed_c, _ = em.comm_failure_view(t, detector, child)
+    assert info_c.excludes == (5,)
+    assert failed_c == frozenset({3})
+
+
+def test_agree_refuses_unacked_failures_then_succeeds():
+    t, world = _table()
+    detector = lambda comm: (2,)
+    with pytest.raises(PaxError) as ei:
+        em.agree_value(t, detector, 1, world)
+    assert ei.value.code == PAX_ERR_PROC_FAILED
+    # acknowledge, then agreement folds over the 7 survivors
+    _, failed, acked = em.comm_failure_view(t, detector, world)
+    t.acked[world] = acked | failed
+    assert em.agree_value(t, detector, 1, world) == 1
+    assert em.agree_value(t, detector, 0b1010, world) == 0b1010
+
+
+# ---------------------------------------------------------------------------
+# CommTable: revocation poisoning + shrink registration
+# ---------------------------------------------------------------------------
+def test_revoke_poisons_info_exactly():
+    t, world = _table()
+    dp = t.comm_from_axes(("data",), "dp")
+    t.revoke(dp)
+    assert t.is_revoked(dp)
+    assert dp not in t.axes_by_handle  # hot path poisoned by construction
+    with pytest.raises(PaxError) as ei:
+        t.info(dp)
+    assert ei.value.code == PAX_ERR_REVOKED
+    # the fault tier's escape hatch still sees the metadata
+    assert t.info(dp, allow_revoked=True).full_size == 8
+    # other comms untouched
+    assert t.info(world).full_size == 8
+
+
+def test_register_shrunk_accumulates_excludes():
+    t, world = _table()
+    child = t.register_shrunk(world, (5,), "survivors")
+    ci = t.info(child)
+    assert ci.excludes == (5,) and ci.size == 7 and ci.full_size == 8
+    grandchild = t.register_shrunk(child, (1,))
+    cg = t.info(grandchild)
+    assert cg.excludes == (1, 5) and cg.size == 6
+    # shrinking twice on the same failures is idempotent in the excludes
+    again = t.register_shrunk(child, (5, 1))
+    assert t.info(again).excludes == (1, 5)
+
+
+# ---------------------------------------------------------------------------
+# ABI integration (1-device mesh): negotiation, revocation, plan reset
+# ---------------------------------------------------------------------------
+FAULT_ENTRIES = ("comm_revoke", "comm_failure_ack", "comm_get_failed",
+                 "comm_agree", "comm_shrink")
+
+
+def test_fault_tier_negotiation_sources(mesh1):
+    caps_paxi = C.pax_init(mesh1, impl="paxi").capabilities()
+    caps_min = C.pax_init(mesh1, impl="minimal").capabilities()
+    caps_omp = C.pax_init(mesh1, impl="ompix").capabilities()
+    for e in FAULT_ENTRIES:
+        assert caps_paxi[e]["tier"] == "fault"
+        assert caps_paxi[e]["source"] == "native"
+        assert caps_min[e]["source"] == "emulated"   # recipe over the table
+        assert caps_omp[e]["source"] == "emulated"   # ompix drops the symbols
+    # no fault entry may be unavailable anywhere (negotiation contract)
+    for caps in (caps_paxi, caps_min, caps_omp):
+        assert not [n for n, i in caps.items() if i["source"] == "unavailable"]
+
+
+@pytest.mark.parametrize("impl", ["paxi", "minimal", "ompix"])
+def test_revoke_then_collective_raises_revoked_exactly(mesh1, impl):
+    abi = C.pax_init(mesh1, impl=impl)
+    world = C.PAX_COMM_WORLD
+    abi.comm_revoke(world)
+    f = abi.shard_region(lambda x: abi.allreduce(x, C.PAX_SUM, world),
+                         in_specs=P(), out_specs=P())
+    with pytest.raises(PaxError) as ei:
+        jax.jit(f)(jnp.ones(4, jnp.float32))
+    assert ei.value.code == PAX_ERR_REVOKED
+    # fault-tier entries still operate on the revoked comm (ULFM contract)
+    abi.comm_failure_ack(world)
+    assert abi.comm_get_failed(world) == ()
+    assert abi.comm_agree(1, world) == 1
+    survivor = abi.comm_shrink(world)
+    assert survivor != world
+    assert abi.comm_size(survivor) == 1  # no failures: same group, new comm
+
+
+def test_revoke_resets_plans_and_groups_on_that_comm(mesh1):
+    abi = C.pax_init(mesh1, impl="paxi")
+    world = C.PAX_COMM_WORLD
+    dp = abi.comm_from_axes(("data",), "dp")
+    x = jnp.zeros(4, jnp.float32)
+    p_world = abi.allreduce_init(x, C.PAX_SUM, world)
+    p_dp = abi.allreduce_init(x, C.PAX_SUM, dp)
+    group = abi.plan_group([p_world], "g")
+    assert p_world.request is not None and p_dp.request is not None
+    # simulate mid-trace active plans (start without wait)
+    for obj in (p_world, p_dp, group):
+        obj.request.done = False
+    abi.comm_revoke(world)
+    assert p_world.request.done      # plan on the revoked comm: reset
+    assert group.request.done        # group with a member on it: reset
+    assert not p_dp.request.done     # other comms untouched
+    p_dp.reset()
+
+
+# ---------------------------------------------------------------------------
+# fault injection: schedule, tripwire, registry composition
+# ---------------------------------------------------------------------------
+def test_fault_schedule_from_env_parses(monkeypatch):
+    monkeypatch.setenv("PAX_FAULT_SCHEDULE", "rank=5,at=12")
+    s = FaultSchedule.from_env()
+    assert (s.kill_rank, s.at_call) == (5, 12) and s.armed and not s.dead
+    assert FaultSchedule.from_env("").armed is False
+    with pytest.raises(ValueError):
+        FaultSchedule.from_env("bogus=1")
+
+
+def test_fault_schedule_counting():
+    s = FaultSchedule()
+    s.arm(0, after=2)
+    assert not s.on_call() and not s.on_call()  # calls 1, 2
+    assert s.on_call() and s.dead               # call 3 crosses at_call=2
+
+
+def test_faulty_backend_tripwire_and_revoked_precedence(mesh1):
+    sched = FaultSchedule()
+    backend = FaultyBackend(C.get_backend("paxi", mesh1), sched)
+    abi = C.pax_init(mesh1, impl=backend)
+    world = C.PAX_COMM_WORLD
+    caps = abi.capabilities()
+    assert caps["allreduce"]["fault_injection"] is True
+    for e in FAULT_ENTRIES:  # rebound native hooks stay native
+        assert caps[e]["source"] == "native"
+
+    def run():
+        return jax.jit(abi.shard_region(
+            lambda x: abi.allreduce(x, C.PAX_SUM, world),
+            in_specs=P(), out_specs=P()))(jnp.ones(4, jnp.float32))
+
+    run()  # pre-fault: clean
+    sched.arm(0, after=0)
+    with pytest.raises(PaxError) as ei:
+        run()
+    assert ei.value.code == PAX_ERR_PROC_FAILED
+    # detector reports the corpse; ULFM walk completes on the dead world
+    assert abi.comm_get_failed(world) == (0,)
+    abi.comm_revoke(world)
+    with pytest.raises(PaxError) as ei:  # REVOKED outranks PROC_FAILED
+        run()
+    assert ei.value.code == PAX_ERR_REVOKED
+
+
+def test_registry_faulty_prefix_and_instance_init(mesh1):
+    b = C.get_backend("faulty:minimal", mesh1)
+    assert b.name == "faulty:minimal"
+    assert fault_schedule_of(b) is b.schedule
+    abi = C.pax_init(mesh1, impl=b)
+    assert abi.backend is b
+    # the sweep of plain backends never meets the injection wrapper
+    assert not any(n.startswith("faulty") for n in C.available_backends())
+
+
+# ---------------------------------------------------------------------------
+# supervised-loop satellites: loss realignment, on_straggler restarts
+# ---------------------------------------------------------------------------
+class _Loss:
+    def __init__(self, v):
+        self.loss = v
+
+
+def _acc_step(fail_at, attempts):
+    def step_fn(state, batch):
+        step = int(state["step"])
+        if step in fail_at and attempts[step] == 0:
+            attempts[step] += 1
+            raise RuntimeError(f"injected at {step}")
+        new = {"step": state["step"] + 1, "acc": state["acc"] + batch["x"]}
+        return new, _Loss(float(new["acc"]))
+    return step_fn
+
+
+def test_losses_realigned_after_replay(tmp_path):
+    from repro.checkpoint.checkpointer import Checkpointer
+    from repro.runtime.fault import run_supervised
+
+    attempts = {7: 0, 12: 0}
+    report = run_supervised(
+        _acc_step({7, 12}, attempts),
+        {"step": jnp.int32(0), "acc": jnp.float32(0.0)},
+        lambda i: {"x": float(i)},
+        checkpointer=Checkpointer(tmp_path, keep=3),
+        total_steps=20, checkpoint_every=5, max_restarts=5)
+    assert report.steps_completed == 20 and report.restarts == 2
+    # exactly one loss per step — replayed steps overwrite, never duplicate
+    assert len(report.losses) == 20
+    expect = np.cumsum([float(i) for i in range(20)])
+    np.testing.assert_allclose(report.losses, expect)
+
+
+def test_on_straggler_restart_path(tmp_path):
+    from repro.checkpoint.checkpointer import Checkpointer
+    from repro.runtime.fault import StepWatchdog, run_supervised
+
+    class Forced(StepWatchdog):
+        """Deterministic straggler flag (wall-clock-free)."""
+
+        def __init__(self, at, decision):
+            super().__init__(on_straggler=lambda s, dt: decision)
+            self.at = at
+
+        def observe(self, step, dt):
+            if step == self.at and not self.stragglers:
+                self.stragglers.append((step, dt))
+                return True
+            return False
+
+    for decision, want_restarts in (("restart", 1), ("continue", 0)):
+        wd = Forced(at=6, decision=decision)
+        report = run_supervised(
+            _acc_step(set(), {}),
+            {"step": jnp.int32(0), "acc": jnp.float32(0.0)},
+            lambda i: {"x": float(i)},
+            checkpointer=Checkpointer(tmp_path / decision, keep=3),
+            total_steps=12, checkpoint_every=4, max_restarts=3,
+            watchdog=wd)
+        assert report.restarts == want_restarts, decision
+        assert report.stragglers == 1
+        assert report.steps_completed == 12
+        assert len(report.losses) == 12  # proactive restart replays nothing
+        assert float(report.final_state["acc"]) == sum(range(12))
+
+
+def test_on_straggler_rejects_bad_decision():
+    from repro.runtime.fault import StepWatchdog
+
+    wd = StepWatchdog(on_straggler=lambda s, dt: "panic")
+    with pytest.raises(ValueError):
+        wd.on_straggler(3, 1.0)
+    assert StepWatchdog().on_straggler(3, 1.0) == "continue"
+
+
+def test_supervisor_report_invariant():
+    from repro.runtime.fault import SupervisorReport
+
+    SupervisorReport(20, 0, 0, None, [])          # no-metrics runs stay legal
+    SupervisorReport(20, 0, 0, None, [0.0] * 20)
+    SupervisorReport(25, 0, 0, None, [0.0] * 5, resumed_from=20)
+    with pytest.raises(AssertionError):
+        SupervisorReport(20, 0, 0, None, [0.0] * 21)

@@ -222,10 +222,14 @@ def test_full_backends_stay_fully_native(mesh1):
     caps = C.pax_init(mesh1, impl="paxi").capabilities()
     assert all(i["source"] == "native" for i in caps.values())
     # muk:paxi fronts the same partial foreign symbol table as ompix, so it
-    # shares ompix's two emulated holes and is native everywhere else
+    # shares ompix's two emulated holes — and, like every foreign lib
+    # without ULFM symbols, gets the fault tier from the spec recipes
+    # above Mukautuva — and is native everywhere else
     caps = C.pax_init(mesh1, impl="muk:paxi").capabilities()
+    fault_rows = {e.name for e in abi_spec.ABI_TABLE
+                  if e.tier == abi_spec.FAULT}
     assert {n for n, i in caps.items() if i["source"] != "native"} == {
-        "reduce", "gather"}
+        "reduce", "gather"} | fault_rows
 
 
 def test_recipes_resolve_lazily(mesh1):
