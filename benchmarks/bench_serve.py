@@ -1,0 +1,124 @@
+"""Serving-tier benchmark: Poisson open-loop load on the continuous-batching
+engine (PR 8).
+
+    PYTHONPATH=src python -m benchmarks.bench_serve [--out BENCH_serve.json]
+
+Drives the paged :class:`~repro.serve.engine.ServeEngine` with an
+**open-loop** arrival process: request inter-arrival gaps are exponential
+(Poisson), indexed in *engine steps* so the offered-load pattern — and hence
+the queueing/batching behavior — is deterministic across machines; only the
+measured latencies are wall-clock.  Requests keep arriving on schedule
+whether or not the engine keeps up, so overload shows up as queueing delay
+in the latency tail (never as OOM — the scheduler's funded-admission
+contract).
+
+Records (gated by ``check_regression.py``):
+
+* ``serve_tokens_per_s`` — generated tokens / wall time over the loaded
+  phase.  The gate is a **collapse floor** (a fraction of baseline), not a
+  perf claim: it catches the engine degenerating (per-step recompiles, a
+  serialization bug), not machine-speed differences.
+* ``serve_p50_ms`` / ``serve_p99_ms`` — per-request completion latency
+  (submit → last token) under the same load; p99 gated as a generous
+  ceiling over baseline for the same reason.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _build_engine():
+    import jax
+
+    import repro.configs as cfgs
+    from repro.models import build_model
+    from repro.serve.engine import ServeEngine
+
+    cfg = cfgs.smoke_config("qwen2-0.5b")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(api, params, max_batch=4, max_seq=64, block_size=8,
+                      prefill_chunk=8, seed=0)
+    return cfg, eng
+
+
+def _make_workload(cfg, n, rng, mean_gap_steps=2.0):
+    """(arrival_step, Request) pairs: Poisson gaps, mixed prompt lengths."""
+    from repro.serve.engine import Request
+
+    arrivals, t = [], 0.0
+    for i in range(n):
+        t += rng.exponential(mean_gap_steps)
+        prompt = rng.integers(1, cfg.vocab_size,
+                              int(rng.integers(4, 25))).astype(np.int32)
+        arrivals.append((int(t), Request(i, prompt, max_new_tokens=8)))
+    return arrivals
+
+
+def run():
+    cfg, eng = _build_engine()
+    from repro.serve.engine import Request
+
+    # warmup: compile the two serving step functions (prefill chunk, decode)
+    eng.run([Request(0, np.arange(1, 10, dtype=np.int32), max_new_tokens=4)])
+
+    rng = np.random.default_rng(0)
+    arrivals = _make_workload(cfg, n=24, rng=rng)
+    pending = list(arrivals)
+    submit_wall: dict[int, float] = {}
+    latency_ms: list[float] = []
+    step = 0
+    t0 = time.perf_counter()
+    while pending or eng.has_work:
+        now = time.perf_counter()
+        while pending and pending[0][0] <= step:
+            _, req = pending.pop(0)
+            submit_wall[req.rid] = now
+            eng.submit(req)
+        eng.step()
+        done_now = time.perf_counter()
+        for _, req in arrivals:
+            if req.done and req.rid in submit_wall:
+                latency_ms.append((done_now - submit_wall.pop(req.rid)) * 1e3)
+        step += 1
+    wall = time.perf_counter() - t0
+
+    total_tokens = sum(len(r.out_tokens) for _, r in arrivals)
+    assert all(r.done for _, r in arrivals)
+    assert len(latency_ms) == len(arrivals)
+    p50, p99 = np.percentile(latency_ms, [50, 99])
+    note = (f"{len(arrivals)} reqs, Poisson gaps ~2 steps, "
+            f"{eng.stats['decode_steps']} decode steps, "
+            f"{eng.stats['prefill_chunks']} prefill chunks")
+    return [
+        ("serve_tokens_per_s", total_tokens / wall, "tokens_per_s", note),
+        ("serve_p50_ms", float(p50), "ms",
+         "request completion latency, open-loop"),
+        ("serve_p99_ms", float(p99), "ms",
+         "request completion latency tail, open-loop"),
+        ("serve_requests", float(len(arrivals)), "count", note),
+    ]
+
+
+def main(argv=None) -> None:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args(argv)
+    records = []
+    for name, value, unit, note in run():
+        rec = {"name": name, "value": float(value), "unit": unit,
+               "note": note, "section": "serve_open_loop"}
+        records.append(rec)
+        print(f"{rec['name']},{rec['value']:.4f},{rec['unit']},{rec['note']}")
+    with open(args.out, "w") as f:
+        json.dump(records, f, indent=1)
+    print(f"# wrote {len(records)} records to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -42,6 +42,15 @@ baseline box and the CI runner:
 * **request-scan flatness**: per-request ``testall`` scan cost at 1000
   outstanding requests must stay within ±20% of the 10-request cost (the
   pool's O(1) contract), as recorded by the run itself.
+* **serving gates** (PR 8, from ``BENCH_serve.json`` when present —
+  produced by ``benchmarks/bench_serve.py`` and merged into the same
+  baseline file): ``serve_tokens_per_s`` must stay above a **collapse
+  floor** of 0.25× baseline — it catches the continuous-batching engine
+  degenerating (per-step recompiles, accidental serialization), not
+  machine speed — and ``serve_p99_ms`` must stay under a generous 4×
+  baseline ceiling for the open-loop latency tail.  When
+  ``BENCH_serve.json`` is absent the serve gates are skipped with a
+  warning (the bench leg runs it first, so CI always gates).
 * **fused wire-kernel gates** (PR 6): ``wire_hbm_bytes_ratio`` (jaxpr
   materialized-intermediate bytes of the fused int8 hop over the lax
   composition, current run alone) must stay ≤ 0.5 — the fused kernel's
@@ -84,6 +93,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 
 
@@ -94,6 +104,9 @@ def _index(records: list[dict]) -> dict[str, float]:
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--current", default="BENCH_dispatch.json")
+    ap.add_argument("--serve-current", default="BENCH_serve.json",
+                    help="serving-tier records (bench_serve.py); skipped "
+                         "with a warning when the file is absent")
     ap.add_argument("--baseline", default="benchmarks/baseline_dispatch.json")
     ap.add_argument("--tolerance", type=float, default=0.30,
                     help="allowed relative message-rate regression")
@@ -110,6 +123,8 @@ def main(argv=None) -> int:
 
     if args.update_baseline:
         current = json.load(open(args.current))
+        if os.path.exists(args.serve_current):
+            current = current + json.load(open(args.serve_current))
         baseline = json.load(open(args.baseline))
         by_name = {r["name"]: i for i, r in enumerate(baseline)}
         added = replaced = 0
@@ -286,6 +301,38 @@ def main(argv=None) -> int:
             failures.append("REGRESSION " + line)
         else:
             print("OK " + line)
+
+    # -- serving gates (PR 8; collapse floor + latency-tail ceiling) -------
+    if not os.path.exists(args.serve_current):
+        print(f"WARNING: {args.serve_current} absent; skipping serve gates "
+              "(run benchmarks/bench_serve.py to gate the serving tier)")
+    else:
+        cur.update(_index(json.load(open(args.serve_current))))
+        try:
+            cur_t = cur["serve_tokens_per_s"]
+            base_t = base["serve_tokens_per_s"]
+            floor = base_t * 0.25
+            line = (f"serve tokens/s (collapse floor): current={cur_t:.1f} "
+                    f"baseline={base_t:.1f} floor={floor:.1f}")
+            if cur_t < floor:
+                failures.append("REGRESSION " + line)
+            else:
+                print("OK " + line)
+        except KeyError as e:
+            failures.append(f"missing serve record: {e}")
+
+        try:
+            cur_l = cur["serve_p99_ms"]
+            base_l = base["serve_p99_ms"]
+            ceiling = base_l * 4.0
+            line = (f"serve p99 latency: current={cur_l:.1f}ms "
+                    f"baseline={base_l:.1f}ms ceiling={ceiling:.1f}ms")
+            if cur_l > ceiling:
+                failures.append("REGRESSION " + line)
+            else:
+                print("OK " + line)
+        except KeyError as e:
+            failures.append(f"missing serve record: {e}")
 
     # -- request-scan flatness (from the current run alone) ----------------
     for impl in ("paxi", "ompix"):

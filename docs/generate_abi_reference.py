@@ -1,0 +1,198 @@
+#!/usr/bin/env python
+"""Generate ``docs/abi_reference.md`` from the declarative function table.
+
+    PYTHONPATH=src python docs/generate_abi_reference.py            # write
+    PYTHONPATH=src python docs/generate_abi_reference.py --check    # CI gate
+
+The reference is *generated*, never hand-edited: every row is rendered from
+``repro.core.abi_spec.ABI_TABLE`` — the same data that generates the ABI
+methods, the backend placeholders, and the Mukautuva wrappers — so the
+document cannot lie about the spec.  ``--check`` regenerates in memory and
+exits 1 on any drift from the checked-in file (wired into the tier-1 CI
+leg); a test twin lives in ``tests/test_docs_reference.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+
+from repro.core import abi_spec  # noqa: E402
+
+OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                   "abi_reference.md")
+
+_TIER_NOTE = {
+    abi_spec.REQUIRED: ("must resolve natively at `pax_init` or init fails "
+                        "(pure handle queries; the ground recipes stand on)"),
+    abi_spec.OPTIONAL: ("native when the backend exports the symbol, "
+                        "recipe-emulated otherwise; calling an unresolved "
+                        "entry raises `PAX_ERR_UNSUPPORTED_OPERATION`"),
+    abi_spec.FAULT: ("ULFM-style fault-tolerance extension; negotiates like "
+                     "optional but is reported as its own tier by "
+                     "`capabilities()`"),
+}
+
+
+def _args_cell(entry) -> str:
+    parts = []
+    for a in entry.args:
+        cell = f"`{a.name}`:{a.kind}"
+        if a.has_default:
+            cell += f"={a.default!r}"
+        parts.append(cell)
+    return ", ".join(parts)
+
+
+def _bytes_cell(entry) -> str:
+    if entry.bytes_arg is None:
+        return "—"
+    cell = f"`{entry.bytes_arg}`"
+    if entry.dtype_size_kwarg:
+        cell += " (×`datatype` size)"
+    return cell
+
+
+def _plan_cell(entry) -> str:
+    if not entry.persistent:
+        return "—"
+    if entry.recipe is not None and entry.recipe.plan is not None:
+        return "recipe-plan"
+    return "native/generic"
+
+
+def _group_cell(entry) -> str:
+    if not entry.persistent:
+        return "—"
+    if entry.recipe is not None and entry.recipe.plan_group is not None:
+        return "recipe-stage"
+    return "backend-hook/per-member"
+
+
+def _recipe_cell(entry) -> str:
+    if entry.recipe is None:
+        return "—" if entry.tier == abi_spec.REQUIRED else "— (native only)"
+    order = abi_spec.EMULATION_ORDER
+    deps = ", ".join(f"`{d}`" for d in entry.recipe.deps) or "(none)"
+    return f"{deps} — #{order.index(entry.name) + 1} in build order"
+
+
+def _muk_cell(entry) -> str:
+    cell = f"`{entry.impl_name}` → {entry.muk_ret}"
+    if entry.temps:
+        cell += ", keeps temps in the request map"
+    if entry.fills_status:
+        cell += ", fills `status`"
+    return cell
+
+
+def generate() -> str:
+    lines = [
+        "# PAX ABI function-table reference",
+        "",
+        "**Generated from `src/repro/core/abi_spec.py` — do not edit.**",
+        "Regenerate with `PYTHONPATH=src python docs/generate_abi_reference.py`;",
+        "CI fails when this file drifts from the spec "
+        "(`--check`, run in the tier-1 leg).",
+        "",
+        "Every row below is one `AbiEntry` of `ABI_TABLE` — the single "
+        "declarative spec",
+        "that generates the `PaxABI` methods (blocking, nonblocking `i*`, "
+        "persistent",
+        "`<name>_init`), the backend capability placeholders, and the "
+        "Mukautuva",
+        "translation wrappers.  See `ROADMAP.md` for the architecture notes "
+        "and",
+        "`serve/README.md` for how the serving tier drives the plan-group "
+        "surface.",
+        "",
+        "## Negotiation tiers",
+        "",
+    ]
+    for tier in (abi_spec.REQUIRED, abi_spec.OPTIONAL, abi_spec.FAULT):
+        n = sum(1 for e in abi_spec.ABI_TABLE if e.tier == tier)
+        lines.append(f"* **{tier}** ({n} entries): {_TIER_NOTE[tier]}")
+    lines += [
+        "",
+        "## Function table",
+        "",
+        "Columns: *arguments* list each argument's domain (`payload` passes "
+        "through,",
+        "handle domains are checked in the ABI layer and converted by "
+        "Mukautuva);",
+        "*bytes* is the payload argument tools account; *`i*`* / *`_init`* "
+        "mark the",
+        "generated nonblocking and persistent-plan variants; *plan* / "
+        "*group* name",
+        "the persistent compilation source (`recipe-plan`/`recipe-stage` = "
+        "the",
+        "emulation recipe compiles the plan or the fused Startall group "
+        "itself);",
+        "*recipe deps* lists the emulation dependencies and the entry's "
+        "position in",
+        "`EMULATION_ORDER` (the topological build order negotiation "
+        "resolves in);",
+        "*Mukautuva* gives the foreign symbol and return protocol of the "
+        "generated",
+        "conversion wrapper.",
+        "",
+        "| entry | tier | arguments | bytes | `i*` | `_init` | plan | group "
+        "| recipe deps | Mukautuva |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for e in abi_spec.ABI_TABLE:
+        lines.append("| " + " | ".join([
+            f"`{e.name}`",
+            e.tier,
+            _args_cell(e),
+            _bytes_cell(e),
+            "✓" if e.nonblocking else "—",
+            "✓" if e.persistent else "—",
+            _plan_cell(e),
+            _group_cell(e),
+            _recipe_cell(e),
+            _muk_cell(e),
+        ]) + " |")
+    lines += [
+        "",
+        "## Emulation build order",
+        "",
+        "`EMULATION_ORDER` — every recipe dependency precedes its "
+        "dependents, so",
+        "negotiation builds emulation closures in one forward pass:",
+        "",
+    ]
+    lines.append(" → ".join(f"`{n}`" for n in abi_spec.EMULATION_ORDER))
+    lines.append("")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 if docs/abi_reference.md drifts from the "
+                         "spec instead of rewriting it")
+    ap.add_argument("--out", default=OUT)
+    args = ap.parse_args(argv)
+    text = generate()
+    if args.check:
+        on_disk = open(args.out).read() if os.path.exists(args.out) else ""
+        if on_disk != text:
+            print(f"DRIFT: {args.out} does not match ABI_TABLE — regenerate "
+                  "with: PYTHONPATH=src python docs/generate_abi_reference.py",
+                  file=sys.stderr)
+            return 1
+        print(f"OK: {args.out} matches ABI_TABLE "
+              f"({len(abi_spec.ABI_TABLE)} entries)")
+        return 0
+    with open(args.out, "w") as f:
+        f.write(text)
+    print(f"wrote {args.out} ({len(abi_spec.ABI_TABLE)} entries)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

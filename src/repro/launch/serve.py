@@ -28,6 +28,10 @@ def main(argv=None):
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--impl", default=None)
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="KV page size in token positions")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="prompt positions fed per engine step")
     args = ap.parse_args(argv)
 
     # before the first jax operation: XLA_FLAGS is read at client creation
@@ -38,7 +42,9 @@ def main(argv=None):
     dist = make_dist(mesh, impl=args.impl)
     params = api.init(jax.random.PRNGKey(0))
     eng = ServeEngine(api, params, max_batch=args.batch,
-                      max_seq=args.prompt_len + args.new_tokens + 8, dist=dist)
+                      max_seq=args.prompt_len + args.new_tokens + 8, dist=dist,
+                      block_size=args.block_size,
+                      prefill_chunk=args.prefill_chunk)
 
     rng = np.random.default_rng(0)
     reqs = [
@@ -52,6 +58,10 @@ def main(argv=None):
     total_new = sum(len(r.out_tokens) for r in reqs)
     print(f"arch={cfg.name} impl={dist.abi.backend.name}: {args.batch} requests, "
           f"{total_new} tokens in {dt:.2f}s ({total_new/dt:.1f} tok/s)")
+    print(f"  stats: {eng.stats}")
+    if eng.paged:
+        print(f"  kv pool: {eng.alloc.live_blocks} live / "
+              f"{eng.alloc.num_blocks - 1} blocks of {eng.block_size}")
     for r in reqs[:2]:
         print(f"  req{r.rid}: {r.out_tokens[:12]}")
     return reqs

@@ -200,16 +200,84 @@ def attention(params, x, cfg, *, positions, causal=True, kv_cache: Optional[KVCa
 
 
 def _sdpa_decode(q, k, v, valid):
+    """``valid``: (Sq, Skv) shared across the batch, or (B, Sq, Skv) for
+    per-request masks (the paged path, where each row's length differs)."""
     B, Sq, Hq, D = q.shape
     Hkv = k.shape[2]
     G = Hq // Hkv
     qg = q.reshape(B, Sq, Hkv, G, D)
     scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(q.dtype)).astype(jnp.float32)
     scores = scores / math.sqrt(D)
-    scores = jnp.where(valid[None, None, None, :, :], scores, -1e30)
+    mask = (valid[None, None, None, :, :] if valid.ndim == 2
+            else valid[:, None, None, :, :])
+    scores = jnp.where(mask, scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(q.dtype))
     return out.reshape(B, Sq, Hq, D)
+
+
+# ---------------------------------------------------------------------------
+# Paged KV: attention that reads through per-request block tables (the
+# serving tier's decode path — see repro/serve/kv_cache.py for the
+# allocator; blocks are (block_size, Hkv, D) slabs and a block table maps a
+# request's logical page j to its physical block table[b, j]).
+# ---------------------------------------------------------------------------
+def paged_update(k_pages, v_pages, k_new, v_new, block_table, positions):
+    """Scatter new K/V rows into their pages.
+
+    ``k_pages``/``v_pages``: (num_blocks, block_size, Hkv, D);
+    ``k_new``/``v_new``: (B, S, Hkv, D) already rotated; ``block_table``:
+    (B, W) int32 physical ids; ``positions``: (B, S) absolute write
+    positions.  Inactive rows point their table at the reserved null block,
+    so their writes land in memory no live request reads.
+    """
+    bs = k_pages.shape[1]
+    blk = jnp.take_along_axis(block_table, positions // bs, axis=1)  # (B, S)
+    off = positions % bs
+    k_pages = k_pages.at[blk, off].set(k_new.astype(k_pages.dtype))
+    v_pages = v_pages.at[blk, off].set(v_new.astype(v_pages.dtype))
+    return k_pages, v_pages
+
+
+def paged_attention(q, k_pages, v_pages, block_table, qpos):
+    """Attention over a paged cache through per-request block tables.
+
+    ``q``: (B, Sq, Hq, D) rotated queries at absolute positions ``qpos``
+    (B, Sq); ``k_pages``/``v_pages``: (num_blocks, block_size, Hkv, D);
+    ``block_table``: (B, W).  The gather materializes each request's W
+    pages in logical order, so key position ``j`` of the gathered view IS
+    absolute position ``j`` of the sequence; the causal-valid mask
+    ``kpos <= qpos`` then masks both the unwritten tail and the null-block
+    padding in one stroke.
+    """
+    B, W = block_table.shape
+    bs = k_pages.shape[1]
+    k = k_pages[block_table].reshape(B, W * bs, *k_pages.shape[2:])
+    v = v_pages[block_table].reshape(B, W * bs, *v_pages.shape[2:])
+    kpos = jnp.arange(W * bs, dtype=jnp.int32)
+    valid = kpos[None, None, :] <= qpos[:, :, None]  # (B, Sq, W*bs)
+    return _sdpa_decode(q, k, v, valid)
+
+
+def attention_paged(params, x, cfg, k_pages, v_pages, block_table, positions):
+    """One attention block over a paged cache (the serving decode path).
+
+    ``x``: (B, Sq, d) at absolute ``positions`` (B, Sq); ``k_pages``/
+    ``v_pages``: (num_blocks, block_size, Hkv, D); ``block_table``: (B, W).
+    Projects QKV, rotates, scatters the new K/V rows into their pages
+    (write-then-attend: a token attends to itself and every predecessor in
+    the same chunk), and attends through the block table.  Returns
+    ``(out, (k_pages, v_pages))`` with the updated pages.
+    """
+    q, k, v = _project_qkv(params, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+    k_pages, v_pages = paged_update(k_pages, v_pages, k, v, block_table,
+                                    positions)
+    out = paged_attention(q, k_pages, v_pages, block_table, positions)
+    out = out.reshape(*x.shape[:2], -1)
+    out = out @ params["wo"].astype(x.dtype)
+    return out, (k_pages, v_pages)
 
 
 def init_kv_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16, d_in=None) -> KVCache:

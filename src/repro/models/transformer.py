@@ -21,6 +21,7 @@ from ..runtime.sharding import shard
 from .attention import (
     KVCache,
     attention,
+    attention_paged,
     init_attention,
     init_kv_cache,
     spec_attention,
@@ -200,6 +201,98 @@ def decode_step(params, token, cache, index, cfg, dist=None):
     x = apply_norm(params["final_norm"], x, cfg.norm)
     logits = unembed(params["embed"], x, cfg.tie_embeddings)
     return logits[:, 0, :], new_cache
+
+
+# ---------------------------------------------------------------------------
+# paged serving: decode / chunked prefill through per-request block tables
+# (the serving tier — repro/serve — owns the allocator; this is the model
+# side: fixed-size KV blocks, block-table indirection, per-request lengths)
+# ---------------------------------------------------------------------------
+def init_paged_cache(cfg, num_blocks: int, block_size: int,
+                     dtype=jnp.bfloat16) -> KVCache:
+    """The paged KV slab: ``(L, num_blocks, block_size, kv_heads, head_dim)``
+    per side.  Block 0 is the serving tier's reserved null block."""
+    hd = cfg.resolved_head_dim
+    shape = (cfg.num_layers, num_blocks, block_size, cfg.num_kv_heads, hd)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def paged_cache_specs(cfg):
+    """Pages carry no batch dim — shard the kv-head axis over tp, replicate
+    the block pool (every dp replica serves its own requests)."""
+    one = P(None, None, None, "model", None)
+    return KVCache(one, one)
+
+
+def _layer_paged(p, x, pages_l, block_tables, positions, cfg, dist):
+    h = apply_norm(p["ln1"], x, cfg.norm)
+    a, new_pages_l = attention_paged(
+        p["attn"], h, cfg, pages_l[0], pages_l[1], block_tables, positions)
+    x = x + a
+    h2 = apply_norm(p["ln2"], x, cfg.norm)
+    if cfg.moe is not None:
+        f, _ = moe_block(p["moe"], h2, cfg, dist)
+    else:
+        f = mlp(p["mlp"], h2, cfg.activation)
+    return x + f, KVCache(*new_pages_l)
+
+
+def decode_step_paged(params, token, pages, block_tables, lengths, cfg,
+                      dist=None):
+    """One decode step through per-request block tables.
+
+    ``token``: (B, 1) int32; ``pages``: stacked :func:`init_paged_cache`
+    KVCache; ``block_tables``: (B, W) int32 physical block ids;
+    ``lengths``: (B,) int32 tokens already cached per request — the new
+    token is written at position ``lengths[b]`` and attends to
+    ``0..lengths[b]``.  Inactive rows point at the null block with length 0.
+    Returns ``(logits (B, vocab), new_pages)``.
+    """
+    cdt = dtype_of(cfg.compute_dtype)
+    positions = lengths[:, None].astype(jnp.int32)  # (B, 1)
+    x = embed_tokens(params["embed"], token, cfg.d_model, cdt)
+
+    def scan_fn(carry, xs):
+        pl, pages_l = xs
+        return _layer_paged(pl, carry, pages_l, block_tables, positions,
+                            cfg, dist)
+
+    x, new_pages = scan_layers(scan_fn, x, (params["layers"], pages),
+                               cfg.num_layers, cfg.parallelism.scan_layers)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = unembed(params["embed"], x, cfg.tie_embeddings)
+    return logits[:, 0, :], new_pages
+
+
+def prefill_chunk_paged(params, tokens, pages, block_tables, start, cfg,
+                        dist=None):
+    """One prefill chunk into the paged cache.
+
+    ``tokens``: (B, C) int32 — positions ``start .. start+C`` of the
+    prompt; chunks of one request run with B=1, so admitting a long prompt
+    never changes the decode batch shape.  The final chunk may carry pad
+    tokens past the true prompt length: their K/V land at positions the
+    decode loop overwrites before its mask ever exposes them (write-then-
+    read per position), so padding needs no separate masking.  Returns
+    ``(logits (B, C, vocab), new_pages)`` — the caller samples from the
+    last *real* position's row.
+    """
+    cdt = dtype_of(cfg.compute_dtype)
+    B, C = tokens.shape
+    positions = (jnp.int32(start)
+                 + jnp.arange(C, dtype=jnp.int32)[None, :]).repeat(B, 0)
+    x = embed_tokens(params["embed"], tokens, cfg.d_model, cdt)
+
+    def scan_fn(carry, xs):
+        pl, pages_l = xs
+        return _layer_paged(pl, carry, pages_l, block_tables, positions,
+                            cfg, dist)
+
+    x, new_pages = scan_layers(scan_fn, x, (params["layers"], pages),
+                               cfg.num_layers, cfg.parallelism.scan_layers)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = unembed(params["embed"], x, cfg.tie_embeddings)
+    return logits, new_pages
 
 
 def prefill(params, tokens, cfg, dist=None, max_seq: Optional[int] = None):

@@ -1,26 +1,50 @@
-"""Batched serving engine: continuous-batching slot manager over the
-model's prefill/decode steps.
+"""Serving engine: continuous batching over a paged KV cache, with decode
+collectives driven by ONE persistent plan group per token step.
 
-* fixed ``max_batch`` decode slots; requests queue up and are admitted as
-  slots free (continuous batching at step granularity);
-* prefill runs per-admission (chunked prefill is a config lever);
-* decode is one jitted ``decode_step`` for the whole slot batch, KV cache
-  donated (in-place on device);
-* sampling: greedy / temperature / top-k.
+Architecture (dense/moe families):
 
-This engine drives the decode cells of the dry-run shapes and the serve
-example; the ABI is underneath every collective the sharded decode step
-issues.
+* **paged KV** — one preallocated block slab
+  (:func:`~repro.models.transformer.init_paged_cache`), blocks owned per
+  request through :class:`~.kv_cache.BlockAllocator` handles; decode
+  attention reads through per-request block tables
+  (:func:`~repro.models.transformer.decode_step_paged`).
+* **continuous batching** — :class:`~.scheduler.Scheduler` admits/evicts
+  at step granularity; each engine step runs at most one B=1 prefill
+  *chunk* (long prompts never stall running decodes) plus one full-width
+  decode step.
+* **fixed decode shape** — decode always runs the full ``max_batch``
+  batch; inactive slots carry token 0, length 0, and an all-null block
+  table (their garbage writes land in the reserved null block).  Because
+  the compiled decode function and each row's float math are batch-
+  composition-independent, continuous-batched output is **token-identical
+  to the one-request-at-a-time oracle** — the contract
+  ``tests/test_serve_engine.py`` pins.
+* **per-request RNG** — sampling keys are
+  ``fold_in(fold_in(PRNGKey(seed), rid), step)``; a request's sampled
+  tokens never depend on which other requests share its batch (the old
+  engine-wide ``split`` chain did — that was the PR-8 bugfix).
+* **decode plan group** — per-token tensor-parallel control-plane sync
+  (sampled tokens + active mask broadcast from tp root 0, the
+  sample-on-rank-0 idiom) is built ONCE at engine init as two persistent
+  ``bcast_init`` plans fused into one ``plan_group("decode-tp")``; every
+  token step is a single ``group.start()/wait()`` pair — no per-token ABI
+  work, and a ``CallCounter`` attached via ``attach_tool`` counts exactly
+  one ``decode-tp`` call per sampling step.
+
+ssm/hybrid families keep the legacy static-batch path (no KV pages to
+page).
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from .kv_cache import BlockAllocator
+from .scheduler import DECODE, Scheduler
 
 
 @dataclasses.dataclass
@@ -44,12 +68,79 @@ def sample(logits, key, temperature: float, top_k: int):
     return jax.random.categorical(key, logits).astype(jnp.int32)
 
 
+class DecodeSync:
+    """The per-token decode collective, persistent-plan-group edition.
+
+    Sampling happens on the tensor-parallel root; the sampled token vector
+    and the active-slot mask are broadcast to the other tp ranks so every
+    rank feeds identical tokens into the next decode step (at tp=1 the
+    broadcast is the identity, but the plan group still runs — which is
+    what lets a 1-device test count it).  Both broadcasts are built ONCE as
+    persistent plans and fused into one ``plan_group`` named
+    ``"decode-tp"``; :meth:`step` is a single ``start()/wait()`` pair.
+
+    :meth:`step_pooled` runs the same two broadcasts through the pooled
+    nonblocking ``ibcast``/``waitall`` path — the bitwise reference the
+    multidev battery compares the group against.
+    """
+
+    NAME = "decode-tp"
+
+    def __init__(self, abi, comm, max_batch: int, mesh) -> None:
+        from jax.sharding import PartitionSpec as P
+
+        from ..core.compat import shard_map
+
+        self.abi = abi
+        self.comm = comm
+        ex = jax.ShapeDtypeStruct((max_batch,), jnp.int32)
+        self._p_tok = abi.bcast_init(ex, 0, comm)
+        self._p_act = abi.bcast_init(ex, 0, comm)
+        self.group = abi.plan_group([self._p_tok, self._p_act],
+                                    name=self.NAME)
+
+        # the collectives bind mesh axis names, so the start/wait pair runs
+        # under an *eager* shard_map (payloads replicated): each call
+        # re-drives the plan protocol and the tool interposition — one
+        # before/after per token step, which is what the counting test pins
+        def _group_call(tok, act):
+            outs = abi.wait(self.group.start([tok, act]))
+            return outs[0], outs[1]
+
+        def _pooled_call(tok, act):
+            outs = abi.waitall([abi.ibcast(tok, 0, comm),
+                                abi.ibcast(act, 0, comm)])
+            return outs[0], outs[1]
+
+        spec = (P(), P())
+        self._group_call = shard_map(_group_call, mesh=mesh,
+                                     in_specs=spec, out_specs=spec)
+        self._pooled_call = shard_map(_pooled_call, mesh=mesh,
+                                      in_specs=spec, out_specs=spec)
+
+    def step(self, tokens: np.ndarray, active: np.ndarray):
+        """ONE group start/wait for the whole token step."""
+        tok, act = self._group_call(jnp.asarray(tokens), jnp.asarray(active))
+        return np.asarray(tok), np.asarray(act)
+
+    def step_pooled(self, tokens: np.ndarray, active: np.ndarray):
+        """The pooled ``i*`` reference path (two requests, one waitall)."""
+        tok, act = self._pooled_call(jnp.asarray(tokens), jnp.asarray(active))
+        return np.asarray(tok), np.asarray(act)
+
+    def free(self) -> None:
+        self.group.free()
+        self._p_tok.free()
+        self._p_act.free()
+
+
 class ServeEngine:
-    """Single-sequence-slot engine (max_batch=1 per slot group on CPU;
-    batched decode across slots)."""
+    """Continuous-batching engine over ``max_batch`` decode slots."""
 
     def __init__(self, api, params, *, max_batch: int = 4, max_seq: int = 512,
-                 dist=None, eos_id: Optional[int] = None) -> None:
+                 dist=None, eos_id: Optional[int] = None,
+                 block_size: int = 16, num_blocks: Optional[int] = None,
+                 prefill_chunk: int = 32, seed: int = 0) -> None:
         self.api = api
         self.cfg = api.cfg
         self.params = params
@@ -57,23 +148,183 @@ class ServeEngine:
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.eos_id = eos_id
-        self._decode = jax.jit(
-            lambda p, tok, cache, idx: api.decode_step(p, tok, cache, idx, dist))
-        self._key = jax.random.PRNGKey(0)
-        self.stats = {"prefill_tokens": 0, "decode_steps": 0, "requests": 0}
+        self.seed = seed
+        self._base_key = jax.random.PRNGKey(seed)
+        self.stats = {"prefill_tokens": 0, "decode_steps": 0,
+                      "prefill_chunks": 0, "requests": 0, "steps": 0}
+        self.paged = self.cfg.family in ("dense", "moe")
+        self.decode_sync: Optional[DecodeSync] = None
 
-    # -- single-request generation (prefill + decode loop) ------------------
+        if self.paged:
+            from ..models import transformer
+            width = -(-max_seq // block_size)
+            if num_blocks is None:
+                num_blocks = max_batch * width + 1   # +1: reserved null block
+            self.block_size = block_size
+            self.prefill_chunk = prefill_chunk
+            self.alloc = BlockAllocator(num_blocks, block_size)
+            self.scheduler = Scheduler(self.alloc, max_batch=max_batch,
+                                       prefill_chunk=prefill_chunk,
+                                       table_width=width)
+            self._pages = transformer.init_paged_cache(
+                self.cfg, num_blocks, block_size)
+            # the two compiled steps of the serving loop, shapes frozen:
+            # prefill (1, chunk), decode (max_batch, 1); pages donated so
+            # the slab updates in place on device
+            self._prefill_chunk_fn = jax.jit(
+                lambda p, toks, pages, table, start: transformer.
+                prefill_chunk_paged(p, toks, pages, table, start,
+                                    self.cfg, dist),
+                donate_argnums=(2,))
+            self._decode_paged = jax.jit(
+                lambda p, tok, pages, tables, lengths: transformer.
+                decode_step_paged(p, tok, pages, tables, lengths,
+                                  self.cfg, dist),
+                donate_argnums=(2,))
+            if dist is not None:
+                self.decode_sync = DecodeSync(dist.abi, dist.tp_comm,
+                                              max_batch, dist.mesh)
+        else:
+            self._decode = jax.jit(
+                lambda p, tok, cache, idx: api.decode_step(
+                    p, tok, cache, idx, dist))
+
+    # -- per-request RNG (batch-composition-independent) --------------------
+    def _req_key(self, rid: int, step: int):
+        """Key for request ``rid``'s ``step``-th sampled token: depends on
+        (engine seed, rid, step) ONLY — never on batch composition."""
+        return jax.random.fold_in(
+            jax.random.fold_in(self._base_key, rid), step)
+
+    def _sample_one(self, row_logits: np.ndarray, req: Request) -> int:
+        if req.temperature <= 0.0:
+            return int(np.argmax(row_logits))
+        key = self._req_key(req.rid, len(req.out_tokens))
+        return int(sample(jnp.asarray(row_logits), key,
+                          float(req.temperature), int(req.top_k)))
+
+    def _append(self, req: Request, tok: int) -> None:
+        req.out_tokens.append(tok)
+        if self.eos_id is not None and tok == self.eos_id:
+            req.done = True
+        if len(req.out_tokens) >= req.max_new_tokens:
+            req.done = True
+
+    # -- public API ---------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        """Queue a request (admitted by the next :meth:`step` with a free
+        slot and enough KV blocks)."""
+        if not self.paged:
+            raise NotImplementedError(
+                f"submit/step serving requires a paged family, not "
+                f"{self.cfg.family}; use run()")
+        if len(req.prompt) == 0:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        self.scheduler.submit(req)
+        self.stats["requests"] += 1
+
+    @property
+    def has_work(self) -> bool:
+        return self.paged and self.scheduler.has_work
+
     def generate(self, prompt: np.ndarray, *, max_new_tokens: int = 32,
                  temperature: float = 0.0, top_k: int = 0) -> np.ndarray:
         reqs = [Request(0, prompt, max_new_tokens, temperature, top_k)]
         self.run(reqs)
         return np.asarray(reqs[0].out_tokens, np.int32)
 
-    # -- batched run ----------------------------------------------------------
     def run(self, requests: list[Request]) -> None:
-        """Greedy static batching: pad all prompts to one length, prefill
-        together, decode round-robin until every request finishes."""
-        self.stats["requests"] += len(requests)
+        """Serve a closed batch to completion (continuous-batched on the
+        paged path; legacy static batching for ssm/hybrid)."""
+        if self.paged:
+            for r in requests:
+                self.submit(r)
+            self.drain()
+        else:
+            self.stats["requests"] += len(requests)
+            self._run_static(requests)
+
+    def drain(self) -> None:
+        """Step until the queue and every slot are empty."""
+        while self.has_work:
+            self.step()
+
+    # -- the engine step -----------------------------------------------------
+    def step(self) -> None:
+        """One serving step: admit waiting requests into free slots, run at
+        most one prefill chunk, then one decode step for every decoding
+        slot (ending in one ``decode-tp`` plan-group start/wait)."""
+        sched = self.scheduler
+        self.stats["steps"] += 1
+        sched.admit()
+        i = sched.prefill_slot()
+        if i is not None:
+            self._prefill_step(i)
+        dslots = sched.decode_slots()
+        if dslots:
+            self._decode_step(dslots)
+
+    def _prefill_step(self, i: int) -> None:
+        """Feed the next B=1 prompt chunk of slot ``i`` into its KV blocks;
+        on the final chunk, sample the request's first token."""
+        seq = self.scheduler.slots[i]
+        req, C = seq.req, self.prefill_chunk
+        start = seq.fed
+        real = np.asarray(req.prompt[start:start + C], np.int32)
+        chunk = np.zeros((1, C), np.int32)
+        chunk[0, :len(real)] = real
+        logits, self._pages = self._prefill_chunk_fn(
+            self.params, jnp.asarray(chunk), self._pages,
+            jnp.asarray(seq.table[None]), jnp.int32(start))
+        seq.fed = start + C
+        self.stats["prefill_tokens"] += int(len(real))
+        self.stats["prefill_chunks"] += 1
+        if seq.prefill_done:
+            last = (seq.prompt_len - 1) - start    # last real row of chunk
+            tok = self._sample_one(np.asarray(logits[0, last]), req)
+            self._append(req, tok)
+            if req.done:
+                self.scheduler.finish(i)
+            else:
+                seq.state = DECODE
+
+    def _decode_step(self, dslots: list[int]) -> None:
+        """One full-width decode step.  Inactive slots run too (fixed
+        shape), but with length 0 and an all-null block table: their writes
+        land in the reserved null block and their logits are discarded."""
+        sched = self.scheduler
+        B = self.max_batch
+        toks = np.zeros((B, 1), np.int32)
+        lengths = np.zeros((B,), np.int32)
+        tables = np.zeros((B, sched.table_width), np.int32)  # NULL_BLOCK rows
+        for i in dslots:
+            seq = sched.slots[i]
+            toks[i, 0] = seq.req.out_tokens[-1]
+            lengths[i] = seq.prompt_len + len(seq.req.out_tokens) - 1
+            tables[i] = seq.table
+        logits, self._pages = self._decode_paged(
+            self.params, jnp.asarray(toks), self._pages,
+            jnp.asarray(tables), jnp.asarray(lengths))
+        self.stats["decode_steps"] += 1
+        logits_np = np.asarray(logits)
+        sampled = np.zeros((B,), np.int32)
+        active = np.zeros((B,), np.int32)
+        for i in dslots:
+            sampled[i] = self._sample_one(logits_np[i], sched.slots[i].req)
+            active[i] = 1
+        if self.decode_sync is not None:
+            sampled, active = self.decode_sync.step(sampled, active)
+        for i in dslots:
+            seq = sched.slots[i]
+            self._append(seq.req, int(sampled[i]))
+            if seq.req.done:
+                sched.finish(i)
+
+    # -- legacy static batching (ssm/hybrid: no KV pages) --------------------
+    def _run_static(self, requests: list[Request]) -> None:
+        """Pad all prompts to one length, prefill together, decode
+        round-robin until every request finishes (the pre-PR-8 path, kept
+        for the recurrent families)."""
         B = len(requests)
         S = max(len(r.prompt) for r in requests)
         tokens = np.zeros((B, S), np.int32)
@@ -81,68 +332,33 @@ class ServeEngine:
             tokens[i, S - len(r.prompt):] = r.prompt  # left-pad
         tokens = jnp.asarray(tokens)
 
-        from ..models import transformer, vlm
-
-        if self.cfg.family in ("dense", "moe"):
-            logits, cache, idx = transformer.prefill(
-                self.params, tokens, self.cfg, self.dist, max_seq=self.max_seq)
-        elif self.cfg.family in ("ssm", "hybrid"):
-            # recurrent prefill: feed tokens stepwise (chunked prefill would
-            # use the chunked kernels; step-wise keeps the example simple)
-            state = self.api.decode_init(B, self.max_seq)
-            logits = None
-            for t in range(S):
-                logits, state = self._decode(self.params, tokens[:, t:t + 1],
-                                             state, jnp.int32(t))
-            cache, idx = state, jnp.int32(S)
-        else:
-            raise NotImplementedError(self.cfg.family)
+        state = self.api.decode_init(B, self.max_seq)
+        logits = None
+        for t in range(S):
+            logits, state = self._decode(self.params, tokens[:, t:t + 1],
+                                         state, jnp.int32(t))
+        idx = jnp.int32(S)
         self.stats["prefill_tokens"] += int(B * S)
 
         max_new = max(r.max_new_tokens for r in requests)
-        cur = self._sample_batch(logits, requests)
-        self._append_tokens(cur, requests)
-        for step in range(1, max_new):
+        cur = self._sample_rows(logits, requests)
+        self._append_live(cur, requests)
+        for _ in range(1, max_new):
             if all(r.done for r in requests):
                 break
-            logits, cache = self._decode(self.params, jnp.asarray(cur)[:, None],
-                                         cache, idx)
+            logits, state = self._decode(self.params,
+                                         jnp.asarray(cur)[:, None], state, idx)
             idx = idx + 1
             self.stats["decode_steps"] += 1
-            cur = self._sample_batch(logits, requests)
-            self._append_tokens(cur, requests)
+            cur = self._sample_rows(logits, requests)
+            self._append_live(cur, requests)
 
-    def _append_tokens(self, cur, requests: list[Request]) -> None:
-        """Record one sampled token per non-done request, applying that
-        request's own eos / max_new_tokens cutoffs (including on the very
-        first, prefill-sampled token)."""
+    def _sample_rows(self, logits, requests: list[Request]) -> np.ndarray:
+        logits_np = np.asarray(logits)
+        return np.asarray([self._sample_one(logits_np[i], r)
+                           for i, r in enumerate(requests)], np.int32)
+
+    def _append_live(self, cur, requests: list[Request]) -> None:
         for i, r in enumerate(requests):
-            if r.done:
-                continue
-            tok = int(cur[i])
-            r.out_tokens.append(tok)
-            if self.eos_id is not None and tok == self.eos_id:
-                r.done = True
-            if len(r.out_tokens) >= r.max_new_tokens:
-                r.done = True
-
-    def _next_key(self):
-        self._key, sub = jax.random.split(self._key)
-        return sub
-
-    def _sample_batch(self, logits, requests: list[Request]) -> np.ndarray:
-        """Sample one token per request honoring *that request's* sampling
-        params.  Rows are grouped by (temperature, top_k) so the homogeneous
-        batch (the common case) stays a single device call."""
-        groups: dict[tuple[float, int], list[int]] = {}
-        for i, r in enumerate(requests):
-            groups.setdefault((float(r.temperature), int(r.top_k)), []).append(i)
-        if len(groups) == 1:
-            (temperature, top_k), _ = next(iter(groups.items()))
-            return np.asarray(sample(logits, self._next_key(), temperature, top_k))
-        out = np.zeros((len(requests),), np.int32)
-        for (temperature, top_k), idxs in sorted(groups.items()):
-            rows = sample(logits[np.asarray(idxs)], self._next_key(),
-                          temperature, top_k)
-            out[np.asarray(idxs)] = np.asarray(rows)
-        return out
+            if not r.done:
+                self._append(r, int(cur[i]))

@@ -17,6 +17,9 @@ Sections:
  10. plan groups (Startall): group == per-plan zero1, dp=2 and dp=8
  11. hierarchical multi-axis alltoallv (world comm, 2x4 mesh)
  12. fused wire kernels inside real ring schedules (plan-time selection)
+ 13. fault tier: injected rank death on three dispatch paths
+ 14. elastic-dp: kill rank 5 at dp=8, shrink, bitwise resume at dp=4
+ 15. serving decode-tp plan group == pooled i* bcast (tp=4)
 """
 import os
 
@@ -823,5 +826,54 @@ for impl14 in ("paxi", "minimal", "ompix"):
     shutil.rmtree(ckdir14, ignore_errors=True)
     print(f"  {impl14}: death at step {KILL_AT14} -> dp=4 resume "
           "bitwise == oracle OK")
+
+# ---------------------------------------------------------------------------
+section("15. serving decode-tp plan group == pooled i* bcast (tp=4)")
+# The serve engine's per-token control-plane sync (sampled tokens + active
+# mask broadcast from tp root 0) rides ONE persistent plan group built at
+# engine init.  Across backends, the group start/wait must be bitwise equal
+# to the pooled nonblocking ibcast/waitall reference on genuinely different
+# per-rank data (tp_comm spans "model", size 4), and a counting tool must
+# see exactly one "decode-tp" call per step and none of the pooled entries.
+from repro.serve.engine import DecodeSync
+
+MB15 = 8
+tok15 = jnp.arange(4 * MB15, dtype=jnp.int32) * 3 + 1   # rank-major blocks
+act15 = (jnp.arange(4 * MB15, dtype=jnp.int32) % 2).astype(jnp.int32)
+exp_tok15 = np.tile(np.asarray(tok15[:MB15]), 4)        # root 0's block
+exp_act15 = np.tile(np.asarray(act15[:MB15]), 4)
+for impl15 in ("paxi", "minimal", "ompix"):
+    if impl15 not in C.available_backends():
+        continue
+    dist15 = make_dist(mesh, impl=impl15)
+    abi15 = dist15.abi
+    cc15 = C.CallCounter()
+    abi15.attach_tool(cc15)
+    ds15 = DecodeSync(abi15, dist15.tp_comm, MB15, mesh)
+    spec15 = (P("model"), P("model"))
+
+    def grp15(t, a, _ds=ds15, _abi=abi15):
+        outs = _abi.wait(_ds.group.start([t, a]))
+        return outs[0], outs[1]
+
+    def pool15(t, a, _ds=ds15, _abi=abi15):
+        outs = _abi.waitall([_abi.ibcast(t, 0, _ds.comm),
+                             _abi.ibcast(a, 0, _ds.comm)])
+        return outs[0], outs[1]
+
+    for _rep15 in range(3):   # restartable: same group slot every step
+        gt15, ga15 = shard_map(grp15, mesh=mesh, in_specs=spec15,
+                               out_specs=spec15)(tok15, act15)
+        pt15, pa15 = shard_map(pool15, mesh=mesh, in_specs=spec15,
+                               out_specs=spec15)(tok15, act15)
+        np.testing.assert_array_equal(np.asarray(gt15), np.asarray(pt15))
+        np.testing.assert_array_equal(np.asarray(ga15), np.asarray(pa15))
+    np.testing.assert_array_equal(np.asarray(gt15), exp_tok15)
+    np.testing.assert_array_equal(np.asarray(ga15), exp_act15)
+    assert cc15.counts[DecodeSync.NAME] == 3, cc15.counts
+    assert cc15.counts["bcast"] == 6, cc15.counts  # pooled reference only
+    ds15.free()
+    print(f"  {impl15}: decode-tp group == pooled (bitwise), "
+          "1 group call/step OK")
 
 print("BATTERY PASSED")

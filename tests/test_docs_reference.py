@@ -1,0 +1,47 @@
+"""The spec-generated ABI reference may never drift from ``ABI_TABLE``
+(the docs analogue of the negotiation contract: one spec, every consumer
+generated from it — including the human-readable one)."""
+import importlib.util
+import os
+
+from repro.core import abi_spec
+
+_DOCS = os.path.join(os.path.dirname(__file__), "..", "docs")
+
+
+def _load_generator():
+    spec = importlib.util.spec_from_file_location(
+        "generate_abi_reference",
+        os.path.join(_DOCS, "generate_abi_reference.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_reference_matches_spec():
+    gen = _load_generator()
+    on_disk = open(os.path.join(_DOCS, "abi_reference.md")).read()
+    assert on_disk == gen.generate(), (
+        "docs/abi_reference.md drifted from ABI_TABLE; regenerate with: "
+        "PYTHONPATH=src python docs/generate_abi_reference.py")
+
+
+def test_reference_covers_every_entry_and_tier():
+    gen = _load_generator()
+    text = gen.generate()
+    for e in abi_spec.ABI_TABLE:
+        assert f"`{e.name}`" in text, e.name
+        assert f"`{e.impl_name}`" in text, e.impl_name
+    for tier in (abi_spec.REQUIRED, abi_spec.OPTIONAL, abi_spec.FAULT):
+        assert f"**{tier}**" in text
+    # the build order is part of the contract the doc renders
+    assert " → ".join(f"`{n}`" for n in abi_spec.EMULATION_ORDER) in text
+
+
+def test_check_mode_detects_drift(tmp_path):
+    gen = _load_generator()
+    good = tmp_path / "abi_reference.md"
+    good.write_text(gen.generate())
+    assert gen.main(["--check", "--out", str(good)]) == 0
+    good.write_text(gen.generate().replace("allreduce", "allredoos", 1))
+    assert gen.main(["--check", "--out", str(good)]) == 1
