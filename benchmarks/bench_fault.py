@@ -21,9 +21,32 @@ and recovery replay must be bounded by the checkpoint cadence.
   interval, never more (a regression here means the supervisor restored an
   older checkpoint than the latest, or the save cadence silently drifted).
 
+PR 9 adds the serving counterparts:
+
+* ``serve_fault_dispatch_ratio`` — the decode-tp plan-group start+wait
+  (the serving engine's per-token control-plane sync) on a context in full
+  post-recovery supervision state — liveness monitor installed (failure
+  detector chained onto ``local_failed``), the fault sequence exercised,
+  and the group **rebuilt on a shrunk survivor comm** — over a twin that
+  was never supervised.  Liveness is amortized (heartbeats ride the
+  supervisor cadence, not the token step), detector chaining is off the
+  dispatch path, and the survivor-comm rebuild dispatches through the same
+  layout-keyed plans, so the gate pins the ratio at 1.0 ± 5%: serving
+  fault tolerance is free until a rank actually dies.
+* ``serve_recovery_tokens_replayed`` — a mid-flight replay drill through
+  the real scheduler + supervisor eviction pass: three decode-state slots
+  with generated tokens are evicted, discarded, and re-queued in admission
+  order.  Gate: must stay ≤ the companion ``serve_recovery_replay_ceiling``
+  (in-flight slots × max_new_tokens) — replay cost is bounded by the
+  in-flight token budget, never by queue depth or history.  The bitwise
+  token-identity of the replayed streams is proven end-to-end in
+  tests/multidev_battery.py §16 (tp=4, mid-decode kill, three dispatch
+  paths); the bench gates the accounting bound.
+
 The end-to-end elastic legs (kill a rank at dp=8, shrink, bitwise resume
-at dp=4) live in tests/multidev_battery.py sections 13–14; this module
-only measures the two numeric contracts check_regression.py gates.
+at dp=4) live in tests/multidev_battery.py sections 13–14 and the serving
+kill-recovery leg in section 16; this module only measures the numeric
+contracts check_regression.py gates.
 """
 from __future__ import annotations
 
@@ -31,6 +54,7 @@ import tempfile
 from collections import Counter
 
 import jax.numpy as jnp
+import numpy as np
 
 import repro.core as C
 from benchmarks.bench_message_rate import (_median, _mesh,
@@ -79,6 +103,76 @@ def _replay_overhead(total: int, every: int, fail_at: int) -> float:
     return float(sum(1 for s, n in calls.items() if s < fail_at and n > 1))
 
 
+def _serve_group_items(mesh) -> dict:
+    """The two sides of ``serve_fault_dispatch_ratio``: the decode-tp
+    group's hoisted start/wait pair on a never-supervised context and on a
+    twin in full post-recovery supervision state."""
+    from repro.runtime.liveness import HeartbeatMonitor
+    from repro.serve.engine import DecodeSync
+
+    MB = 2
+    tok = jnp.zeros((MB,), jnp.int32)
+
+    # both groups sit on axis-free self comms so the hoisted start/wait is
+    # timeable like every other bench item (axes-bound dispatch identity
+    # across comm kinds is pinned by the Table-1 gates); what differs is
+    # everything supervision adds around the dispatch
+    abi_plain = C.pax_init(mesh, impl="paxi")
+    ds_plain = DecodeSync(abi_plain, C.PAX_COMM_SELF, MB, mesh)
+
+    abi_sup = C.pax_init(mesh, impl="paxi")
+    tp = abi_sup.comm_from_axes(("model",), "tp")
+    mon = HeartbeatMonitor(abi_sup, tp, mesh).install()
+    mon.beat()                                  # live detector state
+    spare = abi_sup.comm_shrink(C.PAX_COMM_WORLD)
+    abi_sup.comm_revoke(spare)                  # non-empty revoked set
+    abi_sup.comm_failure_ack(C.PAX_COMM_WORLD)  # non-empty acked map
+    abi_sup.comm_agree(1, C.PAX_COMM_WORLD)
+    survivor = abi_sup.comm_shrink(C.PAX_COMM_SELF)  # recovery-shaped
+    ds_sup = DecodeSync(abi_sup, survivor, MB, mesh)  # rebuild: group on
+    mon.beat()                                        # the shrunk comm
+    return {"plain": (ds_plain.group, [tok, tok]),
+            "supervised": (ds_sup.group, [tok, tok])}
+
+
+def _serve_replay_drill(mesh) -> tuple[float, float]:
+    """Run the supervisor's replay pass over a real mid-flight scheduler:
+    three decode slots with generated tokens, evicted and re-queued in
+    admission order.  Returns (tokens_replayed, ceiling)."""
+    from repro.serve.engine import DecodeSync, Request
+    from repro.serve.kv_cache import BlockAllocator
+    from repro.serve.scheduler import DECODE, Scheduler
+    from repro.serve.supervisor import ServeSupervisor
+
+    MAXB, MAXNEW = 3, 8
+    alloc = BlockAllocator(num_blocks=16, block_size=4)
+    sched = Scheduler(alloc, max_batch=MAXB, prefill_chunk=4, table_width=4)
+    for i in range(MAXB):
+        sched.submit(Request(i, np.arange(1, 5 + i, dtype=np.int32),
+                             max_new_tokens=MAXNEW))
+    sched.admit()
+    mid = (3, 5, 2)                       # tokens generated before the kill
+    for slot, n in zip(sched.slots, mid):
+        slot.state = DECODE
+        slot.req.out_tokens = list(range(100, 100 + n))
+
+    abi = C.pax_init(mesh, impl="paxi")
+    ds = DecodeSync(abi, C.PAX_COMM_SELF, MAXB, mesh)
+
+    class _Eng:                            # what the replay pass reads
+        decode_sync, scheduler = ds, sched
+
+    sup = ServeSupervisor(_Eng())
+    sup._replay_inflight()
+    ds.free()
+    rep = sup.report
+    assert rep.tokens_replayed == sum(mid), rep
+    assert rep.requeued == MAXB and alloc.live_blocks == 0, rep
+    assert [r.rid for r in sched.waiting] == [0, 1, 2]   # admission order
+    assert all(not r.out_tokens for r in sched.waiting)  # from-the-prompt
+    return float(rep.tokens_replayed), float(MAXB * MAXNEW)
+
+
 def run() -> list[tuple[str, float, str, str]]:
     mesh = _mesh()
     rows = []
@@ -104,6 +198,29 @@ def run() -> list[tuple[str, float, str, str]]:
     rows.append(("recovery_checkpoint_every", float(every), "steps",
                  "companion bound for recovery_steps_overhead: the save "
                  "cadence of the measured supervised run"))
+
+    sitems = _serve_group_items(mesh)
+    x0 = jnp.zeros((1,), jnp.float32)      # unused by group items
+    sses = _persistent_session_ns(sitems, x0)
+    sratio = _median([s / p for s, p in zip(sses["supervised"],
+                                            sses["plain"])])
+    rows.append(("serve_fault_dispatch_ratio", sratio, "x",
+                 f"decode-tp group start+wait, post-recovery supervised "
+                 f"(monitor installed, group rebuilt on shrunk survivor "
+                 f"comm) {min(sses['supervised']):.0f}ns vs never-"
+                 f"supervised twin {min(sses['plain']):.0f}ns; median "
+                 "per-round ratio, interleaved session (gate: 0.95..1.05)"))
+
+    replayed_t, ceiling = _serve_replay_drill(mesh)
+    rows.append(("serve_recovery_tokens_replayed", replayed_t, "tokens",
+                 "generated tokens discarded and re-queued by the "
+                 "supervisor's mid-flight replay drill (3 decode slots; "
+                 "token identity proven in battery §16; gate: <= "
+                 "serve_recovery_replay_ceiling)"))
+    rows.append(("serve_recovery_replay_ceiling", ceiling, "tokens",
+                 "companion bound for serve_recovery_tokens_replayed: "
+                 "in-flight slots x max_new_tokens of the drill — replay "
+                 "is bounded by the in-flight token budget"))
     return rows
 
 

@@ -88,6 +88,17 @@ baseline box and the CI runner:
   injected ``PAX_ERR_PROC_FAILED`` in a supervised run) must stay ≤ the
   same run's ``recovery_checkpoint_every`` — restart replays at most one
   checkpoint interval.
+* **serving fault gates** (PR 9, from the current run alone):
+  ``serve_fault_dispatch_ratio`` (the decode-tp plan-group start+wait on
+  a context in full post-recovery supervision state — liveness monitor
+  installed, fault sequence exercised, group rebuilt on a shrunk survivor
+  comm — over a never-supervised twin, median of interleaved per-round
+  pairs) must stay within 0.95..1.05 — serving fault tolerance is free
+  until a rank actually dies; and ``serve_recovery_tokens_replayed``
+  (tokens discarded and re-queued by the supervisor's mid-flight replay
+  drill) must stay ≤ the same run's ``serve_recovery_replay_ceiling``
+  (in-flight slots × max_new_tokens) — replay cost is bounded by the
+  in-flight token budget, never by queue depth or history.
 """
 from __future__ import annotations
 
@@ -298,6 +309,35 @@ def main(argv=None) -> int:
                 f"(ceiling: checkpoint_every={every:.0f} — restart replays "
                 "at most one checkpoint interval)")
         if replayed > every:
+            failures.append("REGRESSION " + line)
+        else:
+            print("OK " + line)
+
+    # -- serving fault gates (PR 9; current run alone) ---------------------
+    if "serve_fault_dispatch_ratio" not in cur:
+        failures.append("missing record: serve_fault_dispatch_ratio")
+    else:
+        sratio = cur["serve_fault_dispatch_ratio"]
+        lo, hi = 0.95, 1.05
+        line = (f"serve_fault_dispatch_ratio={sratio:.3f} "
+                f"(allowed {lo:.2f}..{hi:.2f}: a supervised, once-recovered "
+                "serving hot path may not tax the decode-tp group dispatch)")
+        if not lo <= sratio <= hi:
+            failures.append("REGRESSION " + line)
+        else:
+            print("OK " + line)
+
+    if ("serve_recovery_tokens_replayed" not in cur
+            or "serve_recovery_replay_ceiling" not in cur):
+        failures.append("missing record: serve_recovery_tokens_replayed / "
+                        "serve_recovery_replay_ceiling")
+    else:
+        srep = cur["serve_recovery_tokens_replayed"]
+        sceil = cur["serve_recovery_replay_ceiling"]
+        line = (f"serve_recovery_tokens_replayed={srep:.0f} tokens "
+                f"(ceiling: in-flight budget={sceil:.0f} — replay is "
+                "bounded by slots x max_new_tokens, never queue depth)")
+        if srep > sceil:
             failures.append("REGRESSION " + line)
         else:
             print("OK " + line)

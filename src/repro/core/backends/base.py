@@ -120,6 +120,20 @@ class Backend(abc.ABC):
         """
         return ()
 
+    def heartbeat_silent(self, comm: Any) -> tuple:
+        """Ranks whose transport stopped carrying heartbeats on ``comm``.
+
+        The *attribution* hook of the liveness layer
+        (:class:`repro.runtime.liveness.HeartbeatMonitor`): when a
+        heartbeat exchange fails, the monitor asks the transport who went
+        quiet.  Unlike :meth:`local_failed` this is an observation about
+        traffic, not a declaration of death — the monitor still applies
+        its miss-threshold/suspicion state machine before confirming.
+        The default backend's wire never goes quiet; fault-injecting
+        wrappers report the scheduled corpse here.
+        """
+        return ()
+
     def wire_pad_multiple(self) -> int:
         """Element-count multiple that keeps this backend's wire on its
         fastest path for padded payloads.  Emulation recipes that invent

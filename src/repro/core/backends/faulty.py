@@ -116,10 +116,17 @@ class FaultyBackend(Backend):
 
     convention = "abi"
 
-    def __init__(self, inner: Backend, schedule: Optional[FaultSchedule] = None) -> None:
+    def __init__(self, inner: Backend, schedule: Optional[FaultSchedule] = None,
+                 *, declare_failures: bool = True) -> None:
         super().__init__(inner.mesh)
         self.inner = inner
         self.schedule = schedule if schedule is not None else FaultSchedule.from_env()
+        # declare_failures=False turns the wrapper into a *silent* killer:
+        # collectives still trip and heartbeats still go quiet, but
+        # local_failed never names the corpse — only an observed detector
+        # (an installed HeartbeatMonitor) can, which is how the battery
+        # proves detection is real rather than declared
+        self.declare_failures = declare_failures
         self.name = f"faulty:{inner.name}"
         # shared context tables — the wrapper adds failures, not a new world
         self.comms = inner.comms
@@ -172,6 +179,17 @@ class FaultyBackend(Backend):
 
     # -- the failure detector ----------------------------------------------
     def local_failed(self, comm: Any) -> tuple:
+        if not self.declare_failures:
+            return ()
+        return self._dead_member(comm)
+
+    def heartbeat_silent(self, comm: Any) -> tuple:
+        """A schedule-dead rank stops answering heartbeats too: the wrapper
+        is one producer of missed beats for the liveness monitor, whether
+        or not it also *declares* the death through ``local_failed``."""
+        return self._dead_member(comm)
+
+    def _dead_member(self, comm: Any) -> tuple:
         if not self.schedule.dead:
             return ()
         try:
@@ -231,9 +249,11 @@ class FaultyLib:
         "Scatter",
     )
 
-    def __init__(self, lib, schedule: Optional[FaultSchedule] = None) -> None:
+    def __init__(self, lib, schedule: Optional[FaultSchedule] = None,
+                 *, declare_failures: bool = True) -> None:
         self._lib = lib
         self.schedule = schedule if schedule is not None else FaultSchedule.from_env()
+        self.declare_failures = declare_failures
         self._absolved: set = set()  # comms registered post-mortem (identity)
         for sym in self._COLLECTIVES:
             if hasattr(lib, sym):
@@ -251,6 +271,14 @@ class FaultyLib:
     def local_failed(self, comm) -> tuple:
         """Failure detector surfaced to Mukautuva (ABI-domain comm handle;
         membership filtering happens in the shared ``comm_failure_view``)."""
+        if not self.declare_failures:
+            return ()
+        return (self.schedule.kill_rank,) if self.schedule.dead else ()
+
+    def heartbeat_silent(self, comm) -> tuple:
+        """Transport attribution for the liveness monitor (crosses the
+        Mukautuva adapter's ``heartbeat_silent`` delegation): the scheduled
+        corpse goes quiet whether or not it is declared dead."""
         return (self.schedule.kill_rank,) if self.schedule.dead else ()
 
     #: per-symbol failure return, matching each symbol's rc convention

@@ -76,6 +76,18 @@ class EmulationContext:
     def op_fn(self, op: int) -> Callable:
         return self._abi.backend.op_fn(op)
 
+    def lowering_width(self, comm: int) -> int:
+        """The width the single-controller lowering runs ``comm`` at: the
+        full rank space of its axes.  Excluded ranks still participate in
+        the lax lowering (a shrunk comm *names* the survivor group; the
+        mesh underneath is unchanged), so recipes that SPLIT payloads
+        across the wire — reduce-scatter chunks, allgather rejoins — must
+        split by this, never by the membership count ``comm_size``.  The
+        two agree on every un-shrunk comm; they differ exactly when a
+        recovery rebuilt plans on a shrink survivor (PR 9's serving
+        recovery does this for the decode-tp group)."""
+        return self._abi.comms.info(comm).full_size
+
     @property
     def datatypes(self):
         return self._abi.datatypes
@@ -279,10 +291,11 @@ def build_comm_shrink(ctx: EmulationContext) -> Callable:
 
 
 def build_allreduce(ctx: EmulationContext) -> Callable:
-    rs, ag, size = ctx.dep("reduce_scatter"), ctx.dep("allgather"), ctx.dep("comm_size")
+    rs, ag = ctx.dep("reduce_scatter"), ctx.dep("allgather")
+    width = ctx.lowering_width
 
     def allreduce(x, op, comm):
-        S = size(comm)
+        S = width(comm)  # split by the lowering width (see lowering_width)
         if S <= 1:
             return x
         scalar = getattr(x, "ndim", 0) == 0
@@ -454,7 +467,7 @@ def build_scatter(ctx: EmulationContext) -> Callable:
 # nature); everything shape- or handle-derived is frozen.
 # ---------------------------------------------------------------------------
 def plan_allreduce(ctx: PlanContext, x, op, comm) -> Callable:
-    S = ctx.dep("comm_size")(comm)
+    S = ctx.lowering_width(comm)  # the rs/ag split must match the lowering
     if S <= 1:
         return lambda x: x
     scalar = len(getattr(x, "shape", ())) == 0
@@ -553,7 +566,7 @@ def plan_gather(ctx: PlanContext, x, root, comm, axis=0) -> Callable:
 # ---------------------------------------------------------------------------
 def plan_group_allreduce(ctx: PlanContext, bounds) -> Callable:
     op, comm = bounds[0][1], bounds[0][2]
-    S = ctx.dep("comm_size")(comm)
+    S = ctx.lowering_width(comm)  # the rs/ag split must match the lowering
     if S <= 1:
         return lambda xs: list(xs)
     members = []

@@ -163,6 +163,10 @@ class MukBackend(Backend):
         fn = getattr(self.lib, "local_failed", None)
         return tuple(fn(comm)) if fn is not None else ()
 
+    def heartbeat_silent(self, comm: int) -> tuple:
+        fn = getattr(self.lib, "heartbeat_silent", None)
+        return tuple(fn(comm)) if fn is not None else ()
+
     # ------------------------------------------------------------------
     # predefined-handle maps (the compile-time knowledge of both ABIs)
     # ------------------------------------------------------------------

@@ -56,6 +56,14 @@ class Request:
     top_k: int = 0
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # -- robustness bookkeeping (PR 9) ------------------------------------
+    #: engine steps from submission before the request is abandoned
+    #: (None: no deadline); measured against ``stats["steps"]``
+    deadline_steps: Optional[int] = None
+    submit_step: Optional[int] = None  # stamped by ServeEngine.submit
+    retries: int = 0                   # replay count (supervisor recovery)
+    expired: bool = False              # deadline passed; done, no more tokens
+    failed: bool = False               # dropped after max_retries replays
 
 
 def sample(logits, key, temperature: float, top_k: int):
@@ -93,6 +101,7 @@ class DecodeSync:
 
         self.abi = abi
         self.comm = comm
+        self.mesh = mesh     # kept for supervisor rebuilds on a survivor comm
         ex = jax.ShapeDtypeStruct((max_batch,), jnp.int32)
         self._p_tok = abi.bcast_init(ex, 0, comm)
         self._p_act = abi.bcast_init(ex, 0, comm)
@@ -151,7 +160,9 @@ class ServeEngine:
         self.seed = seed
         self._base_key = jax.random.PRNGKey(seed)
         self.stats = {"prefill_tokens": 0, "decode_steps": 0,
-                      "prefill_chunks": 0, "requests": 0, "steps": 0}
+                      "prefill_chunks": 0, "requests": 0, "steps": 0,
+                      "expired": 0}
+        self.last_expired: list = []   # requests expired by the last step()
         self.paged = self.cfg.family in ("dense", "moe")
         self.decode_sync: Optional[DecodeSync] = None
 
@@ -220,8 +231,16 @@ class ServeEngine:
                 f"{self.cfg.family}; use run()")
         if len(req.prompt) == 0:
             raise ValueError(f"request {req.rid}: empty prompt")
+        if req.submit_step is None:
+            req.submit_step = self.stats["steps"]  # deadline clock starts now
         self.scheduler.submit(req)
         self.stats["requests"] += 1
+
+    def rebuild_decode_sync(self, abi, comm, mesh) -> None:
+        """Bind a fresh ``DecodeSync`` (new plans + plan group) on ``comm``
+        — the supervisor's recovery hook after a tp-comm shrink.  The old
+        sync must already be retired (``free()``)."""
+        self.decode_sync = DecodeSync(abi, comm, self.max_batch, mesh)
 
     @property
     def has_work(self) -> bool:
@@ -256,6 +275,10 @@ class ServeEngine:
         slot (ending in one ``decode-tp`` plan-group start/wait)."""
         sched = self.scheduler
         self.stats["steps"] += 1
+        # deadline pass first: an expired request frees its blocks before
+        # admission, so its capacity funds the queue head this very step
+        self.last_expired = sched.expire(self.stats["steps"])
+        self.stats["expired"] += len(self.last_expired)
         sched.admit()
         i = sched.prefill_slot()
         if i is not None:

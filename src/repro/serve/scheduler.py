@@ -110,6 +110,15 @@ class Scheduler:
         self.check_admissible(req)
         self.waiting.append(req)
 
+    def requeue(self, reqs) -> None:
+        """Re-queue evicted requests at the FRONT of the waiting queue, in
+        the given order (recovery replay: re-admission order must equal the
+        original submission order).  Bypasses ``check_admissible`` — these
+        requests were admissible once and graceful degradation means an
+        unfundable request *waits* on the shrunk world rather than fails."""
+        for req in reversed(list(reqs)):
+            self.waiting.appendleft(req)
+
     @property
     def has_work(self) -> bool:
         return bool(self.waiting) or any(s is not None for s in self.slots)
@@ -156,7 +165,48 @@ class Scheduler:
         return [i for i, s in enumerate(self.slots)
                 if s is not None and s.state == DECODE]
 
+    # -- deadlines ---------------------------------------------------------
+    @staticmethod
+    def _past_deadline(req, now_step: int) -> bool:
+        deadline = getattr(req, "deadline_steps", None)
+        start = getattr(req, "submit_step", None)
+        return (deadline is not None and start is not None
+                and now_step - start >= deadline)
+
+    def expire(self, now_step: int) -> list:
+        """Abandon every waiting or running request whose deadline has
+        passed (``deadline_steps`` engine steps since submission): running
+        ones are evicted (blocks freed, slot opened), waiting ones leave
+        the queue; each is marked ``expired`` and ``done``.  Returns the
+        expired requests — partial output stays on the request, truncated,
+        never corrupted."""
+        out = []
+        for i, s in enumerate(self.slots):
+            if s is not None and self._past_deadline(s.req, now_step):
+                out.append(self.evict(i))
+        if self.waiting:
+            keep = collections.deque()
+            for req in self.waiting:
+                (out if self._past_deadline(req, now_step)
+                 else keep).append(req)
+            self.waiting = keep
+        for req in out:
+            req.expired = True
+            req.done = True
+        return out
+
     # -- eviction ----------------------------------------------------------
+    def evict(self, i: int):
+        """Free slot ``i`` and return its request *unchanged* (recovery
+        replay / deadline expiry — the caller decides the request's fate;
+        :meth:`finish` is the normal completion path)."""
+        seq = self.slots[i]
+        if seq is None:
+            raise ValueError(f"slot {i} is already empty")
+        req = seq.req
+        self.finish(i)
+        return req
+
     def finish(self, i: int) -> None:
         """Evict slot ``i``: free its blocks (handles go stale forever) and
         open the slot for the next admit."""

@@ -1,0 +1,221 @@
+"""Serving fault supervisor: observe the death, shrink the tp comm, replay
+in-flight requests token-identically.
+
+The training tier got its fault story in PR 7 (``run_supervised`` +
+``elastic_recovery_policy``); this module is the serving counterpart, built
+from the same three ingredients:
+
+* **notification** — before each engine step the supervisor beats the
+  :class:`~repro.runtime.liveness.HeartbeatMonitor` (on its cadence) and
+  runs the ULFM notification idiom, a host-side ``comm_agree(1, tp_comm)``
+  probe that raises ``PAX_ERR_PROC_FAILED`` the moment the failure
+  detector reports an unacknowledged death.  A failure can also surface
+  from the ``decode-tp`` ``group.start()`` itself; both land in the same
+  handler.
+* **recovery** — the canonical fault-tier walk on the tp communicator:
+  revoke → failure_ack → get_failed → agree(1) → shrink.  The dead
+  ``DecodeSync`` group is retired (``free()`` — its plans were already
+  force-reset by the revoke) and rebuilt as a **fresh plan group on the
+  survivor communicator**: the shrunk comm carries the parent's axes with
+  the corpse excluded, so the broadcasts lower over the same mesh axes and
+  the PR-5 layout-keyed cache makes the re-plan allocate only genuinely
+  new slots.  The monitor rebinds its heartbeat comm onto the survivor.
+* **replay** — every in-flight request is evicted (blocks freed), its
+  generated tokens counted and discarded, and re-queued **at the front of
+  the waiting queue in admission order**, so re-admission order equals the
+  original submission order.  Sampling keys are
+  ``fold_in(fold_in(PRNGKey(seed), rid), step)`` with
+  ``step = len(out_tokens)`` — replaying from the prompt regenerates the
+  exact token stream, so clients observe latency, never corruption.
+
+Request-level robustness rides the same ledger
+(:class:`ServeRecoveryReport`, the serving shape of PR 7's
+``SupervisorReport``): bounded failures with exponential backoff
+accounting, bounded per-request retries (a request that keeps dying is
+dropped with its ``failed`` flag set, never silently), and deadline
+expiry/graceful re-queueing delegated to the scheduler.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Optional
+
+from ..core.errors import PAX_ERR_PROC_FAILED, PaxError
+
+log = logging.getLogger("repro.serve.supervisor")
+
+
+@dataclasses.dataclass
+class ServeRecoveryReport:
+    """The supervisor's ledger — every recovery action is accounted here.
+
+    Invariants (``assert_consistent``): each replay event re-queues or
+    drops every then-in-flight request exactly once, so
+    ``sum(retries) == requeued + dropped``; replays never exceed failures
+    (a failure with nothing in flight replays nothing); backoff totals are
+    the closed-form sum of the exponential schedule.
+    """
+
+    failures: int = 0                 # PROC_FAILED events handled
+    replays: int = 0                  # recovery passes that evicted slots
+    tokens_replayed: int = 0          # generated tokens discarded for replay
+    requeued: int = 0                 # eviction -> front-of-queue re-admissions
+    dropped: int = 0                  # requests past max_retries (failed flag)
+    expired: int = 0                  # deadline expiries observed
+    backoff_s_total: float = 0.0
+    failed_ranks: list = dataclasses.field(default_factory=list)
+    retries: dict = dataclasses.field(default_factory=dict)  # rid -> count
+
+    def assert_consistent(self) -> None:
+        assert self.replays <= self.failures, (self.replays, self.failures)
+        assert sum(self.retries.values()) == self.requeued + self.dropped, \
+            (self.retries, self.requeued, self.dropped)
+        assert self.tokens_replayed >= 0
+        assert len(self.failed_ranks) == self.failures, \
+            (self.failed_ranks, self.failures)
+
+
+class ServeSupervisor:
+    """Drive a :class:`~.engine.ServeEngine` with fault supervision.
+
+    ``monitor`` (optional) is beaten every ``heartbeat_every`` supervisor
+    steps — liveness is amortized over tokens, so a never-failed engine's
+    per-token cost is one host-side ``comm_agree`` probe (the
+    ``serve_fault_dispatch_ratio`` gate pins it at 1.0 ± 5%).
+    ``max_failures`` bounds recoveries (like ``max_restarts``);
+    ``backoff_s`` doubles per failure; ``max_retries`` bounds how many
+    times one request may be replayed before it is dropped.
+    """
+
+    def __init__(self, engine, *, monitor=None, heartbeat_every: int = 1,
+                 max_failures: int = 3, backoff_s: float = 0.0,
+                 max_retries: int = 3, sleep=time.sleep) -> None:
+        if engine.decode_sync is None:
+            raise ValueError("ServeSupervisor needs an engine with a "
+                             "DecodeSync (the tp comm is what it recovers)")
+        self.engine = engine
+        self.monitor = monitor
+        self.heartbeat_every = max(1, heartbeat_every)
+        self.max_failures = max_failures
+        self.backoff_s = backoff_s
+        self.max_retries = max_retries
+        self.report = ServeRecoveryReport()
+        self._sleep = sleep
+        self._steps = 0
+
+    # -- the supervised step ------------------------------------------------
+    def step(self) -> None:
+        eng = self.engine
+        self._steps += 1
+        if self.monitor is not None and self._steps % self.heartbeat_every == 0:
+            self.monitor.beat()
+        ds = eng.decode_sync
+        try:
+            # the ULFM notification idiom: agree raises PROC_FAILED while
+            # an observed failure is unacknowledged — the host-side probe
+            # that turns a detector view into a step-loop exception
+            ds.abi.comm_agree(1, ds.comm)
+            eng.step()
+            self.report.expired += len(eng.last_expired)
+        except PaxError as e:
+            if e.code != PAX_ERR_PROC_FAILED:
+                raise
+            self._recover(e)
+
+    def drain(self) -> None:
+        while self.engine.has_work:
+            self.step()
+
+    def run(self, requests) -> ServeRecoveryReport:
+        for r in requests:
+            self.engine.submit(r)
+        self.drain()
+        self.report.assert_consistent()
+        return self.report
+
+    # -- recovery -----------------------------------------------------------
+    def _recover(self, cause: PaxError) -> tuple:
+        rep = self.report
+        rep.failures += 1
+        if rep.failures > self.max_failures:
+            raise RuntimeError(
+                f"exceeded {self.max_failures} serving recoveries") from cause
+        if self.backoff_s:
+            delay = self.backoff_s * (2 ** (rep.failures - 1))
+            rep.backoff_s_total += delay
+            self._sleep(delay)
+
+        eng = self.engine
+        ds = eng.decode_sync
+        abi, comm = ds.abi, ds.comm
+
+        # Detection convergence: the tripwire can raise before the monitor
+        # has confirmed the corpse.  Beat (on the un-revoked heartbeat dup
+        # comm) until the detector names somebody; bounded by the monitor's
+        # own confirmation horizon so a spurious failure cannot spin here.
+        if self.monitor is not None and not abi.comm_get_failed(comm):
+            budget = (self.monitor.miss_threshold
+                      + self.monitor.suspicion_ticks + 1)
+            while budget > 0 and not abi.comm_get_failed(comm):
+                self.monitor.beat()
+                budget -= 1
+        failed = tuple(abi.comm_get_failed(comm))
+        if not failed:
+            raise RuntimeError(
+                "PROC_FAILED raised but no failure detector names a corpse "
+                "(liveness monitor not installed?)") from cause
+
+        # the canonical ULFM walk on the tp communicator
+        abi.comm_revoke(comm)          # poisons the comm, force-resets the
+        abi.comm_failure_ack(comm)     # decode-tp plans/group bound to it
+        failed = tuple(abi.comm_get_failed(comm))
+        abi.comm_agree(1, comm)
+        survivor = abi.comm_shrink(comm)
+        log.warning("serving recovery: ranks %s failed on the tp comm, "
+                    "%d survivors", list(failed), abi.comm_size(survivor))
+
+        # retire the dead group's request slot; rebuild on the survivor
+        # comm (same axes, corpse excluded — the layout-keyed cache makes
+        # the unchanged-shape re-plan free of redundant work)
+        ds.free()
+        eng.rebuild_decode_sync(abi, survivor, ds.mesh)
+        if self.monitor is not None:
+            self.monitor.rebind(survivor)
+
+        rep.failed_ranks.append(failed)
+        self._replay_inflight()
+        return failed
+
+    def _replay_inflight(self) -> None:
+        """Evict every occupied slot and re-queue (or drop) its request for
+        a from-the-prompt replay.  Front-of-queue in admission order keeps
+        re-admission order == original submission order, which the
+        token-identity oracle relies on."""
+        eng, rep = self.engine, self.report
+        sched = eng.scheduler
+        occupied = sorted(
+            (i for i, s in enumerate(sched.slots) if s is not None),
+            key=lambda i: sched.slots[i].admit_seq)
+        if not occupied:
+            return
+        rep.replays += 1
+        requeue = []
+        for i in occupied:
+            req = sched.evict(i)
+            rep.tokens_replayed += len(req.out_tokens)
+            req.out_tokens = []
+            req.done = False
+            req.retries += 1
+            rep.retries[req.rid] = req.retries
+            if req.retries > self.max_retries:
+                req.failed = True
+                req.done = True
+                rep.dropped += 1
+                log.warning("request %d dropped after %d replays",
+                            req.rid, req.retries)
+                continue
+            requeue.append(req)
+        sched.requeue(requeue)
+        rep.requeued += len(requeue)

@@ -327,8 +327,29 @@ def with_failure_probe(dist: DistContext, step_fn: Callable) -> Callable:
     return probed
 
 
+def rebalance_batch(batch, dp: int):
+    """Trim a global batch's leading dim to the largest multiple of ``dp``
+    (identity when ``dp`` already divides it).
+
+    The uneven-shard recovery mode keeps ALL survivors (dp=7 instead of a
+    power-of-two trim to 4), so the fixed global batch no longer divides
+    the dp extent; the ``shard_map`` over ``P(dp_axes)`` requires it to.
+    Trimming happens OUTSIDE the jitted step — host-side, before tracing —
+    so the compiled step sees a clean ``(B', ...)`` with ``dp | B'``.  The
+    dropped rows are the batch tail, deterministically, so an oracle run
+    using the same function sees the same data."""
+    def trim(x):
+        b = (x.shape[0] // dp) * dp
+        if b == 0:
+            raise ValueError(f"batch dim {x.shape[0]} < dp={dp}: nothing to shard")
+        return x if b == x.shape[0] else x[:b]
+
+    return jax.tree.map(trim, batch)
+
+
 def elastic_recovery_policy(api: ModelApi, opt_cfg: AdamWConfig, dist: DistContext,
-                            key, *, impl=None, schedule=None, tools=()):
+                            key, *, impl=None, schedule=None, tools=(),
+                            uneven_shards: bool = False):
     """The canonical ``RecoveryPolicy`` for elastic-dp training.
 
     After ``run_supervised``'s fault-tier walk (revoke → ack → get_failed →
@@ -336,7 +357,12 @@ def elastic_recovery_policy(api: ModelApi, opt_cfg: AdamWConfig, dist: DistConte
 
     * a dense mesh over the survivors (``survivor_mesh``), trimmed to the
       largest power-of-two dp extent so batch and flat-layout divisibility
-      survive arbitrary casualty counts (8 ranks − 1 dead → dp=4);
+      survive arbitrary casualty counts (8 ranks − 1 dead → dp=4) — or,
+      with ``uneven_shards=True``, kept at the full survivor count (dp=7)
+      with the global batch rebalanced per step via
+      :func:`rebalance_batch` (host-side trim to a dp multiple; use the
+      per-leaf DDP optimizer layout — the zero1 flat layout re-pads to the
+      new dp and cannot restore an old checkpoint shape);
     * a fresh ``DistContext`` over it (``impl`` names the *recovered*
       backend — typically the plain implementation underneath the
       fault-injection wrapper);
@@ -358,14 +384,22 @@ def elastic_recovery_policy(api: ModelApi, opt_cfg: AdamWConfig, dist: DistConte
         mesh = survivor_mesh(policy.dist.mesh, failed)
         names = tuple(mesh.axis_names)
         dp_avail = mesh.shape[names[0]]
-        dp_new = 1 << (dp_avail.bit_length() - 1)
-        if dp_new != dp_avail:
-            mesh = jax.sharding.Mesh(mesh.devices[:dp_new], names)
+        if uneven_shards:
+            dp_new = dp_avail       # keep every survivor; rebalance batches
+        else:
+            dp_new = 1 << (dp_avail.bit_length() - 1)
+            if dp_new != dp_avail:
+                mesh = jax.sharding.Mesh(mesh.devices[:dp_new], names)
         new_dist = make_dist(mesh, impl=impl, tools=tools)
         state_like = init_state(api, key, new_dist)
-        step_fn = with_failure_probe(
-            new_dist, jax.jit(make_train_step(api, new_dist, opt_cfg,
-                                              schedule=schedule)))
+        jstep = jax.jit(make_train_step(api, new_dist, opt_cfg,
+                                        schedule=schedule))
+        if uneven_shards:
+            # trim outside the jitted step: the shard_map's P(dp_axes)
+            # in_spec needs dp | batch, and tracing must see the final shape
+            jstep = (lambda _j, _dp: lambda state, batch:
+                     _j(state, rebalance_batch(batch, _dp)))(jstep, dp_new)
+        step_fn = with_failure_probe(new_dist, jstep)
         par = api.cfg.parallelism
         zero1 = par.grad_sync == "abi" and par.zero1
         specs = state_specs(api, "abi",

@@ -20,6 +20,9 @@ Sections:
  13. fault tier: injected rank death on three dispatch paths
  14. elastic-dp: kill rank 5 at dp=8, shrink, bitwise resume at dp=4
  15. serving decode-tp plan group == pooled i* bcast (tp=4)
+ 16. serving fault supervisor: mid-decode kill at tp=4, heartbeat-observed
+     death, shrink + token-identical replay (three dispatch paths)
+ 17. uneven-shard elastic recovery: dp=8 -> dp=7 (all survivors kept)
 """
 import os
 
@@ -875,5 +878,196 @@ for impl15 in ("paxi", "minimal", "ompix"):
     ds15.free()
     print(f"  {impl15}: decode-tp group == pooled (bitwise), "
           "1 group call/step OK")
+
+# ---------------------------------------------------------------------------
+section("16. serving fault supervisor: mid-decode kill at tp=4, heartbeat-"
+        "observed death, shrink + token-identical replay")
+# The PR-9 acceptance scenario.  A supervised serving engine loses a tp
+# rank mid-decode with THREE requests in flight.  The backend does NOT
+# declare the death (declare_failures=False — the silent-killer mode):
+# only the HeartbeatMonitor's missed-beat state machine can name the
+# corpse, via the heartbeat_silent transport hook.  The supervisor walks
+# revoke -> ack -> get_failed -> agree -> shrink on the tp comm, rebuilds
+# DecodeSync on the shrunk survivor comm, and replays the in-flight
+# requests from their prompts.  Because sampling keys are
+# fold_in(fold_in(key, rid), len(out_tokens)), the replayed streams must
+# be BITWISE identical to an unfailed oracle — on all three dispatch
+# paths (paxi native, minimal emulation, ompix across Mukautuva).
+from repro.runtime.liveness import HeartbeatMonitor
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.supervisor import ServeSupervisor
+
+params16 = api14.init(jax.random.PRNGKey(0))
+
+
+def mk_reqs16():
+    # request 1 samples at temperature 0.8: replay identity must hold for
+    # seeded sampling, not just greedy argmax
+    return [Request(i, np.arange(1, 6 + i, dtype=np.int32),
+                    max_new_tokens=16, temperature=0.8 if i == 1 else 0.0)
+            for i in range(3)]
+
+
+def make_faulty16(impl, m, sched):
+    if impl == "ompix":
+        return MukBackend(FaultyLib(OmpixLib(m), sched,
+                                    declare_failures=False), m)
+    return FaultyBackend(C.get_backend(impl, m), sched,
+                         declare_failures=False)
+
+
+# ONE engine: the jitted prefill/decode functions compile once and every
+# leg (oracle + three impls) reuses them — only the DecodeSync, monitor
+# and supervisor are per-impl.
+eng16 = ServeEngine(api14, params16, max_batch=3, max_seq=64, block_size=4,
+                    prefill_chunk=4, seed=0)
+oreqs16 = mk_reqs16()
+eng16.run(oreqs16)
+want16 = [r.out_tokens for r in oreqs16]
+
+for impl16 in ("paxi", "minimal", "ompix"):
+    sched16 = FaultSchedule()
+    abi16 = C.pax_init(mesh, impl=make_faulty16(impl16, mesh, sched16))
+    tp16 = abi16.comm_from_axes(("model",), "tp")
+    eng16.decode_sync = DecodeSync(abi16, tp16, 3, mesh)
+    mon16 = HeartbeatMonitor(abi16, tp16, mesh, miss_threshold=2,
+                             suspicion_ticks=1).install()
+    sup16 = ServeSupervisor(eng16, monitor=mon16, heartbeat_every=1)
+    for r16 in mk_reqs16():
+        eng16.submit(r16)
+    reqs16 = list(eng16.scheduler.waiting)
+    # step until every slot is decoding — max_new_tokens=16 keeps the
+    # earliest request alive long past the last one's prefill runway, so
+    # the all-decoding window is guaranteed to exist
+    while not all(s16 is not None and s16.state == "decode"
+                  for s16 in eng16.scheduler.slots):
+        sup16.step()
+    mid16 = [len(r16.out_tokens) for r16 in reqs16]
+    assert all(m16 > 0 for m16 in mid16), mid16   # genuinely mid-decode
+    sched16.arm(2, after=0)                        # rank 2 dies silently
+    sup16.drain()
+    got16 = [r16.out_tokens for r16 in reqs16]
+    assert got16 == want16, (impl16, got16, want16)
+    assert sup16.report.failures == 1, sup16.report
+    assert sup16.report.tokens_replayed == sum(mid16), (
+        sup16.report.tokens_replayed, mid16)
+    assert abi16.comms.info(eng16.decode_sync.comm).excludes == (2,)
+    assert 2 in mon16.confirmed                    # observed, not declared
+    sup16.report.assert_consistent()
+    mon16.uninstall()
+    eng16.decode_sync.free()
+    eng16.decode_sync = None
+    print(f"  {impl16}: mid-decode kill (in-flight {mid16}) -> shrink, "
+          f"replay {sup16.report.tokens_replayed} tokens, "
+          "streams bitwise == oracle OK")
+
+# CI chaos-serve leg: with PAX_FAULT_SCHEDULE armed, the registry's
+# faulty: prefix feeds the serving supervisor too.  The scheduled rank is
+# killed up front (counter driven to the kill point, as in section 13);
+# if it is a member of the tp comm the supervisor must recover before a
+# single token is lost, and if it is NOT a member (the training chaos
+# leg's rank=5 vs tp full size 4) the run must complete unfailed — the
+# detectors filter by membership.
+env16 = os.environ.get("PAX_FAULT_SCHEDULE")
+if env16:
+    abi16e = C.pax_init(mesh, impl="faulty:paxi")
+    se16 = fault_schedule_of(abi16e.backend)
+    assert se16 is not None and se16.armed, env16
+    tp16e = abi16e.comm_from_axes(("model",), "tp")
+    eng16.decode_sync = DecodeSync(abi16e, tp16e, 3, mesh)
+    mon16e = HeartbeatMonitor(abi16e, tp16e, mesh, miss_threshold=2,
+                              suspicion_ticks=1).install()
+    sup16e = ServeSupervisor(eng16, monitor=mon16e, heartbeat_every=1)
+    for _ in range(se16.at_call + 1):   # drive the counter to the kill
+        se16.on_call()
+    assert se16.dead
+    member16 = 0 <= se16.kill_rank < abi16e.comms.info(tp16e).full_size
+    oreqs16e = mk_reqs16()
+    for r16 in oreqs16e:
+        eng16.submit(r16)
+    sup16e.drain()
+    assert [r16.out_tokens for r16 in oreqs16e] == want16
+    if member16:
+        assert sup16e.report.failures == 1, sup16e.report
+        assert abi16e.comms.info(eng16.decode_sync.comm).excludes == (
+            se16.kill_rank,)
+    else:
+        assert sup16e.report.failures == 0, sup16e.report
+    sup16e.report.assert_consistent()
+    mon16e.uninstall()
+    eng16.decode_sync.free()
+    eng16.decode_sync = None
+    print(f"  env chaos schedule {env16!r}: serve leg "
+          f"{'recovered' if member16 else 'unfailed (non-member corpse)'}"
+          " OK")
+
+# ---------------------------------------------------------------------------
+section("17. uneven-shard elastic recovery: dp=8 -> dp=7, all survivors kept")
+# The power-of-two trim in section 14 throws away three healthy ranks when
+# one dies.  elastic_recovery_policy(uneven_shards=True) keeps all seven:
+# the global batch is rebalanced per step (host-side trim to a dp
+# multiple, deterministically the tail), and the per-leaf DDP optimizer
+# layout replaces the zero1 flat layout (which pads per-dp-extent and
+# cannot restore an old checkpoint shape at a new dp).  The resumed
+# trajectory must be bitwise identical to an uninterrupted dp=7 oracle
+# restored from the same checkpoint and fed the same rebalanced batches.
+import dataclasses
+
+cfg17 = dataclasses.replace(
+    cfg14, parallelism=dataclasses.replace(cfg14.parallelism, zero1=False))
+api17 = build_model(cfg17)
+sched17 = FaultSchedule()
+dist17 = make_dist(mesh8, impl=make_faulty("paxi", mesh8, sched17))
+state17 = train_loop.init_state(api17, key14, dist17)
+step17 = train_loop.with_failure_probe(
+    dist17, jax.jit(train_loop.make_train_step(api17, dist17, opt14)))
+policy17 = train_loop.elastic_recovery_policy(
+    api17, opt14, dist17, key14, impl="paxi", uneven_shards=True)
+killed17 = []
+
+
+def batch_at17(step):
+    return make_batch(jax.random.PRNGKey(1000 + step), cfg17, 8, 16)
+
+
+def get_batch17(i):
+    if i == KILL_AT14 and not killed17:
+        killed17.append(i)
+        sched17.kill_rank = KILL_RANK14
+        sched17.dead = True
+    return batch_at17(i)
+
+
+ckdir17 = tempfile.mkdtemp(prefix="uneven_")
+ck17 = Checkpointer(ckdir17, keep=5)
+report17 = run_supervised(
+    step17, state17, get_batch17, checkpointer=ck17,
+    total_steps=TOTAL14, checkpoint_every=EVERY14, max_restarts=2,
+    recover=policy17)
+assert report17.restarts == 1
+assert report17.steps_completed == TOTAL14
+assert policy17.dist.dp_size == 7      # every survivor kept, no trim
+
+# oracle: uninterrupted dp=7 run restored from the SAME step-4 checkpoint
+# on the survivor mesh, fed the SAME tail-trimmed batches
+mesh7 = survivor_mesh(mesh8, (KILL_RANK14,))
+assert mesh7.shape["data"] == 7
+dist7 = make_dist(mesh7, impl="paxi")
+like7 = train_loop.init_state(api17, key14, dist7)
+specs7 = train_loop.state_specs(api17, "abi")   # per-leaf DDP layout
+state7, step7 = ck17.restore(like7, step=EVERY14, mesh=mesh7, specs=specs7)
+assert step7 == EVERY14
+jstep7 = jax.jit(train_loop.make_train_step(api17, dist7, opt14))
+for s17 in range(EVERY14, TOTAL14):
+    state7, _m17 = jstep7(state7, train_loop.rebalance_batch(
+        batch_at17(s17), 7))
+v17 = jax.tree.leaves(report17.final_state)
+o17 = jax.tree.leaves(state7)
+assert len(v17) == len(o17)
+for a17, b17 in zip(v17, o17):
+    np.testing.assert_array_equal(np.asarray(a17), np.asarray(b17))
+shutil.rmtree(ckdir17, ignore_errors=True)
+print(f"  paxi: death at step {KILL_AT14} -> dp=7 uneven resume "
+      "bitwise == oracle OK")
 
 print("BATTERY PASSED")

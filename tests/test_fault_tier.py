@@ -16,7 +16,7 @@ from jax.sharding import PartitionSpec as P
 import repro.core as C
 from repro.core import emulation as em
 from repro.core.backends.faulty import (FaultSchedule, FaultyBackend,
-                                        fault_schedule_of)
+                                        FaultyLib, fault_schedule_of)
 from repro.core.communicator import CommTable
 from repro.core.errors import (PAX_ERR_PROC_FAILED, PAX_ERR_REVOKED, PaxError)
 
@@ -222,6 +222,107 @@ def test_registry_faulty_prefix_and_instance_init(mesh1):
     assert abi.backend is b
     # the sweep of plain backends never meets the injection wrapper
     assert not any(n.startswith("faulty") for n in C.available_backends())
+
+
+# ---------------------------------------------------------------------------
+# heartbeat transport attribution: silence is not declaration
+# ---------------------------------------------------------------------------
+def test_heartbeat_silent_is_transport_not_declaration(mesh1):
+    # plain backends: nobody is ever transport-silent
+    plain = C.get_backend("paxi", mesh1)
+    assert plain.heartbeat_silent(C.PAX_COMM_WORLD) == ()
+
+    sched = FaultSchedule()
+    backend = FaultyBackend(C.get_backend("paxi", mesh1), sched,
+                            declare_failures=False)
+    abi = C.pax_init(mesh1, impl=backend)
+    world = C.PAX_COMM_WORLD
+    assert backend.heartbeat_silent(world) == ()  # alive: answering
+    sched.arm(0, after=0)
+    sched.on_call()
+    # the silent killer: the wire goes quiet but nothing is *declared* —
+    # only an installed liveness monitor can name this corpse
+    assert backend.local_failed(world) == ()
+    assert backend.heartbeat_silent(world) == (0,)
+    # attribution survives revocation: the monitor reads the corpse
+    # mid-recovery-walk, after the comm is already poisoned
+    abi.comm_revoke(world)
+    assert backend.heartbeat_silent(world) == (0,)
+
+
+def test_heartbeat_silent_respects_membership(mesh1):
+    sched = FaultSchedule()
+    backend = FaultyBackend(C.get_backend("paxi", mesh1), sched)
+    sched.arm(5, after=0)  # rank 5 does not exist on the 1-rank world
+    sched.on_call()
+    assert sched.dead
+    assert backend.local_failed(C.PAX_COMM_WORLD) == ()
+    assert backend.heartbeat_silent(C.PAX_COMM_WORLD) == ()
+
+
+def test_heartbeat_silent_crosses_mukautuva(mesh1):
+    from repro.core.backends.ompix import OmpixLib
+    from repro.core.mukautuva import MukBackend
+
+    # a foreign lib without the symbol: delegation degrades to "no idea"
+    bare = MukBackend(OmpixLib(mesh1), mesh1)
+    assert bare.heartbeat_silent(C.PAX_COMM_WORLD) == ()
+
+    sched = FaultSchedule()
+    mb = MukBackend(FaultyLib(OmpixLib(mesh1), sched,
+                              declare_failures=False), mesh1)
+    C.pax_init(mesh1, impl=mb)
+    world = C.PAX_COMM_WORLD
+    assert mb.heartbeat_silent(world) == ()
+    sched.arm(0, after=0)
+    sched.on_call()
+    assert mb.local_failed(world) == ()      # undeclared…
+    assert mb.heartbeat_silent(world) == (0,)  # …but silent on the wire
+
+
+def test_monitor_tripwire_race_revoked_outranks_proc_failed(mesh1):
+    """PR-9 regression: with a liveness monitor installed on a silent-killer
+    backend, REVOKED must still outrank PROC_FAILED on the hot path even
+    while both the tripwire schedule and the monitor name the corpse."""
+    from repro.runtime.liveness import HeartbeatMonitor
+
+    sched = FaultSchedule()
+    backend = FaultyBackend(C.get_backend("paxi", mesh1), sched,
+                            declare_failures=False)
+    abi = C.pax_init(mesh1, impl=backend)
+    world = C.PAX_COMM_WORLD
+    mon = HeartbeatMonitor(abi, world, mesh1, miss_threshold=2,
+                           suspicion_ticks=1).install()
+    try:
+        assert abi.comm_get_failed(world) == ()
+        sched.arm(0, after=0)
+        sched.on_call()        # dead — and heartbeat-silent
+        mon.beat()             # one missed beat: below the miss threshold
+        assert abi.comm_get_failed(world) == ()
+        mon.beat()             # miss_threshold + suspicion_ticks - 1 = 2
+        assert 0 in mon.confirmed
+        assert abi.comm_get_failed(world) == (0,)
+
+        def run():
+            return jax.jit(abi.shard_region(
+                lambda x: abi.allreduce(x, C.PAX_SUM, world),
+                in_specs=P(), out_specs=P()))(jnp.ones(4, jnp.float32))
+
+        with pytest.raises(PaxError) as ei:  # tripwire fires first
+            run()
+        assert ei.value.code == PAX_ERR_PROC_FAILED
+        abi.comm_revoke(world)
+        # the race: schedule dead AND monitor confirmed AND comm revoked —
+        # the hot path must report the poisoning, not the death
+        with pytest.raises(PaxError) as ei:
+            run()
+        assert ei.value.code == PAX_ERR_REVOKED
+        # the monitor's dup comm is its own handle: beats keep flowing and
+        # the detector view of the revoked comm stays attributable
+        mon.beat()
+        assert mon.failed(world) == (0,)
+    finally:
+        mon.uninstall()
 
 
 # ---------------------------------------------------------------------------

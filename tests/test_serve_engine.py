@@ -327,3 +327,43 @@ def test_decode_plan_group_counts(model):
     assert cc.counts["bcast"] == 2      # the reference path IS pooled
     ds.free()
     assert dist.abi.outstanding_requests == 0
+
+
+# ---------------------------------------------------------------------------
+# request deadlines (PR 9): expiry frees pages, never corrupts the batch
+# ---------------------------------------------------------------------------
+def test_deadline_expiry_engine_level(model):
+    cfg, api, params = model
+    rng = np.random.default_rng(3)
+    keep_prompt = rng.integers(1, cfg.vocab_size, 5).astype(np.int32)
+    eng = _paged_engine(api, params)
+    keep = Request(0, keep_prompt, max_new_tokens=6)
+    doomed = Request(1, rng.integers(1, cfg.vocab_size, 5).astype(np.int32),
+                     max_new_tokens=20, deadline_steps=8)
+    # deadline 0: expires in the waiting queue before it is ever admitted
+    stillborn = Request(2, rng.integers(1, cfg.vocab_size, 5).astype(np.int32),
+                        max_new_tokens=20, deadline_steps=0)
+    eng.run([keep, doomed, stillborn])
+
+    assert doomed.expired and doomed.done
+    assert 0 < len(doomed.out_tokens) < 20     # cut off mid-stream
+    assert stillborn.expired and stillborn.out_tokens == []
+    assert not keep.expired and len(keep.out_tokens) == 6
+    assert eng.stats["expired"] == 2
+    assert eng.alloc.live_blocks == 0          # expiry returned its pages
+
+    # the survivor's stream is the solo-oracle stream: expiry is
+    # batch-composition-safe, like any other slot departure
+    solo = Request(0, keep_prompt.copy(), max_new_tokens=6)
+    _paged_engine(api, params).run([solo])
+    assert keep.out_tokens == solo.out_tokens
+
+
+def test_no_deadline_never_expires(model):
+    cfg, api, params = model
+    eng = _paged_engine(api, params)
+    reqs = [Request(i, np.arange(1, 6 + i, dtype=np.int32), max_new_tokens=3)
+            for i in range(2)]
+    eng.run(reqs)
+    assert eng.stats["expired"] == 0 and eng.last_expired == []
+    assert all(not r.expired and len(r.out_tokens) == 3 for r in reqs)

@@ -1,0 +1,329 @@
+"""Serving fault supervisor (PR 9): heartbeat miss-threshold edges, the
+retry/backoff ledger invariants, the recovery walk order, and deadline
+expiry — unit level.  The end-to-end kill-a-tp-rank-mid-decode oracle lives
+in tests/multidev_battery.py §16."""
+import numpy as np
+import pytest
+
+import repro.core as C
+from repro.core.compat import make_mesh
+from repro.core.errors import PAX_ERR_PROC_FAILED, PaxError
+from repro.runtime.liveness import HeartbeatMonitor
+from repro.serve.engine import Request
+from repro.serve.kv_cache import BlockAllocator
+from repro.serve.scheduler import DECODE, Scheduler
+from repro.serve.supervisor import ServeRecoveryReport, ServeSupervisor
+
+
+# ---------------------------------------------------------------------------
+# heartbeat monitor: miss-threshold / suspicion edges (real ABI, 1 device)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def tp_world():
+    mesh = make_mesh((1, 1), ("data", "model"))
+    abi = C.pax_init(mesh, impl="paxi")
+    return mesh, abi
+
+
+def _monitor(abi, mesh, miss=3, susp=2):
+    comm = abi.comm_from_axes(("model",), f"tp-m{miss}s{susp}")
+    return HeartbeatMonitor(abi, comm, mesh, miss_threshold=miss,
+                            suspicion_ticks=susp)
+
+
+def test_confirmation_edge_is_exact(tp_world):
+    """A rank silent from tick t is confirmed after exactly
+    miss_threshold + suspicion_ticks - 1 consecutive silent ticks —
+    one tick earlier it must still be merely suspected."""
+    mesh, abi = tp_world
+    for miss, susp in ((3, 2), (1, 1), (2, 3)):
+        mon = _monitor(abi, mesh, miss, susp)
+        mon.inject_silence(0)
+        horizon = miss + susp - 1
+        for tick in range(1, horizon):
+            mon.beat()
+            assert 0 not in mon.confirmed, (miss, susp, tick)
+        mon.beat()
+        assert 0 in mon.confirmed, (miss, susp)
+        assert mon.failed(mon.comm) == (0,)
+
+
+def test_answering_clears_suspicion(tp_world):
+    """A straggler is not a corpse: one answered beat resets the whole
+    miss/suspicion ladder, so confirmation needs the full horizon again."""
+    mesh, abi = tp_world
+    mon = _monitor(abi, mesh, miss=2, susp=2)
+    mon.inject_silence(0)
+    mon.beat()
+    mon.beat()                      # suspected now (2 misses), not confirmed
+    assert mon.suspected and 0 not in mon.confirmed
+    mon.clear_silence(0)
+    mon.beat()                      # it answered: suspicion cleared
+    assert not mon.suspected and 0 not in mon.confirmed
+    mon.inject_silence(0)
+    for _ in range(2):              # the partial ladder did not carry over
+        mon.beat()
+        assert 0 not in mon.confirmed
+    mon.beat()
+    assert 0 in mon.confirmed
+
+
+def test_monitor_feeds_the_fault_tier(tp_world):
+    """install() chains the confirmed view onto the backend's local_failed
+    funnel: comm_get_failed reports it, agree raises the ULFM notification,
+    uninstall restores the quiet default."""
+    mesh, abi = tp_world
+    mon = _monitor(abi, mesh, miss=1, susp=1)
+    comm = mon.comm
+    mon.install()
+    try:
+        assert abi.comm_get_failed(comm) == ()
+        mon.inject_silence(0)
+        mon.beat()                  # miss=1, susp=1: confirmed immediately
+        assert abi.comm_get_failed(comm) == (0,)
+        with pytest.raises(PaxError) as ei:
+            abi.comm_agree(1, comm)
+        assert ei.value.code == PAX_ERR_PROC_FAILED
+    finally:
+        mon.uninstall()
+    assert abi.comm_get_failed(comm) == ()
+
+
+def test_monitor_validates_thresholds(tp_world):
+    mesh, abi = tp_world
+    with pytest.raises(ValueError):
+        _monitor(abi, mesh, miss=0, susp=1)
+    with pytest.raises(ValueError):
+        _monitor(abi, mesh, miss=1, susp=0)
+
+
+# ---------------------------------------------------------------------------
+# supervisor recovery: walk order, ledger invariants, retry/backoff bounds
+# (fake transport — no jax work; the scheduler and requests are real)
+# ---------------------------------------------------------------------------
+class _FakeAbi:
+    """Records the fault-tier walk; shrink returns a tagged survivor."""
+
+    def __init__(self, failed=(2,)):
+        self.reported = tuple(failed)
+        self.walk = []
+
+    def comm_get_failed(self, comm):
+        self.walk.append("get_failed")
+        return self.reported
+
+    def comm_revoke(self, comm):
+        self.walk.append("revoke")
+
+    def comm_failure_ack(self, comm):
+        self.walk.append("ack")
+
+    def comm_agree(self, v, comm):
+        self.walk.append("agree")
+        return v
+
+    def comm_shrink(self, comm):
+        self.walk.append("shrink")
+        return ("survivor", comm)
+
+    def comm_size(self, comm):
+        return 3
+
+
+class _FakeSync:
+    def __init__(self, abi, comm="tp", mesh="mesh"):
+        self.abi, self.comm, self.mesh = abi, comm, mesh
+        self.freed = False
+
+    def free(self):
+        self.freed = True
+
+
+class _FakeEngine:
+    """Real Scheduler + real Requests over a fake transport; ``fail_next``
+    arms one PROC_FAILED out of the next step()."""
+
+    def __init__(self, abi, max_batch=3):
+        self.max_batch = max_batch
+        self.decode_sync = _FakeSync(abi)
+        alloc = BlockAllocator(num_blocks=16, block_size=4)
+        self.scheduler = Scheduler(alloc, max_batch=max_batch,
+                                   prefill_chunk=4, table_width=4)
+        self.stats = {"steps": 0}
+        self.last_expired = []
+        self.fail_next = False
+        self.rebuilt = []
+
+    def submit(self, req):
+        if req.submit_step is None:
+            req.submit_step = self.stats["steps"]
+        self.scheduler.submit(req)
+
+    @property
+    def has_work(self):
+        return self.scheduler.has_work
+
+    def rebuild_decode_sync(self, abi, comm, mesh):
+        self.rebuilt.append(comm)
+        self.decode_sync = _FakeSync(abi, comm, mesh)
+
+    def step(self):
+        self.stats["steps"] += 1
+        self.last_expired = self.scheduler.expire(self.stats["steps"])
+        self.scheduler.admit()
+        if self.fail_next:
+            self.fail_next = False
+            raise PaxError(PAX_ERR_PROC_FAILED, "injected")
+        # decode one token per occupied slot; finish at max_new_tokens
+        for i, s in enumerate(self.scheduler.slots):
+            if s is None:
+                continue
+            s.state = DECODE
+            s.req.out_tokens.append(100 + len(s.req.out_tokens))
+            if len(s.req.out_tokens) >= s.req.max_new_tokens:
+                s.req.done = True
+                self.scheduler.finish(i)
+
+
+def _mk_world(**sup_kw):
+    abi = _FakeAbi()
+    eng = _FakeEngine(abi)
+    sup = ServeSupervisor(eng, **sup_kw)
+    reqs = [Request(i, np.arange(1, 4, dtype=np.int32), max_new_tokens=6)
+            for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    return abi, eng, sup, reqs
+
+
+def test_recovery_walk_and_replay_ledger():
+    abi, eng, sup, reqs = _mk_world()
+    sup.step()                         # all admitted, one token each
+    sup.step()
+    mid = [len(r.out_tokens) for r in reqs]
+    assert mid == [2, 2, 2]
+    eng.fail_next = True
+    sup.step()                         # dies mid-decode; supervisor recovers
+    # the canonical ULFM order, with the dead group retired and rebuilt
+    wo = [w for w in abi.walk if w != "get_failed"]
+    assert wo[:1] == ["agree"]         # the pre-step notification probe
+    assert wo[-4:] == ["revoke", "ack", "agree", "shrink"]
+    assert eng.rebuilt == [("survivor", "tp")]
+    # replay: every in-flight request back at the queue head, from scratch,
+    # in submission order; generated tokens counted then discarded
+    rep = sup.report
+    assert rep.failures == 1 and rep.replays == 1
+    assert rep.tokens_replayed == sum(mid)
+    assert rep.requeued == 3 and rep.dropped == 0
+    assert rep.failed_ranks == [(2,)]
+    assert [r.rid for r in eng.scheduler.waiting] == [0, 1, 2]
+    assert all(r.out_tokens == [] and not r.done and r.retries == 1
+               for r in reqs)
+    rep.assert_consistent()
+    sup.drain()                        # completes cleanly after recovery
+    assert all(len(r.out_tokens) == 6 and r.done for r in reqs)
+    rep.assert_consistent()
+
+
+def test_backoff_doubles_and_failures_are_bounded():
+    delays = []
+    abi, eng, sup, reqs = _mk_world(max_failures=3, backoff_s=0.5,
+                                    sleep=delays.append)
+    for _ in range(3):
+        eng.fail_next = True
+        sup.step()
+    assert delays == [0.5, 1.0, 2.0]   # exponential schedule
+    assert sup.report.backoff_s_total == 3.5
+    eng.fail_next = True
+    with pytest.raises(RuntimeError, match="exceeded 3"):
+        sup.step()
+
+
+def test_retries_are_bounded_per_request():
+    abi, eng, sup, reqs = _mk_world(max_retries=2, max_failures=5)
+    for _ in range(3):
+        sup.step()                     # get everyone in flight
+        eng.fail_next = True
+        sup.step()
+    rep = sup.report
+    # third replay exceeds max_retries=2: dropped with the failed flag,
+    # loudly — never a silent disappearance
+    assert rep.dropped == 3 and all(r.failed and r.done for r in reqs)
+    assert all(n == 3 for n in rep.retries.values())
+    rep.assert_consistent()
+    assert not eng.has_work
+
+
+def test_unattributed_failure_is_loud():
+    """PROC_FAILED with no detector naming a corpse (no monitor, transport
+    reports nothing) must not walk revoke/shrink blindly."""
+    abi = _FakeAbi(failed=())
+    eng = _FakeEngine(abi)
+    sup = ServeSupervisor(eng)
+    eng.submit(Request(0, np.arange(1, 4, dtype=np.int32), max_new_tokens=4))
+    eng.fail_next = True
+    with pytest.raises(RuntimeError, match="no failure detector"):
+        sup.step()
+    assert "revoke" not in abi.walk
+
+
+def test_supervisor_requires_decode_sync():
+    eng = _FakeEngine(_FakeAbi())
+    eng.decode_sync = None
+    with pytest.raises(ValueError, match="DecodeSync"):
+        ServeSupervisor(eng)
+
+
+# ---------------------------------------------------------------------------
+# ledger invariants stand alone
+# ---------------------------------------------------------------------------
+def test_ledger_invariants():
+    rep = ServeRecoveryReport()
+    rep.assert_consistent()            # the empty ledger is consistent
+    rep.failures = 2
+    rep.replays = 1
+    rep.requeued = 2
+    rep.dropped = 1
+    rep.retries = {0: 1, 1: 2}
+    rep.failed_ranks = [(2,), (5,)]
+    rep.tokens_replayed = 7
+    rep.assert_consistent()
+    rep.requeued = 5                   # retries no longer account for it
+    with pytest.raises(AssertionError):
+        rep.assert_consistent()
+
+
+# ---------------------------------------------------------------------------
+# deadline expiry + graceful requeue (scheduler level)
+# ---------------------------------------------------------------------------
+def test_deadline_expires_waiting_and_running():
+    alloc = BlockAllocator(num_blocks=16, block_size=4)
+    s = Scheduler(alloc, max_batch=1, prefill_chunk=4, table_width=4)
+    fast = Request(0, np.arange(1, 4, dtype=np.int32), max_new_tokens=4,
+                   deadline_steps=2, submit_step=0)
+    slow = Request(1, np.arange(1, 4, dtype=np.int32), max_new_tokens=4,
+                   deadline_steps=10, submit_step=0)
+    never = Request(2, np.arange(1, 4, dtype=np.int32), max_new_tokens=4)
+    for r in (fast, slow, never):
+        s.submit(r)
+    s.admit()                          # fast takes the only slot
+    assert s.expire(1) == []           # now-submit < deadline: still live
+    held = alloc.live_blocks
+    assert held > 0
+    out = s.expire(2)                  # deadline hit: running fast evicted
+    assert out == [fast] and fast.expired and fast.done
+    assert alloc.live_blocks == 0 and s.slots[0] is None
+    out = s.expire(10)                 # waiting slow expires in the queue
+    assert out == [slow] and slow.expired
+    assert list(s.waiting) == [never]  # no deadline: never expires
+
+
+def test_requeue_is_front_of_queue_in_order():
+    alloc = BlockAllocator(num_blocks=16, block_size=4)
+    s = Scheduler(alloc, max_batch=1, prefill_chunk=4, table_width=4)
+    tail = Request(9, np.arange(1, 4, dtype=np.int32), max_new_tokens=4)
+    s.submit(tail)
+    replayed = [Request(i, np.arange(1, 4, dtype=np.int32), max_new_tokens=4)
+                for i in (0, 1)]
+    s.requeue(replayed)
+    assert [r.rid for r in s.waiting] == [0, 1, 9]
