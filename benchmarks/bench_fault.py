@@ -43,25 +43,58 @@ PR 9 adds the serving counterparts:
   tests/multidev_battery.py §16 (tp=4, mid-decode kill, three dispatch
   paths); the bench gates the accounting bound.
 
+PR 10 adds the transport-integrity contracts:
+
+* ``integrity_off_dispatch_ratio`` — the hoisted allreduce plan start+wait
+  on a context built with ``integrity=False`` over a twin that never heard
+  of the flag.  The integrity envelope is applied at *plan compile time*
+  (``_wrap_plan_integrity`` returns the run closure untouched when the
+  mode is off), so disabled checksums must cost literally zero per-call
+  Python — the gate pins the ratio at 1.0 ± 5%, same statistic and same
+  interleaved session as the other dispatch-ratio gates.
+* ``integrity_check_overhead_ratio`` — compiled-execution wall cost of an
+  integrity-ON allreduce plan step (the in-trace checksum + agreement psum
+  + poison select fused into the collective's XLA program) over its
+  integrity-off twin, median of interleaved per-round pairs.  Recorded to
+  track the price of the one fused checksum reduction; the gate is a
+  coarse ceiling (8×) that catches the envelope degenerating into
+  per-element host work or extra materialization passes, not a perf claim
+  (on a tiny single-device psum the fixed costs dominate both sides).
+* ``transport_retry_recovery_steps`` — a supervised run with a
+  ``RetryPolicy`` armed and a one-shot ``PAX_ERR_DATA_CORRUPTION`` injected
+  mid-interval; the record counts step executions beyond the first per
+  step.  Gate: must stay ≤ the companion ``transport_retry_budget``
+  (``max_retries``) — an in-place transport retry re-runs only the faulted
+  step, never a checkpoint interval (the drill asserts ``restarts == 0``:
+  the checkpoint machinery is not touched at all, which is the whole point
+  of retrying below the restart tier).
+
 The end-to-end elastic legs (kill a rank at dp=8, shrink, bitwise resume
 at dp=4) live in tests/multidev_battery.py sections 13–14 and the serving
-kill-recovery leg in section 16; this module only measures the numeric
-contracts check_regression.py gates.
+kill-recovery leg in section 16; the corrupt/drop transport legs are
+battery §18; this module only measures the numeric contracts
+check_regression.py gates.
 """
 from __future__ import annotations
 
+import gc
 import tempfile
+import time
 from collections import Counter
 
+import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 import repro.core as C
 from benchmarks.bench_message_rate import (_median, _mesh,
                                            _persistent_session_ns)
 from repro.checkpoint.checkpointer import Checkpointer
-from repro.core.errors import PAX_ERR_PROC_FAILED, PaxError
-from repro.runtime.fault import run_supervised
+from repro.core.compat import shard_map
+from repro.core.errors import (PAX_ERR_DATA_CORRUPTION, PAX_ERR_PROC_FAILED,
+                               PaxError)
+from repro.runtime.fault import RetryPolicy, run_supervised
 
 
 def _exercised_abi(mesh):
@@ -173,6 +206,97 @@ def _serve_replay_drill(mesh) -> tuple[float, float]:
     return float(rep.tokens_replayed), float(MAXB * MAXNEW)
 
 
+def _integrity_plan_items(mesh) -> dict:
+    """The two sides of ``integrity_off_dispatch_ratio``: the hoisted
+    allreduce plan start/wait on a context that never heard of the
+    integrity flag and on a twin built with ``integrity=False``.  The
+    envelope decision is made once, in ``_compile_plan`` — when the mode
+    is off the run closure comes back identical — so the per-call paths
+    must be indistinguishable."""
+    x = jnp.ones((1,), jnp.float32)
+    abi_plain = C.pax_init(mesh, impl="paxi")
+    abi_off = C.pax_init(mesh, impl="paxi", integrity=False)
+    return {"plain": abi_plain.allreduce_init(x, C.PAX_SUM, C.PAX_COMM_SELF),
+            "off": abi_off.allreduce_init(x, C.PAX_SUM, C.PAX_COMM_SELF)}
+
+
+def _integrity_overhead_ratio(mesh) -> tuple[float, float, float]:
+    """Compiled-execution cost of an integrity-ON allreduce plan step over
+    its integrity-off twin: both sides are one jitted shard_map program
+    around the plan's hoisted start/wait on an axes-bound dp comm, so the
+    ON side carries the fused checksum + agreement psum + poison select
+    in-trace.  Returns (median per-round ratio, on_ns, off_ns)."""
+    n = 4096
+    x = jnp.arange(n, dtype=jnp.float32)
+
+    def _compiled(integrity: bool):
+        abi = C.pax_init(mesh, impl="paxi", integrity=integrity)
+        comm = abi.comm_from_axes(("data",), "dp")
+        plan = abi.allreduce_init(jax.ShapeDtypeStruct((n,), jnp.float32),
+                                  C.PAX_SUM, comm)
+        f = jax.jit(shard_map(lambda v: abi.wait(plan.start(v)), mesh=mesh,
+                              in_specs=P(), out_specs=P()))
+        f(x).block_until_ready()        # compile + warm
+        return f
+
+    fns = {"on": _compiled(True), "off": _compiled(False)}
+    names = list(fns)
+    rounds, number = 11, 50
+    per_round: dict = {name: [] for name in names}
+    gc_was_enabled = gc.isenabled()
+    gc.disable()
+    try:
+        for rep in range(rounds):
+            for name in names[rep % 2:] + names[: rep % 2]:
+                f = fns[name]
+                t0 = time.perf_counter_ns()
+                for _ in range(number):
+                    out = f(x)
+                out.block_until_ready()
+                per_round[name].append(time.perf_counter_ns() - t0)
+            gc.collect(0)
+    finally:
+        if gc_was_enabled:
+            gc.enable()
+    ratio = _median([a / b for a, b in zip(per_round["on"],
+                                           per_round["off"])])
+    return (ratio, min(per_round["on"]) / number,
+            min(per_round["off"]) / number)
+
+
+def _transport_retry_drill(total: int, every: int,
+                           fail_at: int) -> tuple[float, float]:
+    """In-place transport retry: a one-shot ``PAX_ERR_DATA_CORRUPTION`` at
+    step ``fail_at`` is cured by the step-level :class:`RetryPolicy`
+    without the supervisor's restart machinery ever engaging.  Counts step
+    executions beyond the first per step; returns (re_executed, budget)."""
+    calls: Counter = Counter()
+    armed = {"fail": True}
+
+    def step_fn(state, batch):
+        step = int(batch)
+        calls[step] += 1
+        if step == fail_at and armed["fail"]:
+            armed["fail"] = False
+            raise PaxError(PAX_ERR_DATA_CORRUPTION,
+                           "bench: injected corrupted wire payload")
+        return state + 1.0, None
+
+    retry = RetryPolicy(max_retries=2)
+    with tempfile.TemporaryDirectory() as d:
+        report = run_supervised(
+            step_fn, jnp.zeros((4,), jnp.float32), lambda i: i,
+            checkpointer=Checkpointer(d), total_steps=total,
+            checkpoint_every=every, max_restarts=1, retry=retry)
+    # the retry cured the fault below the restart tier: every step completed,
+    # no restore happened, and the policy accounted exactly one retry
+    assert report.steps_completed == total and report.restarts == 0, report
+    assert report.transport_retries == 1, report
+    assert report.transport_escalations == 0, report
+    re_run = float(sum(n - 1 for n in calls.values()))
+    return re_run, float(retry.max_retries)
+
+
 def run() -> list[tuple[str, float, str, str]]:
     mesh = _mesh()
     rows = []
@@ -221,6 +345,35 @@ def run() -> list[tuple[str, float, str, str]]:
                  "companion bound for serve_recovery_tokens_replayed: "
                  "in-flight slots x max_new_tokens of the drill — replay "
                  "is bounded by the in-flight token budget"))
+
+    iitems = _integrity_plan_items(mesh)
+    ises = _persistent_session_ns(iitems, x8)
+    iratio = _median([o / p for o, p in zip(ises["off"], ises["plain"])])
+    rows.append(("integrity_off_dispatch_ratio", iratio, "x",
+                 f"allreduce plan start+wait with integrity=False "
+                 f"{min(ises['off']):.0f}ns vs integrity-naive twin "
+                 f"{min(ises['plain']):.0f}ns; median per-round ratio, "
+                 "interleaved session (gate: 0.95..1.05 — disabled "
+                 "checksums are decided at plan compile, zero per-call)"))
+
+    oratio, on_ns, off_ns = _integrity_overhead_ratio(mesh)
+    rows.append(("integrity_check_overhead_ratio", oratio, "x",
+                 f"compiled integrity-on allreduce plan step {on_ns:.0f}ns "
+                 f"vs off twin {off_ns:.0f}ns; in-trace fused checksum + "
+                 "agreement psum + poison select; median per-round ratio "
+                 "(gate: <= 8.0 — catches the envelope degenerating, not "
+                 "a perf claim)"))
+
+    rsteps, rbudget = _transport_retry_drill(total, every, fail_at)
+    rows.append(("transport_retry_recovery_steps", rsteps, "steps",
+                 f"step executions beyond the first after a one-shot "
+                 f"DATA_CORRUPTION at step {fail_at} cured by RetryPolicy "
+                 "(restarts==0 asserted: no checkpoint rollback; gate: <= "
+                 "transport_retry_budget)"))
+    rows.append(("transport_retry_budget", rbudget, "steps",
+                 "companion bound for transport_retry_recovery_steps: the "
+                 "policy's max_retries — in-place retry re-runs only the "
+                 "faulted step, never a checkpoint interval"))
     return rows
 
 

@@ -99,6 +99,20 @@ baseline box and the CI runner:
   drill) must stay ≤ the same run's ``serve_recovery_replay_ceiling``
   (in-flight slots × max_new_tokens) — replay cost is bounded by the
   in-flight token budget, never by queue depth or history.
+* **transport-integrity gates** (PR 10, from the current run alone):
+  ``integrity_off_dispatch_ratio`` (allreduce plan start+wait on a context
+  built with ``integrity=False`` over an integrity-naive twin, median of
+  interleaved per-round pairs) must stay within 0.95..1.05 — the envelope
+  is decided once at plan compile, so disabled checksums add zero per-call
+  Python; ``integrity_check_overhead_ratio`` (compiled integrity-on plan
+  step over the off twin — the in-trace fused checksum + agreement psum +
+  poison select) must stay ≤ 8× — a coarse ceiling that catches the
+  envelope degenerating into per-element host work or extra passes, not a
+  perf claim; and ``transport_retry_recovery_steps`` (step executions
+  beyond the first after a one-shot ``DATA_CORRUPTION`` cured by the
+  ``RetryPolicy``) must stay ≤ the same run's ``transport_retry_budget`` —
+  an in-place transport retry re-runs only the faulted step, never a
+  checkpoint interval (the bench itself asserts ``restarts == 0``).
 """
 from __future__ import annotations
 
@@ -338,6 +352,48 @@ def main(argv=None) -> int:
                 f"(ceiling: in-flight budget={sceil:.0f} — replay is "
                 "bounded by slots x max_new_tokens, never queue depth)")
         if srep > sceil:
+            failures.append("REGRESSION " + line)
+        else:
+            print("OK " + line)
+
+    # -- transport-integrity gates (PR 10; current run alone) --------------
+    if "integrity_off_dispatch_ratio" not in cur:
+        failures.append("missing record: integrity_off_dispatch_ratio")
+    else:
+        iratio = cur["integrity_off_dispatch_ratio"]
+        lo, hi = 0.95, 1.05
+        line = (f"integrity_off_dispatch_ratio={iratio:.3f} "
+                f"(allowed {lo:.2f}..{hi:.2f}: disabled wire checksums are "
+                "a plan-compile decision and may not tax per-call dispatch)")
+        if not lo <= iratio <= hi:
+            failures.append("REGRESSION " + line)
+        else:
+            print("OK " + line)
+
+    if "integrity_check_overhead_ratio" not in cur:
+        failures.append("missing record: integrity_check_overhead_ratio")
+    else:
+        oratio = cur["integrity_check_overhead_ratio"]
+        line = (f"integrity_check_overhead_ratio={oratio:.3f} "
+                "(ceiling 8.00: the enabled envelope is one fused in-trace "
+                "checksum reduction, not per-element host work)")
+        if oratio > 8.0:
+            failures.append("REGRESSION " + line)
+        else:
+            print("OK " + line)
+
+    if ("transport_retry_recovery_steps" not in cur
+            or "transport_retry_budget" not in cur):
+        failures.append("missing record: transport_retry_recovery_steps / "
+                        "transport_retry_budget")
+    else:
+        rsteps = cur["transport_retry_recovery_steps"]
+        rbudget = cur["transport_retry_budget"]
+        line = (f"transport_retry_recovery_steps={rsteps:.0f} steps "
+                f"(ceiling: retry budget={rbudget:.0f} — in-place retry "
+                "re-runs only the faulted step, never a checkpoint "
+                "interval)")
+        if rsteps > rbudget:
             failures.append("REGRESSION " + line)
         else:
             print("OK " + line)

@@ -21,6 +21,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                 "..", "src"))
 
 from repro.core import abi_spec  # noqa: E402
+from repro.core import errors as _errors  # noqa: E402
 
 OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                    "abi_reference.md")
@@ -80,6 +81,23 @@ def _recipe_cell(entry) -> str:
     return f"{deps} — #{order.index(entry.name) + 1} in build order"
 
 
+def _integrity_cell(entry) -> str:
+    return entry.integrity or "—"
+
+
+_ERR_NOTE = {
+    "PAX_ERR_PROC_FAILED": "fault tier: a peer is dead (ULFM)",
+    "PAX_ERR_REVOKED": "fault tier: the communicator was revoked (ULFM)",
+    "PAX_ERR_DATA_CORRUPTION": (
+        "transport tier: a checksummed collective disagreed across the "
+        "communicator (integrity mode; the payload carries the poison fill)"),
+    "PAX_ERR_TIMEOUT": (
+        "transport tier: a `wait` with `timeout_s` expired before the "
+        "operation completed (a dropped message); the request stays active "
+        "so `Plan.reset`/`PlanGroup.reset` can abort and re-arm the slot"),
+}
+
+
 def _muk_cell(entry) -> str:
     cell = f"`{entry.impl_name}` → {entry.muk_ret}"
     if entry.temps:
@@ -135,13 +153,24 @@ def generate() -> str:
         "position in",
         "`EMULATION_ORDER` (the topological build order negotiation "
         "resolves in);",
+        "*integrity* names the end-to-end checksum rule the opt-in "
+        "integrity mode",
+        "(`pax_init(..., integrity=True)`) compiles into the entry's "
+        "plan/group run",
+        "closures (`replicated` = all members must agree bitwise-ish across "
+        "the",
+        "communicator; `conserved` = the scattered output must conserve the "
+        "input",
+        "checksum under `PAX_SUM`); a violation raises "
+        "`PAX_ERR_DATA_CORRUPTION` at",
+        "materialization and the payload carries the canonical poison fill;",
         "*Mukautuva* gives the foreign symbol and return protocol of the "
         "generated",
         "conversion wrapper.",
         "",
         "| entry | tier | arguments | bytes | `i*` | `_init` | plan | group "
-        "| recipe deps | Mukautuva |",
-        "|---|---|---|---|---|---|---|---|---|---|",
+        "| integrity | recipe deps | Mukautuva |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
     ]
     for e in abi_spec.ABI_TABLE:
         lines.append("| " + " | ".join([
@@ -153,6 +182,7 @@ def generate() -> str:
             "✓" if e.persistent else "—",
             _plan_cell(e),
             _group_cell(e),
+            _integrity_cell(e),
             _recipe_cell(e),
             _muk_cell(e),
         ]) + " |")
@@ -166,6 +196,29 @@ def generate() -> str:
         "",
     ]
     lines.append(" → ".join(f"`{n}`" for n in abi_spec.EMULATION_ORDER))
+    lines += [
+        "",
+        "## Error classes",
+        "",
+        "The ABI error domain (`repro.core.errors`), surfaced as `PaxError` "
+        "under",
+        "`PAX_ERRORS_ARE_FATAL` (the default) or returned as codes under",
+        "`PAX_ERRORS_RETURN`.  The wait family (`wait`, `waitall`, "
+        "`Plan.wait`,",
+        "`PlanGroup.wait`) accepts `timeout_s`; without it a dropped "
+        "operation is a",
+        "faithful hang.  `TRANSPORT_ERRORS` groups the two transport codes "
+        "for",
+        "retry policies (`runtime.fault.RetryPolicy`, "
+        "`serve.ServeSupervisor`).",
+        "",
+        "| code | name | note |",
+        "|---|---|---|",
+    ]
+    for code, name in sorted(_errors._ERROR_NAMES.items()):
+        if code >= _errors.PAX_ERR_LASTCODE:
+            continue
+        lines.append(f"| {code} | `{name}` | {_ERR_NOTE.get(name, '—')} |")
     lines.append("")
     return "\n".join(lines)
 

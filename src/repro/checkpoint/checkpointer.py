@@ -12,6 +12,10 @@
   path is exercised when re-placing dp-replicated trees.
 * ``latest_step`` / ``gc_old`` implement retention for the restart
   supervisor (runtime/fault.py).
+* **Content integrity** (PR 10): the manifest records a CRC32 per shard
+  file at ``_write`` time; ``restore`` verifies before unpacking, and a
+  corrupt or torn shard falls back — loudly, via ``integrity_events`` —
+  to the previous retained checkpoint instead of restoring garbage.
 """
 from __future__ import annotations
 
@@ -20,6 +24,7 @@ import os
 import shutil
 import threading
 import time
+import zlib
 from pathlib import Path
 from typing import Any, Optional
 
@@ -32,12 +37,33 @@ def _flatten_with_names(tree) -> list[tuple[str, Any]]:
     return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
 
 
+def _file_crc32(path: Path) -> int:
+    crc = 0
+    with open(path, "rb") as f:
+        while True:
+            chunk = f.read(1 << 20)
+            if not chunk:
+                break
+            crc = zlib.crc32(chunk, crc)
+    return crc & 0xFFFFFFFF
+
+
+class CheckpointCorrupt(RuntimeError):
+    """A checkpoint failed content verification (CRC mismatch, torn or
+    unreadable shard).  ``restore`` raises it only when NO retained
+    checkpoint at or below the requested step verifies."""
+
+
 class Checkpointer:
     def __init__(self, directory: str | Path, keep: int = 3) -> None:
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
         self._pending: Optional[threading.Thread] = None
+        # loud record of every integrity fallback this checkpointer took:
+        # dicts with the rejected step, the reason, and the step restored
+        # instead (the restart supervisor copies this into its report)
+        self.integrity_events: list[dict] = []
 
     # -- save --------------------------------------------------------------
     def save(self, step: int, state) -> Path:
@@ -74,6 +100,9 @@ class Checkpointer:
             "names": [n for n, _ in leaves],
             "treedef": str(treedef),
             "time": time.time(),
+            # content integrity: CRC32 of each shard file as written — the
+            # restore side rejects any bit-flip or truncation before np.load
+            "shard_crc32": {"shard_0.npz": _file_crc32(tmp / "shard_0.npz")},
         }
         (tmp / "manifest.json").write_text(json.dumps(manifest))
         if final.exists():
@@ -89,30 +118,83 @@ class Checkpointer:
         )
         return steps[-1] if steps else None
 
+    def _retained_steps(self) -> list[int]:
+        return sorted(
+            int(p.name.split("_")[1]) for p in self.dir.glob("step_*")
+            if p.is_dir()
+        )
+
+    def _verify(self, path: Path) -> Optional[str]:
+        """Content check for one checkpoint directory: ``None`` when every
+        shard matches its manifest CRC, else the human-readable reason."""
+        try:
+            manifest = json.loads((path / "manifest.json").read_text())
+        except (OSError, ValueError) as e:
+            return f"unreadable manifest ({e})"
+        # pre-PR-10 checkpoints carry no CRCs: nothing to verify against
+        for shard, want in manifest.get("shard_crc32", {}).items():
+            f = path / shard
+            if not f.exists():
+                return f"missing shard {shard}"
+            got = _file_crc32(f)
+            if got != want:
+                return (f"shard {shard} CRC mismatch "
+                        f"(manifest {want:#010x}, file {got:#010x})")
+        return None
+
     def restore(self, like, step: Optional[int] = None, mesh=None, specs=None):
         """Restore into the structure of ``like`` (a pytree of arrays or
         ShapeDtypeStructs).  If mesh+specs given, device_put each leaf with
         its NamedSharding — this is the elastic-reshard path (the new mesh
-        may have a different dp size than the one that saved)."""
+        may have a different dp size than the one that saved).
+
+        Every candidate checkpoint is CRC-verified before unpacking; a
+        corrupt or torn one is recorded in ``integrity_events`` and the
+        previous retained checkpoint is tried instead.  Only when no
+        retained checkpoint verifies does :class:`CheckpointCorrupt`
+        propagate — restoring garbage is never an outcome.
+        """
         if step is None:
             step = self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {self.dir}")
-        path = self.dir / f"step_{step:010d}"
-        data = np.load(path / "shard_0.npz")
-        manifest = json.loads((path / "manifest.json").read_text())
-        leaves = [data[f"leaf_{i}"] for i in range(manifest["n_leaves"])]
-        treedef = jax.tree.structure(like)
-        restored = jax.tree.unflatten(treedef, leaves)
-        if mesh is not None and specs is not None:
-            from jax.sharding import NamedSharding
+        candidates = [s for s in self._retained_steps() if s <= step]
+        if not candidates:
+            raise FileNotFoundError(
+                f"no checkpoint at or below step {step} under {self.dir}")
+        rejected: list[dict] = []
+        for s in reversed(candidates):
+            path = self.dir / f"step_{s:010d}"
+            reason = self._verify(path)
+            if reason is None:
+                try:
+                    data = np.load(path / "shard_0.npz")
+                    manifest = json.loads((path / "manifest.json").read_text())
+                    leaves = [data[f"leaf_{i}"]
+                              for i in range(manifest["n_leaves"])]
+                except Exception as e:  # torn write that still matched CRC
+                    reason = f"unreadable shard ({e})"
+            if reason is not None:
+                event = {"step": s, "reason": reason, "fell_back_to": None}
+                rejected.append(event)
+                self.integrity_events.append(event)
+                continue
+            for event in rejected:
+                event["fell_back_to"] = s
+            treedef = jax.tree.structure(like)
+            restored = jax.tree.unflatten(treedef, leaves)
+            if mesh is not None and specs is not None:
+                from jax.sharding import NamedSharding
 
-            restored = jax.tree.map(
-                lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
-                restored, specs,
-                is_leaf=lambda v: isinstance(v, np.ndarray),
-            )
-        return restored, step
+                restored = jax.tree.map(
+                    lambda x, sp: jax.device_put(x, NamedSharding(mesh, sp)),
+                    restored, specs,
+                    is_leaf=lambda v: isinstance(v, np.ndarray),
+                )
+            return restored, s
+        raise CheckpointCorrupt(
+            f"every retained checkpoint at or below step {step} failed "
+            f"verification: {rejected}")
 
     def _gc(self) -> None:
         steps = sorted(

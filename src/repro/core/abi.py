@@ -95,23 +95,30 @@ completion.
 from __future__ import annotations
 
 import dataclasses
+import os
+import time
 import weakref
 from typing import Any, Callable, Optional, Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 from . import abi_spec
 from . import compat
 from . import emulation
 from . import handles as H
-from .communicator import CommTable
+from .communicator import CommTable, comm_rank_traced
 from .constants import PAX_ANY_SOURCE, PAX_ANY_TAG
 from .datatypes import DatatypeRegistry
 from .errors import (
+    PAX_ERR_DATA_CORRUPTION,
     PAX_ERR_REQUEST,
+    PAX_ERR_TIMEOUT,
     PAX_ERR_UNSUPPORTED_OPERATION,
     PAX_SUCCESS,
+    IncompleteValue,
     PaxError,
 )
 from .ops import OpRegistry
@@ -426,13 +433,202 @@ def _wrap_revoke(abi: "PaxABI", inner: Callable) -> Callable:
     return comm_revoke
 
 
+# ---------------------------------------------------------------------------
+# Transport-integrity tier (PR 10).
+#
+# The wire may lie: a corrupted payload is a *silent* wrong answer, a dropped
+# message is a *hang*.  Neither is representable as a backend return code, so
+# the ABI handles them at its two natural choke points:
+#
+# * **Checksum envelope** — opt-in (``PaxABI(integrity=True)`` /
+#   ``PAX_WIRE_INTEGRITY=1``).  The plan/group compilers wrap each run
+#   closure with ONE fused checksum reduction built at plan time (the PR-4/5
+#   hoisting discipline — when disabled the wrap returns the closure
+#   unchanged, so the off path is byte-identical to a context that never
+#   heard of integrity).  Because production collectives run at trace time
+#   inside shard_map regions, the verdict cannot raise there; instead a
+#   failed check folds the canonical POISON fill into the result
+#   (whole-payload NaN for floats, INT_MIN for ints — a bitwise pass-through
+#   ``select`` when the check passes), and :meth:`PaxABI.verify_clean`
+#   raises ``PAX_ERR_DATA_CORRUPTION`` at the first host materialization —
+#   the same dispatch-time-injection / host-time-detection split the failure
+#   probe uses for rank death.
+#
+#   Two per-entry rules (declared in ``abi_spec.AbiEntry.integrity``):
+#   ``replicated`` (allreduce/bcast/allgather: every member must hold the
+#   same bits — exact agreement of a bit-pattern checksum) and ``conserved``
+#   (reduce_scatter under SUM: the value total is conserved across the
+#   scatter — tolerance compare of one fused (in, out) sum pair).
+#
+# * **Wait timeouts** — ``wait``/``waitall``/``plan.wait``/``group.wait``
+#   accept ``timeout_s``.  A dropped operation's value is the
+#   :class:`IncompleteValue` sentinel planted by the injection layer; a wait
+#   that meets it sleeps out the deadline and raises ``PAX_ERR_TIMEOUT``
+#   **leaving the request active** — ``Plan.reset``/``PlanGroup.reset`` is
+#   the abort path that re-arms the slot, so a timed-out plan is never
+#   wedged.  Without a deadline the wait blocks forever: a drop is a hang,
+#   faithfully.
+# ---------------------------------------------------------------------------
+
+INTEGRITY_ENV_VAR = "PAX_WIRE_INTEGRITY"
+
+#: checksums are kept below 2**20 so every value in the agreement
+#: arithmetic (sums over <= full_size members, their mean, deviations) is
+#: exactly representable in float32 — detection is deterministic, not
+#: probabilistic-up-to-rounding
+_CK_MOD = 1048573  # largest prime below 2**20
+
+_BITCAST_WIDTH = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32}
+
+
+def _bits_checksum(x):
+    """Exact bit-pattern checksum of a payload (pytree or member list):
+    every element's representation reduced mod ``_CK_MOD`` **before** the
+    uint32 wrap-sum, then folded mod ``_CK_MOD`` again into an
+    exactly-representable float32 scalar.
+
+    The per-element reduction is what makes detection deterministic for
+    structured corruption: a same-bit flip applied to every element (the
+    injector's sign flip) shifts a plain wrap-sum by ``n * 2**31``, which
+    vanishes mod ``2**32`` whenever ``n`` is even.  Reduced mod a prime
+    first, the per-element delta becomes ``2**31 % _CK_MOD`` (nonzero, not
+    a power of two), and ``n`` of them cannot cancel mod the prime for any
+    payload smaller than the prime itself."""
+    total = jnp.uint32(0)
+    for leaf in jax.tree.leaves(x):
+        if not hasattr(leaf, "dtype"):
+            continue
+        if leaf.dtype == jnp.bool_:
+            u = jnp.asarray(leaf).astype(jnp.uint32)
+        else:
+            width = _BITCAST_WIDTH.get(jnp.dtype(leaf.dtype).itemsize)
+            if width is None:  # 8-byte lanes (x64 only): value-fold instead
+                u = jnp.asarray(leaf).astype(jnp.uint32)
+            else:
+                u = lax.bitcast_convert_type(leaf, width).astype(jnp.uint32)
+        total = total + jnp.sum(u % jnp.uint32(_CK_MOD))
+    return (total % jnp.uint32(_CK_MOD)).astype(jnp.float32)
+
+
+def _value_checksum(x):
+    """Value-semantic checksum for conservation laws: the float32 sum over
+    every leaf (reassociation noise is covered by the relative tolerance
+    in :func:`_conservation_bad`)."""
+    total = jnp.float32(0)
+    for leaf in jax.tree.leaves(x):
+        if hasattr(leaf, "dtype"):
+            total = total + jnp.sum(jnp.asarray(leaf).astype(jnp.float32))
+    return total
+
+
+def _member_gate(info):
+    """Trace-time membership of this shard in ``info``'s comm (None when
+    the comm has no excludes — every shard of the axes is a member)."""
+    if not info.excludes:
+        return None
+    r = comm_rank_traced(info)
+    return jnp.all(r != jnp.asarray(info.excludes, jnp.int32))
+
+
+def _agreement_bad(ck, info, n_members: int):
+    """Replicated-output rule: all members must hold the same checksum.
+    Masked mean/deviation over the comm's axes (excluded shards contribute
+    zero), exact in float32 by the ``_CK_MOD`` bound — deviation is 0.0
+    iff every member agrees."""
+    member = _member_gate(info)
+    ckm = ck if member is None else jnp.where(member, ck, 0.0)
+    mean = lax.psum(ckm, info.axes) / n_members
+    dev = jnp.abs(ck - mean)
+    if member is not None:
+        dev = jnp.where(member, dev, 0.0)
+    return lax.psum(dev, info.axes) > 0.25
+
+
+def _conservation_bad(ck_in, ck_out, info):
+    """Conserved-total rule (reduce_scatter under SUM): what went onto the
+    wire must come off it.  One fused psum of the stacked (in, out) pair,
+    then a relative-tolerance compare."""
+    pair = jnp.stack([ck_in, ck_out])
+    member = _member_gate(info)
+    if member is not None:
+        pair = jnp.where(member, pair, jnp.zeros_like(pair))
+    s = lax.psum(pair, info.axes)
+    return jnp.abs(s[0] - s[1]) > 1e-3 * (jnp.abs(s[0]) + 1.0)
+
+
+def _poison_where(bad, out):
+    """Fold the integrity verdict into the payload: a bitwise pass-through
+    select when clean, the canonical whole-payload poison fill when not
+    (NaN for floats, INT_MIN for ints; bools pass through — no pattern).
+    ``verify_clean`` recognizes the fill at host materialization."""
+
+    def leaf(o):
+        if not hasattr(o, "dtype"):
+            return o
+        if jnp.issubdtype(o.dtype, jnp.floating):
+            p = jnp.full(o.shape, jnp.nan, o.dtype)
+        elif jnp.issubdtype(o.dtype, jnp.integer):
+            p = jnp.full(o.shape, jnp.iinfo(o.dtype).min, o.dtype)
+        else:
+            return o
+        return jnp.where(bad, p, o)
+
+    return jax.tree_util.tree_map(leaf, out)
+
+
+#: poll period of a deadline-less wait on a dropped operation (a real hang,
+#: interruptible from the keyboard)
+_HANG_POLL_S = 0.05
+
+
+def _await_incomplete(iv: IncompleteValue, timeout_s, what: str):
+    """A wait met a dropped operation's sentinel.  With a deadline: sleep
+    it out and raise ``PAX_ERR_TIMEOUT`` (the caller has NOT mutated the
+    request — it stays active, so ``reset`` can abort and re-arm).  Without
+    one: block forever, because that is what a dropped message does."""
+    if timeout_s is None:
+        while True:
+            time.sleep(_HANG_POLL_S)
+    time.sleep(max(0.0, float(timeout_s)))
+    raise PaxError(
+        PAX_ERR_TIMEOUT,
+        f"{what} did not complete within {timeout_s}s: {iv.detail}")
+
+
+def _first_incomplete(value) -> Optional[IncompleteValue]:
+    """The drop sentinel in a wait's value, if any (group values are member
+    lists — scan them).  Identity type checks: ~nothing on the clean path."""
+    if value.__class__ is IncompleteValue:
+        return value
+    if value.__class__ is list or value.__class__ is tuple:
+        for x in value:
+            if x.__class__ is IncompleteValue:
+                return x
+    return None
+
+
 class PaxABI:
     """One initialized ABI context (``MPI_Init`` .. ``MPI_Finalize``)."""
 
     def __init__(self, backend, mesh=None, tools: Sequence = (),
-                 req_slot_bits: Optional[int] = None) -> None:
+                 req_slot_bits: Optional[int] = None,
+                 integrity: Optional[bool] = None) -> None:
         self.backend = backend
         self.mesh = mesh if mesh is not None else backend.mesh
+        # end-to-end wire integrity (PR 10): the opt-in decision is taken
+        # HERE, once — plan/group compilation consults the flag and the off
+        # path compiles byte-identical closures to a pre-integrity context
+        if integrity is None:
+            integrity = os.environ.get(
+                INTEGRITY_ENV_VAR, "").lower() in ("1", "true", "on")
+        self.integrity = bool(integrity)
+        # Only a loss-capable backend (the faulty: injection wrapper) can
+        # ever plant the IncompleteValue drop sentinel, so the plan/group
+        # wait closures compile the sentinel guard ONLY behind this flag —
+        # the common-backend wait stays the bare two-field flip (the PR-4
+        # dispatch discipline: a robustness feature may not tax the hot
+        # path of a backend that cannot exhibit the fault).
+        self._can_drop = bool(getattr(backend, "can_lose_messages", False))
         # ABI-domain tables (shared with a native backend, private otherwise)
         self.comms: CommTable = getattr(backend, "comms", None) or CommTable(self.mesh)
         self.ops: OpRegistry = getattr(backend, "ops", None) or OpRegistry()
@@ -736,6 +932,111 @@ class PaxABI:
             )
         return _freeze_run(entry, impl, bound)
 
+    # ------------------------------------------------------------------
+    # transport-integrity envelope (PR 10) — plan-time hoisted checksums
+    # ------------------------------------------------------------------
+    def _integrity_rule(self, entry: abi_spec.AbiEntry, bound: tuple):
+        """``(rule, comm_info)`` when this plan qualifies for the checksum
+        envelope, else ``None``.  The decision is wholly plan-time: the
+        context flag, the entry's declared rule, a real-axes comm (there is
+        no wire on COMM_SELF), and — for conservation — a SUM op."""
+        if not self.integrity:
+            return None
+        rule = entry.integrity
+        if rule is None:
+            return None
+        ci = next((i for i, a in enumerate(entry.args)
+                   if a.kind == abi_spec.COMM), None)
+        if ci is None or len(entry.payload_args) != 1:
+            return None
+        info = self.comms.info(bound[ci])
+        if not info.axes:
+            return None
+        if rule == "conserved":
+            oi = next((i for i, a in enumerate(entry.args)
+                       if a.kind == abi_spec.OP), None)
+            if oi is None or bound[oi] != H.PAX_SUM:
+                return None  # the conservation law holds for SUM only
+        return rule, info
+
+    def _wrap_plan_integrity(self, entry: abi_spec.AbiEntry, bound: tuple,
+                             run: Callable) -> Callable:
+        """Wrap a plan run closure with the end-to-end checksum envelope.
+
+        Disabled (or unsupported for the entry/comm/op): returns ``run``
+        unchanged — zero per-call Python, the PR-4 contract.  Enabled: one
+        fused checksum reduction per start, verdict folded into the output
+        as the poison fill (raising happens at host materialization via
+        :meth:`verify_clean` — trace-time code cannot raise on data)."""
+        q = self._integrity_rule(entry, bound)
+        if q is None:
+            return run
+        rule, info = q
+        n_members = info.full_size - len(info.excludes)
+        if rule == "replicated":
+            def checked(x, _run=run):
+                out = _run(x)
+                bad = _agreement_bad(_bits_checksum(out), info, n_members)
+                return _poison_where(bad, out)
+        else:  # conserved
+            def checked(x, _run=run):
+                ck_in = _value_checksum(x)
+                out = _run(x)
+                bad = _conservation_bad(ck_in, _value_checksum(out), info)
+                return _poison_where(bad, out)
+        return checked
+
+    def _wrap_group_integrity(self, entry: abi_spec.AbiEntry, bounds,
+                              run: Callable) -> Callable:
+        """Group edition of :meth:`_wrap_plan_integrity`: ONE checksum over
+        the whole fused segment (members share entry, op and comm by the
+        cluster key), one agreement/conservation verdict, poison folded
+        into every member output.  Unchanged closure when disabled."""
+        q = self._integrity_rule(entry, tuple(bounds[0]))
+        if q is None:
+            return run
+        rule, info = q
+        n_members = info.full_size - len(info.excludes)
+        if rule == "replicated":
+            def checked(xs, _run=run):
+                outs = _run(xs)
+                bad = _agreement_bad(_bits_checksum(outs), info, n_members)
+                return [_poison_where(bad, o) for o in outs]
+        else:  # conserved
+            def checked(xs, _run=run):
+                ck_in = _value_checksum(xs)
+                outs = _run(xs)
+                bad = _conservation_bad(
+                    ck_in, _value_checksum(outs), info)
+                return [_poison_where(bad, o) for o in outs]
+        return checked
+
+    def verify_clean(self, value, what: str = "payload") -> None:
+        """Host-side integrity verdict on MATERIALIZED results: raise
+        ``PAX_ERR_DATA_CORRUPTION`` if any leaf carries the canonical
+        poison fill the checksum envelope folds in (whole-leaf NaN /
+        INT_MIN).  No-op when integrity mode is off.  This is the raising
+        half of the two-level design — call it where values become
+        concrete (between steps, on decoded tokens), exactly where the
+        failure probe raises for rank death."""
+        if not self.integrity:
+            return
+        for leaf in jax.tree_util.tree_leaves(value):
+            if not hasattr(leaf, "dtype") or getattr(leaf, "size", 0) == 0:
+                continue
+            a = np.asarray(leaf)
+            if np.issubdtype(a.dtype, np.floating):
+                poisoned = bool(np.isnan(a).all())
+            elif np.issubdtype(a.dtype, np.integer):
+                poisoned = bool((a == np.iinfo(a.dtype).min).all())
+            else:
+                continue
+            if poisoned:
+                raise PaxError(
+                    PAX_ERR_DATA_CORRUPTION,
+                    f"{what}: checksummed collective disagreed across the "
+                    "communicator (payload carries the poison fill)")
+
     def _compile_plan(self, plan: Plan) -> None:
         """(Re)compile a plan's start/wait closures.
 
@@ -745,6 +1046,7 @@ class PaxABI:
         """
         entry = plan.entry
         run = self._plan_run(entry.name, plan.bound)
+        run = self._wrap_plan_integrity(entry, plan.bound, run)
         if self.tools:
             # bake the tool decision: chain, byte accounting from the bound
             # abstract shape (ShapeDtypeStruct leaves carry .size/.dtype, so
@@ -814,16 +1116,35 @@ class PaxABI:
                 _req.value = _run(*payload)
                 return _req
 
-        def wait(_req=req):
-            # wait on an inactive persistent request returns immediately
-            # (MPI semantics); completion deactivates without retiring —
-            # the slot's generation is untouched, the plan is restartable
-            if _req.done:
-                return None
-            _req.done = True
-            v = _req.value
-            _req.value = None  # drop the (possibly traced) value eagerly
-            return v
+        if self._can_drop:
+            def wait(timeout_s=None, _req=req, _IV=IncompleteValue):
+                # wait on an inactive persistent request returns immediately
+                # (MPI semantics); completion deactivates without retiring —
+                # the slot's generation is untouched, the plan is restartable
+                if _req.done:
+                    return None
+                v = _req.value
+                if v.__class__ is _IV:
+                    # dropped op: never completes.  Without a deadline this
+                    # blocks forever (the faithful hang); with one it raises
+                    # PAX_ERR_TIMEOUT and leaves the request ACTIVE so the
+                    # post-timeout abort path is Plan.reset, never a wedge.
+                    _await_incomplete(v, timeout_s,
+                                      f"persistent {ename!r} wait")
+                _req.done = True
+                _req.value = None  # drop the (possibly traced) value eagerly
+                return v
+        else:
+            def wait(timeout_s=None, _req=req):
+                # loss-incapable backend: every start completed synchronously,
+                # so the sentinel guard (and with it any timeout) is
+                # unreachable — the bare two-field flip is the whole wait
+                if _req.done:
+                    return None
+                _req.done = True
+                v = _req.value
+                _req.value = None  # drop the (possibly traced) value eagerly
+                return v
 
         plan.start = start
         plan.wait = wait
@@ -954,8 +1275,10 @@ class PaxABI:
             clusters.setdefault(key, []).append(i)
         segments = []
         for (ename, _), idxs in clusters.items():
-            seg_run = self._plan_group_run(
-                ename, [plans[i].bound for i in idxs])
+            bnds = [plans[i].bound for i in idxs]
+            seg_run = self._plan_group_run(ename, bnds)
+            seg_run = self._wrap_group_integrity(
+                abi_spec.ENTRY_BY_NAME[ename], bnds, seg_run)
             segments.append((tuple(idxs), seg_run))
 
         if len(segments) == 1 and segments[0][0] == tuple(range(n)):
@@ -1023,15 +1346,33 @@ class PaxABI:
             _req.value = _run(payloads)
             return _req
 
-        def wait(_req=req):
-            # wait on an inactive group returns immediately (MPI semantics);
-            # completion deactivates without retiring — one scan, restartable
-            if _req.done:
-                return None
-            _req.done = True
-            v = _req.value
-            _req.value = None
-            return v
+        if self._can_drop:
+            def wait(timeout_s=None, _req=req, _scan=_first_incomplete):
+                # wait on an inactive group returns immediately (MPI
+                # semantics); completion deactivates without retiring —
+                # one scan, restartable
+                if _req.done:
+                    return None
+                v = _req.value
+                iv = _scan(v)
+                if iv is not None:
+                    # a dropped member never completes; the request stays
+                    # ACTIVE across the raise so PlanGroup.reset can abort
+                    _await_incomplete(iv, timeout_s,
+                                      f"plan group {gname!r} wait")
+                _req.done = True
+                _req.value = None
+                return v
+        else:
+            def wait(timeout_s=None, _req=req):
+                # loss-incapable backend: no member can carry the drop
+                # sentinel, so the scan is unreachable — bare flip only
+                if _req.done:
+                    return None
+                _req.done = True
+                v = _req.value
+                _req.value = None
+                return v
 
         group.start = start
         group.wait = wait
@@ -1219,7 +1560,8 @@ class PaxABI:
             pooled.value = pooled.temp_state = pooled.on_complete = None
 
     # -- completion -----------------------------------------------------------
-    def wait(self, request: Request, status: Optional[Status] = None):
+    def wait(self, request: Request, status: Optional[Status] = None,
+             *, timeout_s: Optional[float] = None):
         if request.handle == H.PAX_REQUEST_NULL:
             return None
         if not request.done:
@@ -1234,6 +1576,11 @@ class PaxABI:
                         PAX_ERR_REQUEST,
                         "stale persistent request (its plan was freed)",
                     )
+                iv = _first_incomplete(request.value)
+                if iv is not None:
+                    # dropped op: stays ACTIVE across the timeout raise so
+                    # Plan.reset/PlanGroup.reset can abort the slot
+                    _await_incomplete(iv, timeout_s, "persistent wait")
                 request.done = True
                 value = request.value
                 request.value = None
@@ -1246,6 +1593,11 @@ class PaxABI:
                     "stale, unknown or already-completed request "
                     "(use-after-wait is detected by the generation check)",
                 )
+            iv = _first_incomplete(request.value)
+            if iv is not None:
+                # raise BEFORE retiring: the request stays live, a later
+                # wait (or cancel-by-reset at the plan layer) still works
+                _await_incomplete(iv, timeout_s, "wait")
             request.done = True  # mark first: _retire must see the twin live
             self._retire(request.handle)
             if request.on_complete is not None:
@@ -1264,8 +1616,10 @@ class PaxABI:
             raise PaxError(PAX_ERR_REQUEST, "unknown request")
         return True, self.wait(request, status)
 
-    def waitall(self, requests: Sequence[Request], statuses=None):
-        return [self.wait(r, None if statuses is None else statuses[i])
+    def waitall(self, requests: Sequence[Request], statuses=None,
+                *, timeout_s: Optional[float] = None):
+        return [self.wait(r, None if statuses is None else statuses[i],
+                          timeout_s=timeout_s)
                 for i, r in enumerate(requests)]
 
     def _scan_ready(self, requests: Sequence[Request]) -> bool:

@@ -166,6 +166,14 @@ class AbiEntry:
     #: entry with an ``i*`` twin gets a plan constructor, the way MPI-4 gave
     #: every nonblocking collective a persistent ``_init`` twin.
     persistent: Optional[bool] = None
+    #: end-to-end integrity rule for the opt-in checksummed-wire mode
+    #: (PR 10).  ``"replicated"`` — the entry's result is identical on every
+    #: member (allreduce/bcast/allgather), so a fused cross-member checksum
+    #: *agreement* detects a corrupted payload; ``"conserved"`` — under
+    #: ``PAX_SUM`` the entry conserves the payload total
+    #: (reduce_scatter), so an input-vs-output checksum *conservation* check
+    #: does.  ``None`` — no plan-time checksum envelope for this entry.
+    integrity: Optional[str] = None
 
     def __post_init__(self):
         if not self.backend_method:
@@ -203,6 +211,7 @@ ABI_TABLE: Tuple[AbiEntry, ...] = (
     _e("allreduce", "Allreduce",
        [Arg("x", PAYLOAD), Arg("op", OP), Arg("comm", COMM)],
        nonblocking=True, bytes_arg="x", dtype_size_kwarg=True,
+       integrity="replicated",
        recipe=Recipe(("reduce_scatter", "allgather", "comm_size"),
                      em.build_allreduce, em.plan_allreduce,
                      em.plan_group_allreduce)),
@@ -213,15 +222,15 @@ ABI_TABLE: Tuple[AbiEntry, ...] = (
                      em.plan_group_reduce)),
     _e("bcast", "Bcast",
        [Arg("x", PAYLOAD), Arg("root", ROOT), Arg("comm", COMM)],
-       nonblocking=True, bytes_arg="x",
+       nonblocking=True, bytes_arg="x", integrity="replicated",
        recipe=Recipe(("allreduce", "comm_rank"), em.build_bcast,
                      em.plan_bcast)),
     _e("reduce_scatter", "Reduce_scatter",
        [Arg("x", PAYLOAD), Arg("op", OP), Arg("comm", COMM), Arg("axis", AXIS, 0)],
-       nonblocking=True, bytes_arg="x"),
+       nonblocking=True, bytes_arg="x", integrity="conserved"),
     _e("allgather", "Allgather",
        [Arg("x", PAYLOAD), Arg("comm", COMM), Arg("axis", AXIS, 0)],
-       nonblocking=True, bytes_arg="x"),
+       nonblocking=True, bytes_arg="x", integrity="replicated"),
     _e("alltoall", "Alltoall",
        [Arg("x", PAYLOAD), Arg("comm", COMM),
         Arg("split_axis", AXIS, 0), Arg("concat_axis", AXIS, 0)],

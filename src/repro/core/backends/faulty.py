@@ -24,39 +24,128 @@ Selection is by the explicit ``faulty:<inner>`` prefix
 (:func:`repro.core.registry.get_backend`) or by constructing the wrapper
 directly; the kill schedule comes from ``PAX_FAULT_SCHEDULE`` (deterministic
 CI chaos — ``"rank=5,at=12"``) or from :meth:`FaultSchedule.arm`.
+
+Beyond rank death, the schedule knows three *transport* fault modes
+(``mode=corrupt|drop|delay``, PR 10) — the wire misbehaving short of a
+process dying:
+
+* ``corrupt`` — a deterministic bit-flip of the scheduled collective's
+  payload, applied **once** and only on the scheduled rank's shard (the
+  flip is built into the trace behind a ``lax.axis_index`` mask, so the
+  cross-rank disagreement is real and detectable by the ABI's integrity
+  mode, never a host-side fiction);
+* ``drop`` — from the scheduled call on, collectives on comms containing
+  the rank never complete: the wrapper plants an
+  :class:`~repro.core.errors.IncompleteValue` sentinel as the result, and
+  the only place it ever surfaces is the ``wait`` family's ``timeout_s``
+  (a drop is a hang, not an error).  Payload-less or status-convention
+  entries (``barrier``, ``sendrecv``) cannot carry the sentinel and raise
+  ``PAX_ERR_PROC_FAILED`` instead — which the heartbeat exchange absorbs
+  as an observation, exactly the attribution path a real dropped link
+  feeds.  ``local_failed`` stays **silent** for drops: only timeout plus
+  an installed :class:`~repro.runtime.liveness.HeartbeatMonitor` may name
+  the offender, which is the entire point of the mode.
+* ``delay`` — straggler latency: ``delay_s`` of host sleep on every
+  scheduled hop from the armed call on (surfaced by ``StepWatchdog``).
+
+All three ride the same tripwire/rc machinery as death, so they compose
+under Mukautuva and reach paxi/minimal/ompix identically.  On emulated
+entries (minimal) a dropped ground primitive propagates its sentinel
+through the recipe chain — downstream tripwired calls pass it through
+untouched — so the drop surfaces at the top-level wait like anywhere else.
 """
 from __future__ import annotations
 
 import dataclasses
 import os
+import time
 from typing import Any, Callable, Optional
 
+import jax
+import jax.numpy as jnp
+from jax import lax
+
 from .. import abi_spec
-from ..errors import PAX_ERR_PROC_FAILED, PaxError
+from ..errors import PAX_ERR_PROC_FAILED, IncompleteValue, PaxError
 from . import ompix as ox
+from ._lax import rank as _lax_rank
 from .base import Backend
 
 ENV_VAR = "PAX_FAULT_SCHEDULE"
 
+#: transport faults the schedule grammar accepts (``die`` is the PR-7 kill)
+_MODES = ("die", "corrupt", "drop", "delay")
+
+#: entries whose results cannot carry the drop sentinel (no payload, or a
+#: status convention that is unpacked before any wait sees it); a drop there
+#: degrades to PROC_FAILED — which the heartbeat beat exchange absorbs as a
+#: missed-beat observation, the same signal a really-dropped link produces
+_UNDROPPABLE = ("barrier", "sendrecv")
+
+
+def _flip_sign_bit(x):
+    """The deterministic corruption: XOR the top bit of every element's
+    representation — a pure bit-flip (sign for floats/ints), large in value
+    terms so both the exact-agreement and the conservation checksum rules
+    see it.  Bitcast in, XOR, bitcast out; dtype and shape unchanged."""
+    dt = x.dtype
+    if dt == jnp.bool_:
+        return jnp.logical_not(x)
+    size = jnp.dtype(dt).itemsize
+    width = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32}.get(size)
+    if width is None:  # 8-byte lanes only exist under x64; negate instead
+        return -x
+    bits = lax.bitcast_convert_type(x, width)
+    flipped = bits ^ jnp.array(1 << (8 * size - 1), width)
+    return lax.bitcast_convert_type(flipped, dt)
+
+
+def _corrupt_member(value, axes, kill_rank: int, calls: int):
+    """Corrupt ``value`` on the shard whose linearized rank over ``axes``
+    is ``kill_rank`` (row-major, the comm rank convention).  Runs at trace
+    time inside the collective's shard_map region, so the divergence is a
+    real cross-rank fact in the compiled computation."""
+    r = _lax_rank(axes)
+
+    def leaf(x):
+        if not hasattr(x, "dtype"):
+            return x
+        return jnp.where(r == kill_rank, _flip_sign_bit(x), x)
+
+    return jax.tree_util.tree_map(leaf, value)
+
 
 @dataclasses.dataclass
 class FaultSchedule:
-    """When which rank dies, plus the call counter that decides it.
+    """When which rank misbehaves *how*, plus the call counter deciding it.
 
     ``kill_rank`` is a linearized world rank; ``at_call`` is the collective
-    call count after which the rank is dead (-1 disarms).  The same schedule
-    object is shared by every wrapper layer of one backend, so the counter
-    is global per context — deterministic for a fixed call sequence.
+    call count after which the fault arms (-1 disarms).  ``mode`` selects the
+    fault class: ``die`` (PR 7 — the rank is dead from then on), ``corrupt``
+    (one bit-flipped payload at the armed call, then clean — so a retry of
+    the same collective is provably bitwise-identical to an unfailed run),
+    ``drop`` (every collective on a comm containing the rank hangs from then
+    on — a downed link, so retries also time out and escalation to the
+    rank-death funnel is the only way out), and ``delay`` (``delay_s`` of
+    straggler latency on every scheduled hop from then on).  The same
+    schedule object is shared by every wrapper layer of one backend, so the
+    counter is global per context — deterministic for a fixed call sequence.
     """
 
     kill_rank: int = -1
     at_call: int = -1
     calls: int = 0
     dead: bool = False
+    mode: str = "die"
+    delay_s: float = 0.05
+    dropping: bool = False   # drop armed and past at_call (sticky)
+    corrupted: bool = False  # the one-shot corruption has been spent
 
     @classmethod
     def from_env(cls, text: Optional[str] = None) -> "FaultSchedule":
-        """Parse ``"rank=R,at=N"`` (the CI chaos knob); empty → disarmed."""
+        """Parse ``"rank=R,at=N[,mode=M][,delay=S]"`` (the CI chaos knob);
+        empty → disarmed.  ``mode`` defaults to ``die`` so the pre-existing
+        two-field grammar keeps its exact meaning."""
         if text is None:
             text = os.environ.get(ENV_VAR, "")
         sched = cls()
@@ -70,27 +159,57 @@ class FaultSchedule:
                 sched.kill_rank = int(val)
             elif key == "at":
                 sched.at_call = int(val)
+            elif key == "mode":
+                val = val.strip()
+                if val not in _MODES:
+                    raise ValueError(
+                        f"bad {ENV_VAR} mode {val!r} (one of {_MODES})")
+                sched.mode = val
+            elif key == "delay":
+                sched.delay_s = float(val)
             else:
                 raise ValueError(f"bad {ENV_VAR} field {part!r} "
-                                 "(expected rank=R,at=N)")
+                                 "(expected rank=R,at=N[,mode=M][,delay=S])")
         return sched
 
     @property
     def armed(self) -> bool:
         return self.kill_rank >= 0 and (self.at_call >= 0 or self.dead)
 
-    def arm(self, kill_rank: int, after: int = 0) -> None:
-        """Kill ``kill_rank`` after ``after`` more collective calls."""
+    def arm(self, kill_rank: int, after: int = 0,
+            mode: Optional[str] = None) -> None:
+        """Fault ``kill_rank`` after ``after`` more collective calls."""
         self.kill_rank = kill_rank
         self.at_call = self.calls + after
+        if mode is not None:
+            if mode not in _MODES:
+                raise ValueError(f"bad fault mode {mode!r} (one of {_MODES})")
+            self.mode = mode
+
+    def fault_now(self) -> Optional[str]:
+        """Count one collective call; the fault to inject on THIS call
+        (``None`` when the wire is clean).  ``die`` and ``drop`` are sticky,
+        ``corrupt`` fires once (the injector marks it spent via
+        ``corrupted`` after actually applying it), ``delay`` repeats."""
+        self.calls += 1
+        if self.dead:
+            return "die"
+        if self.kill_rank < 0 or self.at_call < 0 or self.calls <= self.at_call:
+            return None
+        if self.mode == "die":
+            self.dead = True
+            return "die"
+        if self.mode == "corrupt":
+            return None if self.corrupted else "corrupt"
+        if self.mode == "drop":
+            self.dropping = True
+            return "drop"
+        return "delay"
 
     def on_call(self) -> bool:
-        """Count one collective call; returns whether the rank is now dead."""
-        self.calls += 1
-        if (not self.dead and self.kill_rank >= 0 and self.at_call >= 0
-                and self.calls > self.at_call):
-            self.dead = True
-        return self.dead
+        """Count one collective call; returns whether the rank is now dead
+        (the PR-7 surface — transport modes never flip ``dead``)."""
+        return self.fault_now() == "die"
 
 
 def _comm_arg(entry: abi_spec.AbiEntry):
@@ -115,6 +234,10 @@ class FaultyBackend(Backend):
     """
 
     convention = "abi"
+    #: drops are injectable here — tells the ABI to compile the sentinel
+    #: guard into plan/group wait closures (loss-incapable backends get
+    #: the bare fast-path wait; see ``PaxABI._can_drop``)
+    can_lose_messages = True
 
     def __init__(self, inner: Backend, schedule: Optional[FaultSchedule] = None,
                  *, declare_failures: bool = True) -> None:
@@ -179,19 +302,23 @@ class FaultyBackend(Backend):
 
     # -- the failure detector ----------------------------------------------
     def local_failed(self, comm: Any) -> tuple:
-        if not self.declare_failures:
+        # a drop is NOT a declared death: a downed link surfaces only as
+        # timeouts plus heartbeat silence, never through local knowledge
+        if not self.declare_failures or not self.schedule.dead:
             return ()
-        return self._dead_member(comm)
+        return self._faulty_member(comm)
 
     def heartbeat_silent(self, comm: Any) -> tuple:
-        """A schedule-dead rank stops answering heartbeats too: the wrapper
-        is one producer of missed beats for the liveness monitor, whether
-        or not it also *declares* the death through ``local_failed``."""
-        return self._dead_member(comm)
-
-    def _dead_member(self, comm: Any) -> tuple:
-        if not self.schedule.dead:
+        """A schedule-dead rank stops answering heartbeats too — and so does
+        a *dropping* one (a partitioned link loses its beats with everything
+        else): the wrapper is one producer of missed beats for the liveness
+        monitor, whether or not it also *declares* the death through
+        ``local_failed``."""
+        if not (self.schedule.dead or self.schedule.dropping):
             return ()
+        return self._faulty_member(comm)
+
+    def _faulty_member(self, comm: Any) -> tuple:
         try:
             info = self.comms.info(comm, allow_revoked=True)
         except PaxError:
@@ -206,9 +333,14 @@ class FaultyBackend(Backend):
         schedule = self.schedule
         comms = self.comms
         idx, cname = _comm_arg(entry)
+        undroppable = entry.name in _UNDROPPABLE
 
         def wrapped(*args, **kwargs):
-            if schedule.on_call():
+            for a in args:
+                if a.__class__ is IncompleteValue:
+                    return a  # an upstream drop: this leg never hits the wire
+            fault = schedule.fault_now()
+            if fault is not None:
                 comm = (args[idx] if idx is not None and idx < len(args)
                         else kwargs.get(cname))
                 # revoked comms raise PAX_ERR_REVOKED in the inner backend
@@ -217,11 +349,31 @@ class FaultyBackend(Backend):
                     info = comms.info(comm)
                     k = schedule.kill_rank
                     if info.axes and k not in info.excludes and k < info.full_size:
-                        raise PaxError(
-                            PAX_ERR_PROC_FAILED,
-                            f"rank {k} died (injected, call "
-                            f"{schedule.calls}) on {info.name or 'comm'}",
-                        )
+                        if fault == "die":
+                            raise PaxError(
+                                PAX_ERR_PROC_FAILED,
+                                f"rank {k} died (injected, call "
+                                f"{schedule.calls}) on {info.name or 'comm'}",
+                            )
+                        if fault == "delay":
+                            time.sleep(schedule.delay_s)
+                        elif fault == "drop":
+                            if undroppable:
+                                raise PaxError(
+                                    PAX_ERR_PROC_FAILED,
+                                    f"message from rank {k} lost (injected "
+                                    f"drop, call {schedule.calls}) on "
+                                    f"{info.name or 'comm'}",
+                                )
+                            return IncompleteValue(
+                                f"{entry.name} dropped at rank {k} (injected,"
+                                f" call {schedule.calls}) on "
+                                f"{info.name or 'comm'}")
+                        elif fault == "corrupt":
+                            out = inner_fn(*args, **kwargs)
+                            schedule.corrupted = True
+                            return _corrupt_member(
+                                out, info.axes, k, schedule.calls)
             return inner_fn(*args, **kwargs)
 
         wrapped.__name__ = entry.backend_method
@@ -249,6 +401,8 @@ class FaultyLib:
         "Scatter",
     )
 
+    can_lose_messages = True  # as FaultyBackend: drops are injectable
+
     def __init__(self, lib, schedule: Optional[FaultSchedule] = None,
                  *, declare_failures: bool = True) -> None:
         self._lib = lib
@@ -264,13 +418,14 @@ class FaultyLib:
 
     def Comm_from_axes(self, axes):
         code, comm = self._lib.Comm_from_axes(axes)
-        if code == 0 and self.schedule.dead:
+        if code == 0 and (self.schedule.dead or self.schedule.dropping):
             self._absolved.add(comm)
         return code, comm
 
     def local_failed(self, comm) -> tuple:
         """Failure detector surfaced to Mukautuva (ABI-domain comm handle;
-        membership filtering happens in the shared ``comm_failure_view``)."""
+        membership filtering happens in the shared ``comm_failure_view``).
+        Drops stay silent here — only heartbeat attribution may name them."""
         if not self.declare_failures:
             return ()
         return (self.schedule.kill_rank,) if self.schedule.dead else ()
@@ -278,8 +433,10 @@ class FaultyLib:
     def heartbeat_silent(self, comm) -> tuple:
         """Transport attribution for the liveness monitor (crosses the
         Mukautuva adapter's ``heartbeat_silent`` delegation): the scheduled
-        corpse goes quiet whether or not it is declared dead."""
-        return (self.schedule.kill_rank,) if self.schedule.dead else ()
+        corpse goes quiet whether or not it is declared dead — and so does
+        a rank whose link the schedule is dropping."""
+        sched = self.schedule
+        return (sched.kill_rank,) if (sched.dead or sched.dropping) else ()
 
     #: per-symbol failure return, matching each symbol's rc convention
     #: (Barrier returns a bare rc, Sendrecv a (rc, value, status) triple)
@@ -293,13 +450,40 @@ class FaultyLib:
         schedule = self.schedule
         absolved = self._absolved
         fail_rc = self._FAIL_RC.get(sym, (ox.OMPIX_ERR_PROC_FAILED, None))
+        # a dropped payload crosses Mukautuva as a success rc whose value is
+        # the sentinel (the generated WRAP_* passes values through untouched);
+        # rc-only / status conventions cannot carry it and degrade to the
+        # PROC_FAILED rc, which the heartbeat exchange absorbs as a miss
+        undroppable = sym in ("Barrier", "Sendrecv")
 
         def wrapped(*args, **kwargs):
-            if schedule.on_call():
+            for a in args:
+                if a.__class__ is IncompleteValue:
+                    return (0, a)  # upstream drop propagating through a chain
+            fault = schedule.fault_now()
+            if fault is not None:
                 comm = next(
                     (a for a in args if isinstance(a, ox.OmpixComm)), None)
                 if comm is not None and comm not in absolved and comm.axes:
-                    return fail_rc
+                    if fault == "die":
+                        return fail_rc
+                    if fault == "delay":
+                        time.sleep(schedule.delay_s)
+                    elif fault == "drop":
+                        if undroppable:
+                            return fail_rc
+                        return (0, IncompleteValue(
+                            f"{sym} dropped at rank {schedule.kill_rank} "
+                            f"(injected, call {schedule.calls})"))
+                    elif fault == "corrupt":
+                        ret = inner(*args, **kwargs)
+                        if not isinstance(ret, tuple) or ret[0] != 0:
+                            return ret
+                        schedule.corrupted = True
+                        value = _corrupt_member(
+                            ret[1], comm.axes, schedule.kill_rank,
+                            schedule.calls)
+                        return (ret[0], value) + ret[2:]
             return inner(*args, **kwargs)
 
         wrapped.__name__ = sym

@@ -48,8 +48,30 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+import functools
+
 from . import handles as H
-from .errors import PAX_ERR_PROC_FAILED, PaxError
+from .errors import PAX_ERR_PROC_FAILED, IncompleteValue, PaxError
+
+
+def _incomplete_passthrough(fn: Callable) -> Callable:
+    """Propagate the drop sentinel through recipe composition.
+
+    A dropped dependency (``FaultSchedule`` mode ``drop``) yields an
+    :class:`IncompleteValue` instead of an array; every downstream stage of
+    an emulation chain must hand it through untouched so the sentinel
+    reaches the plan/pooled wait — the only layer allowed to observe it
+    (and time it out).  Mirrors the injection layer's own argument scan.
+    """
+
+    @functools.wraps(fn)
+    def run(*args, **kwargs):
+        for a in args:
+            if a.__class__ is IncompleteValue:
+                return a
+        return fn(*args, **kwargs)
+
+    return run
 
 
 class EmulationContext:
@@ -71,7 +93,7 @@ class EmulationContext:
         recipe implies building everything it stands on), so built closures
         always chain through concrete callables, never through lazy shims.
         """
-        return self._abi._ensure_built(name)
+        return _incomplete_passthrough(self._abi._ensure_built(name))
 
     def op_fn(self, op: int) -> Callable:
         return self._abi.backend.op_fn(op)
@@ -127,7 +149,7 @@ class PlanContext(EmulationContext):
     """
 
     def plan_dep(self, name: str, *bound) -> Callable:
-        return self._abi._plan_run(name, bound)
+        return _incomplete_passthrough(self._abi._plan_run(name, bound))
 
     def plan_group_dep(self, name: str, bounds) -> Callable:
         """Compile one *fused* run closure for a whole stage of a plan
@@ -166,6 +188,8 @@ def prefix_fold(g, r, fn: Callable, x, inclusive: bool):
     its input ``x`` unchanged (MPI: undefined) — cannot silently diverge
     between native and emulated backends.
     """
+    if g.__class__ is IncompleteValue:  # dropped gather: stay incomplete
+        return g
     S = g.shape[0]
     acc = g[0]
     out = acc if inclusive else x
@@ -449,7 +473,7 @@ def build_scatter(ctx: EmulationContext) -> Callable:
     def scatter(x, root, comm, axis=0):
         y = bc(x, root, comm)
         S = size(comm)
-        if S <= 1:
+        if S <= 1 or y.__class__ is IncompleteValue:
             return y
         chunk = y.shape[axis] // S
         return lax.dynamic_slice_in_dim(y, rank(comm) * chunk, chunk, axis=axis)

@@ -44,6 +44,15 @@ PAX_ERR_UNSUPPORTED_OPERATION = 23
 # lack the fault symbols never return these (the ABI's recipes raise them).
 PAX_ERR_PROC_FAILED = 24
 PAX_ERR_REVOKED = 25
+# Transport-integrity tier (PR 10): the wire itself misbehaving, short of a
+# rank death.  DATA_CORRUPTION is raised when the opt-in end-to-end integrity
+# mode (checksummed plan/group closures, ``PaxABI(integrity=True)``) detects
+# a payload that does not agree across the communicator; TIMEOUT is raised by
+# the ``wait`` family when a ``timeout_s`` deadline passes before a dropped
+# operation completes — the only way a *drop* (a hang, not an error) ever
+# surfaces.  Both are below PAX_ERR_LASTCODE like every other class.
+PAX_ERR_DATA_CORRUPTION = 26
+PAX_ERR_TIMEOUT = 27
 PAX_ERR_LASTCODE = 64
 
 _ERROR_NAMES = {
@@ -73,6 +82,35 @@ class PaxError(RuntimeError):
         if detail:
             msg = f"{msg}: {detail}"
         super().__init__(msg)
+
+
+class IncompleteValue:
+    """Sentinel standing in for the result of an operation that will never
+    complete: a *dropped* message (``FaultSchedule`` mode ``drop``).
+
+    A drop is a hang, not an error — no backend return code carries it, so
+    the injection layer plants this sentinel as the operation's value and the
+    ``wait`` family is the only place it is ever observed: ``wait`` with a
+    ``timeout_s`` sleeps out the deadline and raises
+    :data:`PAX_ERR_TIMEOUT`; ``wait`` without one blocks forever (the
+    faithful semantics).  The request stays *active* across the timeout so
+    ``Plan.reset``/``PlanGroup.reset`` can abort and re-arm the slot.
+    """
+
+    __slots__ = ("detail",)
+
+    def __init__(self, detail: str = "") -> None:
+        self.detail = detail
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"IncompleteValue({self.detail!r})"
+
+    def __getitem__(self, _key):
+        # Recipe post-processing slices dependency outputs (drop the invented
+        # padding, unwrap a scalar); an incomplete result stays incomplete
+        # through any such slice so composed emulation chains propagate the
+        # sentinel to the wait that will time it out.
+        return self
 
 
 class ErrorTranslator:

@@ -85,6 +85,10 @@ class MukBackend(Backend):
         super().__init__(mesh if mesh is not None else lib.mesh)
         self.lib = lib
         self.name = f"muk:{lib.name}"
+        # loss capability crosses the ABI boundary with the lib (a wrapped
+        # FaultyLib can drop; a plain foreign lib cannot) — the ABI uses it
+        # to decide whether plan/group waits need the drop-sentinel guard
+        self.can_lose_messages = bool(getattr(lib, "can_lose_messages", False))
         # ABI-domain tables owned by the context; Mukautuva keeps its own so
         # it can translate without asking the implementation anything.
         self.comms = CommTable(self.mesh)

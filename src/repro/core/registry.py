@@ -104,6 +104,7 @@ def pax_init(
     impl: Optional[str] = None,
     tools: Sequence = (),
     req_slot_bits: Optional[int] = None,
+    integrity: Optional[bool] = None,
 ) -> PaxABI:
     """``MPI_Init`` analogue: resolve the implementation, build the context.
 
@@ -112,13 +113,17 @@ def pax_init(
     swapped per-init without re-tracing anything built on the ABI.
     ``req_slot_bits`` sets this context's request-pool slot/generation split
     (slots = outstanding-request cap; generations are unbounded above).
+    ``integrity`` opts the context into the end-to-end checksummed-wire mode
+    (default: the ``PAX_WIRE_INTEGRITY`` environment variable).
 
     ``impl`` may also be a prebuilt :class:`Backend` instance (a composed
     fault-injection wrapper, a backend with a pre-armed kill schedule...);
     it is used as-is, skipping name resolution.
     """
     if isinstance(impl, Backend):
-        return PaxABI(impl, mesh=mesh, tools=tools, req_slot_bits=req_slot_bits)
+        return PaxABI(impl, mesh=mesh, tools=tools,
+                      req_slot_bits=req_slot_bits, integrity=integrity)
     name = impl or os.environ.get(ENV_VAR, DEFAULT_IMPL)
     backend = get_backend(name, mesh)
-    return PaxABI(backend, mesh=mesh, tools=tools, req_slot_bits=req_slot_bits)
+    return PaxABI(backend, mesh=mesh, tools=tools,
+                  req_slot_bits=req_slot_bits, integrity=integrity)

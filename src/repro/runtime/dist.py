@@ -58,14 +58,17 @@ def make_dist(
     tools=(),
     sequence_parallel: bool = False,
     compression: Optional[str] = None,
+    integrity: Optional[bool] = None,
 ) -> DistContext:
     """Build the distributed context over ``mesh``.
 
     ``impl`` is a backend name (``pax_init`` resolution rules) or a prebuilt
     ``Backend`` instance — the fault-injection path hands a composed
-    ``FaultyBackend`` straight through.
+    ``FaultyBackend`` straight through.  ``integrity`` opts into the
+    checksummed-wire mode (default: ``PAX_WIRE_INTEGRITY``); the flag rides
+    the ABI context, so every plan/group this context compiles carries it.
     """
-    abi = pax_init(mesh, impl=impl, tools=tools)
+    abi = pax_init(mesh, impl=impl, tools=tools, integrity=integrity)
     names = tuple(mesh.axis_names)
     tp_axis = "model" if "model" in names else names[-1]
     dp_axes = tuple(a for a in names if a != tp_axis)

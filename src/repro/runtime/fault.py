@@ -34,7 +34,12 @@ from typing import Callable, Iterable, Optional
 import jax
 
 from ..checkpoint.checkpointer import Checkpointer
-from ..core.errors import PAX_ERR_PROC_FAILED, PaxError
+from ..core.errors import (
+    PAX_ERR_DATA_CORRUPTION,
+    PAX_ERR_PROC_FAILED,
+    PAX_ERR_TIMEOUT,
+    PaxError,
+)
 
 log = logging.getLogger("repro.fault")
 
@@ -79,6 +84,97 @@ class StepWatchdog:
         return decision
 
 
+#: the transport-integrity error classes a retry can cure (or at least
+#: distinguish from a rank death): a corrupted payload re-runs cleanly when
+#: the fault was one-shot; a timed-out wait re-runs when the drop was
+#: transient — and keeps timing out when the link is really down, which is
+#: what escalation is for
+TRANSPORT_ERRORS = (PAX_ERR_DATA_CORRUPTION, PAX_ERR_TIMEOUT)
+
+
+@dataclasses.dataclass
+class RetryPolicy:
+    """Retry-with-backoff for transport faults, escalating to rank death.
+
+    ``run(attempt)`` executes ``attempt()`` and returns its result.  A
+    :class:`PaxError` whose code is in ``retryable`` (default: the two
+    transport classes, ``PAX_ERR_DATA_CORRUPTION`` and ``PAX_ERR_TIMEOUT``)
+    triggers: ``reset()`` (abort wedged plan/group slots — the post-timeout
+    contract), an exponential backoff sleep, and a re-run.  Persistent plans
+    make the re-run a bare ``start()``; a one-shot corruption therefore
+    retries to a bitwise-identical result.  After ``max_retries`` failed
+    re-runs the ``escalate(cause)`` hook feeds the offender into the
+    rank-death funnel (typically :func:`escalate_to_failure`: heartbeat
+    confirmation → ``local_failed`` → the ULFM revoke→shrink walk) and the
+    final error propagates.
+
+    ``verify`` is an optional post-hoc integrity verdict on the attempt's
+    result (e.g. ``abi.verify_clean`` on materialized metrics): detection
+    that is folded into values in-trace surfaces here, at host time.
+    Every other error class propagates untouched — a rank death is not a
+    flaky link.  ``retries``/``escalations`` account over the policy's
+    lifetime (the bench and the report read them).
+    """
+
+    max_retries: int = 2
+    backoff_s: float = 0.0
+    verify: Optional[Callable] = None
+    reset: Optional[Callable] = None
+    escalate: Optional[Callable] = None
+    retryable: tuple = TRANSPORT_ERRORS
+    retries: int = 0
+    escalations: int = 0
+
+    def run(self, attempt: Callable, *, what: str = ""):
+        tries = 0
+        while True:
+            try:
+                out = attempt()
+                if self.verify is not None:
+                    self.verify(out)
+                return out
+            except PaxError as e:
+                if e.code not in self.retryable:
+                    raise
+                if self.reset is not None:
+                    self.reset()
+                tries += 1
+                if tries > self.max_retries:
+                    self.escalations += 1
+                    log.error("%s: transport fault persists after %d retries "
+                              "(%s); escalating", what or "attempt",
+                              self.max_retries, e)
+                    if self.escalate is not None:
+                        self.escalate(e)
+                    raise
+                self.retries += 1
+                log.warning("%s: transport fault (%s); retry %d/%d",
+                            what or "attempt", e, tries, self.max_retries)
+                if self.backoff_s:
+                    time.sleep(self.backoff_s * (2 ** (tries - 1)))
+
+
+def escalate_to_failure(monitor, max_ticks: int = 32) -> Callable:
+    """Build a :class:`RetryPolicy` ``escalate`` hook from a heartbeat
+    monitor: beat until the monitor *confirms* a death (the dropping rank
+    has stopped answering heartbeats — ``heartbeat_silent`` attribution),
+    then raise ``PAX_ERR_PROC_FAILED`` so the existing rank-death recovery
+    (``run_supervised``/``ServeSupervisor``) takes over.  If ``max_ticks``
+    beats confirm nobody, return — the transport error propagates as-is
+    (a corrupted wire with every rank live is not a death)."""
+
+    def escalate(cause: BaseException) -> None:
+        for _ in range(max_ticks):
+            failed = monitor.beat()
+            if failed:
+                raise PaxError(
+                    PAX_ERR_PROC_FAILED,
+                    f"transport fault escalated: ranks {list(failed)} "
+                    f"confirmed silent after {cause}") from cause
+
+    return escalate
+
+
 @dataclasses.dataclass
 class RecoveryTarget:
     """What ``RecoveryPolicy.rebuild`` returns: the training closure for the
@@ -108,10 +204,13 @@ class RecoveryPolicy:
     rebuild: Callable[[int, tuple], RecoveryTarget]
 
 
-def _execute_recovery(policy: RecoveryPolicy) -> RecoveryTarget:
+def _execute_recovery(policy: RecoveryPolicy,
+                      monitor=None) -> RecoveryTarget:
     """The ULFM sequence over the failed data-parallel communicator:
     revoke → ack → get_failed → agree(resume) → shrink, then retire the
-    plans bound to the dead world and rebuild for the survivors."""
+    plans bound to the dead world and rebuild for the survivors.  A
+    heartbeat ``monitor`` rebinds onto the survivor comm after the shrink
+    (its confirmed corpses are non-members there and filter out)."""
     dist = policy.dist
     abi, comm = dist.abi, dist.dp_comm
     abi.comm_revoke(comm)          # poison the comm; reset plans/groups on it
@@ -123,6 +222,8 @@ def _execute_recovery(policy: RecoveryPolicy) -> RecoveryTarget:
     log.warning("recovered comm: %d survivors after failure of ranks %s",
                 survivors, list(failed))
     dist.drop_zero1_plans()
+    if monitor is not None:
+        monitor.rebind(survivor)
     return policy.rebuild(survivors, failed)
 
 
@@ -136,6 +237,14 @@ class SupervisorReport:
     # first step of this supervisor run (nonzero when resuming a previous
     # run's checkpoint): losses are recorded per step from here on
     resumed_from: int = 0
+    # transport-integrity accounting (PR 10): in-step retries that cured a
+    # corrupted/timed-out collective, and retry exhaustions that escalated
+    # into the rank-death funnel
+    transport_retries: int = 0
+    transport_escalations: int = 0
+    # checkpoint-integrity events: each is the loud record of a corrupt or
+    # torn shard that forced a fallback to an earlier retained checkpoint
+    checkpoint_fallbacks: list = dataclasses.field(default_factory=list)
 
     def __post_init__(self) -> None:
         # one loss per completed step — the replay-truncation invariant
@@ -158,6 +267,8 @@ def run_supervised(
     state_like=None,
     watchdog: Optional[StepWatchdog] = None,
     recover: Optional[RecoveryPolicy] = None,
+    retry: Optional[RetryPolicy] = None,
+    monitor=None,
 ) -> SupervisorReport:
     """Run ``total_steps`` of ``state, metrics = step_fn(state, batch)`` with
     checkpoint/restart fault tolerance.
@@ -176,10 +287,27 @@ def run_supervised(
     policy; a ``"restart"`` decision checkpoints synchronously at the
     current step (zero replay) and restarts through the same bounded-retry
     backoff accounting as the exception path.
+
+    ``retry`` (PR 10) arms in-step transport-fault recovery: a
+    ``PAX_ERR_DATA_CORRUPTION``/``PAX_ERR_TIMEOUT`` escaping ``step_fn``
+    (or its ``verify`` hook) re-runs THE SAME step with backoff — no
+    checkpoint restore, no replay — and only retry exhaustion reaches the
+    restart machinery.  ``monitor`` (a ``HeartbeatMonitor``) is installed
+    onto the training backend at entry and beaten between steps, so a
+    drop-induced hang is attributed by the same detector that serves; it
+    rebinds onto the survivor comm after an elastic recovery.  A transport
+    error surviving the retries escalates down the standard funnel: the
+    monitor confirms the silent rank (``escalate_to_failure``), the
+    failure surfaces as ``PAX_ERR_PROC_FAILED``, and the existing
+    revoke→shrink path recovers — or, when the confirmed death shows up in
+    ``comm_get_failed`` without the re-raise, the recovery walk runs
+    directly off the transport error.
     """
     get_batch = batches if callable(batches) else (lambda i: batches[i])
     if watchdog is None:
         watchdog = StepWatchdog()
+    if monitor is not None:
+        monitor.install()
     restarts = 0
     losses: list[float] = []
     restore_mesh = None
@@ -228,10 +356,20 @@ def run_supervised(
     while step < total_steps:
         try:
             t0 = time.time()
-            state, metrics = step_fn(state, get_batch(step))
+            if retry is not None:
+                # same-step transport retry: the pre-step state is still in
+                # hand, so a cured fault re-records nothing and replays
+                # nothing (persistent plans make the re-run a bare start)
+                _s, _b = state, get_batch(step)
+                state, metrics = retry.run(
+                    lambda: step_fn(_s, _b), what=f"step {step}")
+            else:
+                state, metrics = step_fn(state, get_batch(step))
             loss = getattr(metrics, "loss", None)
             if loss is not None:
                 losses.append(float(loss))
+            if monitor is not None:
+                monitor.beat()  # between-step liveness tick
             dt = time.time() - t0
             straggler = watchdog.observe(step, dt)
             step += 1
@@ -246,9 +384,19 @@ def run_supervised(
             raise
         except Exception as e:
             _backoff(e, step, f"failed ({e})")
-            if (recover is not None and isinstance(e, PaxError)
-                    and e.code == PAX_ERR_PROC_FAILED):
-                target = _execute_recovery(recover)
+            needs_recovery = (recover is not None and isinstance(e, PaxError)
+                              and e.code == PAX_ERR_PROC_FAILED)
+            if (not needs_recovery and recover is not None
+                    and isinstance(e, PaxError)
+                    and e.code in TRANSPORT_ERRORS):
+                # transport error that exhausted its retries without the
+                # escalate hook re-raising PROC_FAILED: the funnel's last
+                # segment — if a confirmed death reached local_failed
+                # (heartbeat attribution), recover; else plain restart
+                needs_recovery = bool(
+                    recover.dist.abi.comm_get_failed(recover.dist.dp_comm))
+            if needs_recovery:
+                target = _execute_recovery(recover, monitor)
                 step_fn = target.step_fn
                 if target.state_like is not None:
                     state_like = target.state_like
@@ -257,5 +405,9 @@ def run_supervised(
             state, step = _restore()
 
     checkpointer.wait()
-    return SupervisorReport(step, restarts, len(watchdog.stragglers), state,
-                            losses, resumed_from)
+    return SupervisorReport(
+        step, restarts, len(watchdog.stragglers), state, losses, resumed_from,
+        transport_retries=retry.retries if retry is not None else 0,
+        transport_escalations=retry.escalations if retry is not None else 0,
+        checkpoint_fallbacks=list(
+            getattr(checkpointer, "integrity_events", ())))

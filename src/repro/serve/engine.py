@@ -94,7 +94,8 @@ class DecodeSync:
 
     NAME = "decode-tp"
 
-    def __init__(self, abi, comm, max_batch: int, mesh) -> None:
+    def __init__(self, abi, comm, max_batch: int, mesh, *,
+                 wait_timeout_s: Optional[float] = None) -> None:
         from jax.sharding import PartitionSpec as P
 
         from ..core.compat import shard_map
@@ -102,6 +103,12 @@ class DecodeSync:
         self.abi = abi
         self.comm = comm
         self.mesh = mesh     # kept for supervisor rebuilds on a survivor comm
+        # deadline for the group/pooled waits: None blocks forever (the
+        # faithful hang on a dropped broadcast); a bound turns the drop into
+        # PAX_ERR_TIMEOUT, which the supervisor retries and escalates.  Read
+        # per call — the shard_map below is eager, so a live change applies
+        # to the very next token step.
+        self.wait_timeout_s = wait_timeout_s
         ex = jax.ShapeDtypeStruct((max_batch,), jnp.int32)
         self._p_tok = abi.bcast_init(ex, 0, comm)
         self._p_act = abi.bcast_init(ex, 0, comm)
@@ -113,12 +120,14 @@ class DecodeSync:
         # re-drives the plan protocol and the tool interposition — one
         # before/after per token step, which is what the counting test pins
         def _group_call(tok, act):
-            outs = abi.wait(self.group.start([tok, act]))
+            outs = abi.wait(self.group.start([tok, act]),
+                            timeout_s=self.wait_timeout_s)
             return outs[0], outs[1]
 
         def _pooled_call(tok, act):
             outs = abi.waitall([abi.ibcast(tok, 0, comm),
-                                abi.ibcast(act, 0, comm)])
+                                abi.ibcast(act, 0, comm)],
+                               timeout_s=self.wait_timeout_s)
             return outs[0], outs[1]
 
         spec = (P(), P())
@@ -127,15 +136,29 @@ class DecodeSync:
         self._pooled_call = shard_map(_pooled_call, mesh=mesh,
                                       in_specs=spec, out_specs=spec)
 
+    def reset(self) -> None:
+        """Abort a start whose wait timed out (the post-timeout contract):
+        force the group and member plans inactive so the next token step
+        starts on a clean slot instead of a wedged one."""
+        self.group.reset()
+        self._p_tok.reset()
+        self._p_act.reset()
+
     def step(self, tokens: np.ndarray, active: np.ndarray):
         """ONE group start/wait for the whole token step."""
         tok, act = self._group_call(jnp.asarray(tokens), jnp.asarray(active))
-        return np.asarray(tok), np.asarray(act)
+        tok, act = np.asarray(tok), np.asarray(act)
+        # corruption folded into the wire payload in-trace surfaces here,
+        # at materialization (no-op when integrity mode is off)
+        self.abi.verify_clean((tok, act), "decode-tp sync")
+        return tok, act
 
     def step_pooled(self, tokens: np.ndarray, active: np.ndarray):
         """The pooled ``i*`` reference path (two requests, one waitall)."""
         tok, act = self._pooled_call(jnp.asarray(tokens), jnp.asarray(active))
-        return np.asarray(tok), np.asarray(act)
+        tok, act = np.asarray(tok), np.asarray(act)
+        self.abi.verify_clean((tok, act), "decode-tp pooled sync")
+        return tok, act
 
     def free(self) -> None:
         self.group.free()
@@ -236,11 +259,13 @@ class ServeEngine:
         self.scheduler.submit(req)
         self.stats["requests"] += 1
 
-    def rebuild_decode_sync(self, abi, comm, mesh) -> None:
+    def rebuild_decode_sync(self, abi, comm, mesh,
+                            wait_timeout_s: Optional[float] = None) -> None:
         """Bind a fresh ``DecodeSync`` (new plans + plan group) on ``comm``
         — the supervisor's recovery hook after a tp-comm shrink.  The old
         sync must already be retired (``free()``)."""
-        self.decode_sync = DecodeSync(abi, comm, self.max_batch, mesh)
+        self.decode_sync = DecodeSync(abi, comm, self.max_batch, mesh,
+                                      wait_timeout_s=wait_timeout_s)
 
     @property
     def has_work(self) -> bool:

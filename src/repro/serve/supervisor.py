@@ -43,6 +43,7 @@ import time
 from typing import Optional
 
 from ..core.errors import PAX_ERR_PROC_FAILED, PaxError
+from ..runtime.fault import TRANSPORT_ERRORS
 
 log = logging.getLogger("repro.serve.supervisor")
 
@@ -67,6 +68,11 @@ class ServeRecoveryReport:
     backoff_s_total: float = 0.0
     failed_ranks: list = dataclasses.field(default_factory=list)
     retries: dict = dataclasses.field(default_factory=dict)  # rid -> count
+    # transport-integrity accounting (PR 10): in-place step re-runs that
+    # cured a corrupted/timed-out decode sync, and retry exhaustions that
+    # escalated into the rank-death recovery above
+    transport_retries: int = 0
+    transport_escalations: int = 0
 
     def assert_consistent(self) -> None:
         assert self.replays <= self.failures, (self.replays, self.failures)
@@ -87,11 +93,25 @@ class ServeSupervisor:
     ``max_failures`` bounds recoveries (like ``max_restarts``);
     ``backoff_s`` doubles per failure; ``max_retries`` bounds how many
     times one request may be replayed before it is dropped.
+
+    Transport faults (PR 10): ``wait_timeout_s`` bounds the decode sync's
+    group/pooled waits, so a *dropped* tp broadcast surfaces as
+    ``PAX_ERR_TIMEOUT`` instead of hanging the serve loop; a corrupted one
+    (integrity mode) surfaces as ``PAX_ERR_DATA_CORRUPTION`` at token
+    materialization.  Either aborts the wedged plan group
+    (``DecodeSync.reset``) and re-runs THE SAME engine step — the decode
+    re-reads the same KV positions, so a cured fault is invisible in the
+    token stream.  After ``transport_retries`` failed re-runs the fault
+    escalates into :meth:`_recover`: the heartbeat monitor confirms the
+    silent rank (a dropping link stops answering heartbeats), and the
+    standard shrink → rebuild → replay walk takes over.
     """
 
     def __init__(self, engine, *, monitor=None, heartbeat_every: int = 1,
                  max_failures: int = 3, backoff_s: float = 0.0,
-                 max_retries: int = 3, sleep=time.sleep) -> None:
+                 max_retries: int = 3, sleep=time.sleep,
+                 wait_timeout_s: Optional[float] = None,
+                 transport_retries: int = 2) -> None:
         if engine.decode_sync is None:
             raise ValueError("ServeSupervisor needs an engine with a "
                              "DecodeSync (the tp comm is what it recovers)")
@@ -101,6 +121,10 @@ class ServeSupervisor:
         self.max_failures = max_failures
         self.backoff_s = backoff_s
         self.max_retries = max_retries
+        self.wait_timeout_s = wait_timeout_s
+        self.transport_retries = transport_retries
+        if wait_timeout_s is not None:
+            engine.decode_sync.wait_timeout_s = wait_timeout_s
         self.report = ServeRecoveryReport()
         self._sleep = sleep
         self._steps = 0
@@ -120,9 +144,12 @@ class ServeSupervisor:
             eng.step()
             self.report.expired += len(eng.last_expired)
         except PaxError as e:
-            if e.code != PAX_ERR_PROC_FAILED:
+            if e.code == PAX_ERR_PROC_FAILED:
+                self._recover(e)
+            elif e.code in TRANSPORT_ERRORS:
+                self._transport_fault(e)
+            else:
                 raise
-            self._recover(e)
 
     def drain(self) -> None:
         while self.engine.has_work:
@@ -134,6 +161,53 @@ class ServeSupervisor:
         self.drain()
         self.report.assert_consistent()
         return self.report
+
+    # -- transport faults ---------------------------------------------------
+    def _transport_fault(self, cause: PaxError) -> None:
+        """Retry-with-backoff for a corrupted or timed-out decode sync.
+
+        Each attempt: abort the wedged plan group (``DecodeSync.reset`` —
+        the post-timeout contract; the slot stays ACTIVE across a timeout
+        raise precisely so this abort is possible), back off, re-run the
+        SAME engine step.  The step is idempotent under re-run: no token
+        was appended (the append happens after the sync), so the decode
+        re-reads the same KV positions with the same lengths and the cured
+        step is bitwise what the unfailed step would have been.  Exhausted
+        retries escalate into the rank-death walk — a persistently-dropping
+        link IS a dead peer as far as the serving tier is concerned, and
+        the heartbeat confirmation inside :meth:`_recover` names it.
+        """
+        eng, rep = self.engine, self.report
+        err = cause
+        tries = 0
+        while True:
+            eng.decode_sync.reset()
+            tries += 1
+            if tries > self.transport_retries:
+                rep.transport_escalations += 1
+                log.error("transport fault persists after %d retries (%s); "
+                          "escalating to rank-death recovery",
+                          self.transport_retries, err)
+                self._recover(err)
+                return
+            rep.transport_retries += 1
+            log.warning("transport fault (%s); retrying step in place "
+                        "%d/%d", err, tries, self.transport_retries)
+            if self.backoff_s:
+                delay = self.backoff_s * (2 ** (tries - 1))
+                rep.backoff_s_total += delay
+                self._sleep(delay)
+            try:
+                eng.step()
+                rep.expired += len(eng.last_expired)
+                return
+            except PaxError as e:
+                if e.code == PAX_ERR_PROC_FAILED:
+                    self._recover(e)
+                    return
+                if e.code not in TRANSPORT_ERRORS:
+                    raise
+                err = e
 
     # -- recovery -----------------------------------------------------------
     def _recover(self, cause: PaxError) -> tuple:
@@ -180,7 +254,9 @@ class ServeSupervisor:
         # comm (same axes, corpse excluded — the layout-keyed cache makes
         # the unchanged-shape re-plan free of redundant work)
         ds.free()
-        eng.rebuild_decode_sync(abi, survivor, ds.mesh)
+        eng.rebuild_decode_sync(
+            abi, survivor, ds.mesh,
+            wait_timeout_s=getattr(ds, "wait_timeout_s", self.wait_timeout_s))
         if self.monitor is not None:
             self.monitor.rebind(survivor)
 

@@ -349,7 +349,8 @@ def rebalance_batch(batch, dp: int):
 
 def elastic_recovery_policy(api: ModelApi, opt_cfg: AdamWConfig, dist: DistContext,
                             key, *, impl=None, schedule=None, tools=(),
-                            uneven_shards: bool = False):
+                            uneven_shards: bool = False,
+                            integrity: Optional[bool] = None):
     """The canonical ``RecoveryPolicy`` for elastic-dp training.
 
     After ``run_supervised``'s fault-tier walk (revoke → ack → get_failed →
@@ -375,7 +376,10 @@ def elastic_recovery_policy(api: ModelApi, opt_cfg: AdamWConfig, dist: DistConte
     Ranks are linearized mesh positions, so this assumes the dp axis leads
     the mesh (tp groups must survive intact — elastic *data* parallelism).
     ``policy.dist`` is updated to the rebuilt context, so a second failure
-    recovers from the already-shrunk world.
+    recovers from the already-shrunk world.  ``integrity`` carries the
+    checksummed-wire mode into the rebuilt context — a recovered world
+    keeps the detection guarantees of the one it replaces (default: the
+    original ``dist``'s setting).
     """
     from ..runtime.dist import make_dist, survivor_mesh
     from ..runtime.fault import RecoveryPolicy, RecoveryTarget
@@ -390,7 +394,10 @@ def elastic_recovery_policy(api: ModelApi, opt_cfg: AdamWConfig, dist: DistConte
             dp_new = 1 << (dp_avail.bit_length() - 1)
             if dp_new != dp_avail:
                 mesh = jax.sharding.Mesh(mesh.devices[:dp_new], names)
-        new_dist = make_dist(mesh, impl=impl, tools=tools)
+        keep_integrity = (dist.abi.integrity if integrity is None
+                          else integrity)
+        new_dist = make_dist(mesh, impl=impl, tools=tools,
+                             integrity=keep_integrity)
         state_like = init_state(api, key, new_dist)
         jstep = jax.jit(make_train_step(api, new_dist, opt_cfg,
                                         schedule=schedule))

@@ -23,6 +23,9 @@ Sections:
  16. serving fault supervisor: mid-decode kill at tp=4, heartbeat-observed
      death, shrink + token-identical replay (three dispatch paths)
  17. uneven-shard elastic recovery: dp=8 -> dp=7 (all survivors kept)
+ 18. transport integrity: corrupted zero1 collective detected -> retried ->
+     bitwise resume; dropped decode-tp bcast -> timeout -> heartbeat
+     confirm -> shrink -> token-identical replay (three dispatch paths)
 """
 import os
 
@@ -721,10 +724,17 @@ for impl13 in ("paxi", "minimal", "ompix"):
 # prefix must arm from the environment and the schedule must fire at the
 # configured call count — the deterministic chaos contract.
 env13 = os.environ.get("PAX_FAULT_SCHEDULE")
+se13 = None
 if env13:
     abi13e = C.pax_init(mesh8, impl="faulty:paxi")
     se13 = fault_schedule_of(abi13e.backend)
     assert se13 is not None and se13.armed, env13
+if se13 is not None and se13.mode != "die":
+    # transport schedules (corrupt/drop/delay) exercise section 18's env
+    # leg instead — they never set ``dead``, so the death walk below would
+    # be vacuous
+    print(f"  env chaos schedule {env13!r}: transport mode, see section 18")
+elif se13 is not None:
     dpe13 = abi13e.comm_from_axes(("data",), "dp")
     for _ in range(se13.at_call + 1):  # drive the counter to the kill point
         se13.on_call()
@@ -969,10 +979,14 @@ for impl16 in ("paxi", "minimal", "ompix"):
 # leg's rank=5 vs tp full size 4) the run must complete unfailed — the
 # detectors filter by membership.
 env16 = os.environ.get("PAX_FAULT_SCHEDULE")
+se16 = None
 if env16:
     abi16e = C.pax_init(mesh, impl="faulty:paxi")
     se16 = fault_schedule_of(abi16e.backend)
     assert se16 is not None and se16.armed, env16
+if se16 is not None and se16.mode != "die":
+    print(f"  env chaos schedule {env16!r}: transport mode, see section 18")
+elif se16 is not None:
     tp16e = abi16e.comm_from_axes(("model",), "tp")
     eng16.decode_sync = DecodeSync(abi16e, tp16e, 3, mesh)
     mon16e = HeartbeatMonitor(abi16e, tp16e, mesh, miss_threshold=2,
@@ -1069,5 +1083,167 @@ for a17, b17 in zip(v17, o17):
 shutil.rmtree(ckdir17, ignore_errors=True)
 print(f"  paxi: death at step {KILL_AT14} -> dp=7 uneven resume "
       "bitwise == oracle OK")
+
+# ---------------------------------------------------------------------------
+section("18. transport integrity: corrupted zero1 collective + dropped "
+        "decode-tp bcast (three dispatch paths)")
+# The PR-10 acceptance scenario, both halves of the escalation funnel.
+#
+# Training half: one zero1 collective is corrupted mid-run at dp=8 with
+# integrity mode ON.  The checksummed plan-group closure detects the
+# disagreement in-trace and folds the canonical poison into the payload;
+# ``verify_clean`` (the RetryPolicy's verify hook) raises
+# PAX_ERR_DATA_CORRUPTION at materialization, the policy re-runs the step
+# (corruption is one-shot, so the retry is clean) and the finished
+# trajectory must be BITWISE identical to an unfailed oracle on the same
+# backend.  The injection fires at trace time, so arming re-jits the step
+# through a fresh callable (jax caches traces per function identity).
+#
+# Serving half: one decode-tp broadcast is dropped mid-decode at tp=4 —
+# a real hang, surfaced only by the DecodeSync wait timeout.  The
+# supervisor retries in place (``transport_retries``), the drop is sticky,
+# and the exhausted retry escalates into the PR-9 walk: heartbeat confirm
+# (a dropping link stops answering heartbeats) -> revoke -> shrink ->
+# rebuild -> replay, streams bitwise equal to the unfailed oracle.
+import time as _time
+
+from repro.core.errors import (PAX_ERR_DATA_CORRUPTION, PAX_ERR_REQUEST,
+                               PAX_ERR_TIMEOUT)
+from repro.runtime.fault import RetryPolicy
+
+for impl18 in ("paxi", "minimal", "ompix"):
+    sched18 = FaultSchedule()
+    dist18 = make_dist(mesh8, impl=make_faulty(impl18, mesh8, sched18),
+                       integrity=True)
+    assert dist18.abi.integrity
+    state18 = train_loop.init_state(api14, key14, dist18)
+    raw18 = train_loop.make_train_step(api14, dist18, opt14)
+
+    def fresh18(_raw=raw18):
+        # a fresh callable object per (re)arm: jax.jit caches traces per
+        # function identity, so re-jitting the raw step directly would
+        # never re-run the trace-time tripwire
+        return jax.jit(lambda s, b, _r=_raw: _r(s, b))
+
+    holder18 = {"f": fresh18()}
+
+    def step18(s, b, _h=holder18):
+        return _h["f"](s, b)
+
+    armed18 = []
+
+    def get_batch18(i, _h=holder18, _s=sched18, _a=armed18, _f=fresh18):
+        if i == KILL_AT14 - 4 and not _a:   # step 2: mid-run, pre-checkpoint
+            _a.append(i)
+            _s.arm(3, after=0, mode="corrupt")
+            _h["f"] = _f()                   # fresh trace sees the tripwire
+        return batch_at14(i)
+
+    retry18 = RetryPolicy(
+        max_retries=2,
+        reset=lambda _h=holder18, _f=fresh18: _h.__setitem__("f", _f()),
+        verify=lambda out, _d=dist18: _d.abi.verify_clean(out, "train step"))
+    ckdir18 = tempfile.mkdtemp(prefix="integrity_")
+    report18 = run_supervised(
+        step18, state18, get_batch18, checkpointer=Checkpointer(ckdir18),
+        total_steps=4, checkpoint_every=2, max_restarts=1, retry=retry18)
+    assert report18.steps_completed == 4, report18
+    assert report18.restarts == 0, report18            # retried, not restarted
+    assert report18.transport_retries == 1, report18
+    assert report18.transport_escalations == 0, report18
+    assert sched18.corrupted, impl18                   # the one-shot fired
+
+    # oracle: unfailed run, SAME impl (plain backend), integrity still on
+    disto18 = make_dist(mesh8, impl=impl18, integrity=True)
+    stateo18 = train_loop.init_state(api14, key14, disto18)
+    stepo18 = jax.jit(train_loop.make_train_step(api14, disto18, opt14))
+    for s18 in range(4):
+        stateo18, _m18 = stepo18(stateo18, batch_at14(s18))
+    v18 = jax.tree.leaves(report18.final_state)
+    o18 = jax.tree.leaves(stateo18)
+    assert len(v18) == len(o18)
+    for a18, b18 in zip(v18, o18):
+        np.testing.assert_array_equal(np.asarray(a18), np.asarray(b18))
+    shutil.rmtree(ckdir18, ignore_errors=True)
+    print(f"  {impl18}: corrupt mid-zero1 -> detect -> retry, "
+          "resume bitwise == oracle OK")
+
+for impl18s in ("paxi", "minimal", "ompix"):
+    sched18s = FaultSchedule()
+    abi18s = C.pax_init(mesh, impl=make_faulty16(impl18s, mesh, sched18s))
+    tp18s = abi18s.comm_from_axes(("model",), "tp")
+    eng16.decode_sync = DecodeSync(abi18s, tp18s, 3, mesh)
+    mon18s = HeartbeatMonitor(abi18s, tp18s, mesh, miss_threshold=2,
+                              suspicion_ticks=1).install()
+    sup18s = ServeSupervisor(eng16, monitor=mon18s, heartbeat_every=1,
+                             wait_timeout_s=0.15, transport_retries=1)
+    for r18s in mk_reqs16():
+        eng16.submit(r18s)
+    reqs18s = list(eng16.scheduler.waiting)
+    while not all(s18s is not None and s18s.state == "decode"
+                  for s18s in eng16.scheduler.slots):
+        sup18s.step()
+    mid18s = [len(r18s.out_tokens) for r18s in reqs18s]
+    assert all(m18s > 0 for m18s in mid18s), mid18s   # genuinely mid-decode
+    sched18s.arm(2, after=0, mode="drop")             # rank 2's link silent
+    sup18s.drain()
+    got18s = [r18s.out_tokens for r18s in reqs18s]
+    assert got18s == want16, (impl18s, got18s, want16)
+    assert sup18s.report.transport_retries == 1, sup18s.report
+    assert sup18s.report.transport_escalations == 1, sup18s.report
+    assert sup18s.report.failures == 1, sup18s.report
+    assert abi18s.comms.info(eng16.decode_sync.comm).excludes == (2,)
+    assert 2 in mon18s.confirmed         # observed via missed beats
+    sup18s.report.assert_consistent()
+    mon18s.uninstall()
+    eng16.decode_sync.free()
+    eng16.decode_sync = None
+    print(f"  {impl18s}: dropped decode bcast -> timeout -> retry -> "
+          "confirm -> shrink, replay bitwise == oracle OK")
+
+# CI chaos-transport leg: with a corrupt/drop PAX_FAULT_SCHEDULE armed,
+# the registry's faulty: prefix must surface the transport fault through
+# the integrity/timeout contract and recover through the documented path
+# (one-shot corrupt -> clean re-run; sticky drop -> reset + heal).
+env18 = os.environ.get("PAX_FAULT_SCHEDULE")
+se18 = None
+if env18:
+    abi18e = C.pax_init(mesh8, impl="faulty:paxi", integrity=True)
+    se18 = fault_schedule_of(abi18e.backend)
+    assert se18 is not None and se18.armed, env18
+if se18 is not None and se18.mode in ("corrupt", "drop"):
+    dpe18 = abi18e.comm_from_axes(("data",), "dp")
+    xe18 = jnp.arange(32.0, dtype=jnp.float32) + 1.0
+    plan18e = abi18e.allreduce_init(
+        jax.ShapeDtypeStruct((32,), jnp.float32), C.PAX_SUM, dpe18)
+    fe18 = shard_map(
+        lambda v: abi18e.wait(plan18e.start(v), timeout_s=0.5),
+        mesh=mesh8, in_specs=P(), out_specs=P())
+    want18e = np.asarray(xe18) * 8.0
+    for _ in range(se18.at_call):        # drive to just before the fault
+        se18.on_call()
+    if se18.mode == "corrupt":
+        try:
+            abi18e.verify_clean(fe18(xe18), "env chaos allreduce")
+            raise AssertionError("env-armed corruption went undetected")
+        except PaxError as e18x:
+            assert e18x.code == PAX_ERR_DATA_CORRUPTION, e18x
+        assert se18.corrupted             # one-shot: consumed by the hit
+        np.testing.assert_array_equal(    # clean re-run, nothing wedged
+            np.asarray(fe18(xe18)), want18e)
+    else:                                 # drop: timeout -> reset -> heal
+        t18e = _time.perf_counter()
+        try:
+            fe18(xe18)
+            raise AssertionError("env-armed drop did not time out")
+        except PaxError as e18x:
+            assert e18x.code == PAX_ERR_TIMEOUT, e18x
+        assert _time.perf_counter() - t18e >= 0.5
+        plan18e.reset()                   # the post-timeout abort contract
+        se18.dropping = False             # link heals; schedule disarmed
+        se18.kill_rank = -1
+        np.testing.assert_array_equal(np.asarray(fe18(xe18)), want18e)
+    print(f"  env chaos schedule {env18!r}: transport fault surfaced and "
+          "recovered OK")
 
 print("BATTERY PASSED")

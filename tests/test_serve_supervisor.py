@@ -131,8 +131,9 @@ class _FakeAbi:
 
 
 class _FakeSync:
-    def __init__(self, abi, comm="tp", mesh="mesh"):
+    def __init__(self, abi, comm="tp", mesh="mesh", wait_timeout_s=None):
         self.abi, self.comm, self.mesh = abi, comm, mesh
+        self.wait_timeout_s = wait_timeout_s
         self.freed = False
 
     def free(self):
@@ -163,9 +164,9 @@ class _FakeEngine:
     def has_work(self):
         return self.scheduler.has_work
 
-    def rebuild_decode_sync(self, abi, comm, mesh):
+    def rebuild_decode_sync(self, abi, comm, mesh, wait_timeout_s=None):
         self.rebuilt.append(comm)
-        self.decode_sync = _FakeSync(abi, comm, mesh)
+        self.decode_sync = _FakeSync(abi, comm, mesh, wait_timeout_s)
 
     def step(self):
         self.stats["steps"] += 1

@@ -1,0 +1,433 @@
+"""Transport-integrity tier (PR 10) unit tests.
+
+Covers the single-process-provable pieces of the corruption/drop/delay
+story: the extended ``FaultSchedule`` grammar and per-mode ``fault_now``
+semantics, the in-trace checksum envelope (hoisting: zero added trace ops
+when disabled; detection: the conserved rule on the 1-device mesh),
+``wait`` timeout exactness and the post-timeout ``reset`` contract on both
+the plan and pooled paths, ``RetryPolicy`` retry/escalation ordering, and
+checkpoint content integrity (bit-flip and truncation fall back to the
+previous retained checkpoint, loudly).
+
+The multi-rank ends — a corrupted dp allreduce detected mid-zero1 and a
+dropped decode-tp broadcast timed out, confirmed, shrunk and replayed —
+are battery §18 (tests/multidev_battery.py): the replicated agreement rule
+needs ≥ 2 members to disagree, so it is only provable there.
+"""
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+import repro.core as C
+from repro.checkpoint.checkpointer import CheckpointCorrupt, Checkpointer
+from repro.core.backends.faulty import (FaultSchedule, FaultyBackend,
+                                        fault_schedule_of)
+from repro.core.compat import shard_map
+from repro.core.errors import (PAX_ERR_DATA_CORRUPTION, PAX_ERR_PROC_FAILED,
+                               PAX_ERR_REQUEST, PAX_ERR_TIMEOUT,
+                               IncompleteValue, PaxError, error_string)
+from repro.core.registry import get_backend
+from repro.runtime.fault import (TRANSPORT_ERRORS, RetryPolicy,
+                                 escalate_to_failure)
+
+
+def _faulty_ctx(mesh1, integrity=None):
+    sched = FaultSchedule()
+    backend = FaultyBackend(get_backend("paxi", mesh1), sched)
+    abi = C.pax_init(mesh1, impl=backend, integrity=integrity)
+    return sched, abi
+
+
+# ---------------------------------------------------------------------------
+# schedule grammar and per-mode semantics
+# ---------------------------------------------------------------------------
+def test_schedule_env_grammar_modes_and_delay():
+    old = FaultSchedule.from_env("rank=2,at=5")
+    assert (old.kill_rank, old.at_call, old.mode) == (2, 5, "die")
+    drop = FaultSchedule.from_env("rank=1,at=0,mode=drop")
+    assert drop.mode == "drop" and drop.armed
+    slow = FaultSchedule.from_env("rank=0,at=3,mode=delay,delay=0.25")
+    assert slow.mode == "delay" and slow.delay_s == 0.25
+    assert not FaultSchedule.from_env("").armed
+
+
+def test_schedule_env_grammar_rejects_bad_fields():
+    with pytest.raises(ValueError):
+        FaultSchedule.from_env("rank=1,at=0,mode=bogus")
+    with pytest.raises(ValueError):
+        FaultSchedule.from_env("rank=1,frob=2")
+    with pytest.raises(ValueError):
+        FaultSchedule().arm(0, mode="bogus")
+
+
+def test_fault_now_die_is_sticky():
+    s = FaultSchedule()
+    s.arm(0, after=1, mode="die")
+    assert s.fault_now() is None          # call 1 == at_call: not yet
+    assert s.fault_now() == "die"
+    assert s.fault_now() == "die" and s.dead
+
+
+def test_fault_now_corrupt_is_one_shot():
+    s = FaultSchedule()
+    s.arm(0, after=0, mode="corrupt")
+    assert s.fault_now() == "corrupt"
+    s.corrupted = True                    # the injector marks it spent
+    assert s.fault_now() is None and not s.dead
+
+
+def test_fault_now_drop_is_sticky_delay_repeats():
+    s = FaultSchedule()
+    s.arm(0, after=0, mode="drop")
+    assert s.fault_now() == "drop" and s.dropping
+    assert s.fault_now() == "drop"
+    d = FaultSchedule()
+    d.arm(0, after=0, mode="delay")
+    assert d.fault_now() == "delay"
+    assert d.fault_now() == "delay" and not d.dead
+
+
+def test_error_strings_for_transport_codes():
+    assert error_string(PAX_ERR_DATA_CORRUPTION) == "PAX_ERR_DATA_CORRUPTION"
+    assert error_string(PAX_ERR_TIMEOUT) == "PAX_ERR_TIMEOUT"
+    assert TRANSPORT_ERRORS == (PAX_ERR_DATA_CORRUPTION, PAX_ERR_TIMEOUT)
+
+
+# ---------------------------------------------------------------------------
+# checksum envelope: hoisting and detection on the 1-device mesh
+# ---------------------------------------------------------------------------
+def _plan_trace(mesh1, abi, plan):
+    return jax.make_jaxpr(
+        shard_map(lambda v: abi.wait(plan.start(v)), mesh=mesh1,
+                  in_specs=P(), out_specs=P()))
+
+
+def test_integrity_off_adds_zero_trace_ops(mesh1):
+    """Hoisting contract: the envelope is decided at plan compile, so an
+    integrity-off plan traces to the IDENTICAL jaxpr as one from a context
+    that never heard of the flag — and the on-side trace carries the fused
+    checksum."""
+    x = jnp.arange(8, dtype=jnp.float32)
+    ex = jax.ShapeDtypeStruct((8,), jnp.float32)
+    jaxprs = {}
+    for name, integrity in (("naive", None), ("off", False), ("on", True)):
+        abi = C.pax_init(mesh1, impl="paxi", integrity=integrity)
+        comm = abi.comm_from_axes(("data",), "dp")
+        plan = abi.allreduce_init(ex, C.PAX_SUM, comm)
+        jaxprs[name] = str(_plan_trace(mesh1, abi, plan)(x))
+    assert jaxprs["off"] == jaxprs["naive"]
+    assert len(jaxprs["on"]) > len(jaxprs["off"])
+
+
+def test_drop_guard_compiled_only_for_loss_capable_backends(mesh1):
+    """Host-side hoisting twin of the trace-time contract: only a backend
+    that can inject drops (``can_lose_messages``) gets the sentinel guard
+    in its plan/group wait closures — a plain backend's wait is the bare
+    two-field flip, so the transport tier costs it nothing per call.  The
+    guarded closure binds ``IncompleteValue`` as a default (a LOAD_FAST,
+    not a global lookup), which is also how this test detects it."""
+    from repro.core.errors import IncompleteValue as IV
+    ex = jax.ShapeDtypeStruct((4,), jnp.float32)
+
+    plain = C.pax_init(mesh1, impl="paxi")
+    assert not plain._can_drop
+    p = plain.allreduce_init(ex, C.PAX_SUM, C.PAX_COMM_SELF)
+    assert not any(d is IV for d in (p.wait.__defaults__ or ()))
+
+    sched, faulty = _faulty_ctx(mesh1)
+    assert faulty._can_drop
+    f = faulty.allreduce_init(ex, C.PAX_SUM, C.PAX_COMM_SELF)
+    assert any(d is IV for d in (f.wait.__defaults__ or ()))
+
+    # the group wait mirrors the same decision (scan bound vs absent)
+    gp = plain.plan_group([plain.allreduce_init(ex, C.PAX_SUM,
+                                                C.PAX_COMM_SELF)])
+    gf = faulty.plan_group([faulty.allreduce_init(ex, C.PAX_SUM,
+                                                  C.PAX_COMM_SELF)])
+    assert len(gp.wait.__defaults__) < len(gf.wait.__defaults__)
+
+
+def test_conserved_rule_detects_corruption_and_retry_is_clean(mesh1):
+    """The reduce_scatter conservation rule is provable at world size 1:
+    sum(out) must equal sum(in); a sign-flipped member breaks it, the
+    output comes back poisoned, and ``verify_clean`` raises
+    ``PAX_ERR_DATA_CORRUPTION`` at materialization.  The corruption is
+    one-shot, so the bare retry is bitwise what the unfailed run was."""
+    sched, abi = _faulty_ctx(mesh1, integrity=True)
+    comm = abi.comm_from_axes(("data",), "dp")
+    ex = jax.ShapeDtypeStruct((8,), jnp.float32)
+    plan = abi.reduce_scatter_init(ex, C.PAX_SUM, comm)
+    f = shard_map(lambda v: abi.wait(plan.start(v)), mesh=mesh1,
+                  in_specs=P(), out_specs=P())
+    x = jnp.arange(8, dtype=jnp.float32) + 1.0
+
+    clean = np.asarray(f(x))
+    abi.verify_clean(clean, "clean reduce_scatter")
+
+    sched.arm(0, after=0, mode="corrupt")
+    bad = np.asarray(f(x))
+    with pytest.raises(PaxError) as ei:
+        abi.verify_clean(bad, "corrupted reduce_scatter")
+    assert ei.value.code == PAX_ERR_DATA_CORRUPTION
+    assert sched.corrupted                    # spent: one-shot
+
+    again = np.asarray(f(x))
+    abi.verify_clean(again, "retried reduce_scatter")
+    np.testing.assert_array_equal(again, clean)
+
+
+def test_integrity_off_lets_corruption_through(mesh1):
+    """The contract of the default mode: no checksums, no detection —
+    ``verify_clean`` is a no-op and the corrupted value flows through
+    (what every pre-PR-10 context did)."""
+    sched, abi = _faulty_ctx(mesh1, integrity=False)
+    comm = abi.comm_from_axes(("data",), "dp")
+    ex = jax.ShapeDtypeStruct((8,), jnp.float32)
+    plan = abi.reduce_scatter_init(ex, C.PAX_SUM, comm)
+    f = shard_map(lambda v: abi.wait(plan.start(v)), mesh=mesh1,
+                  in_specs=P(), out_specs=P())
+    x = jnp.arange(8, dtype=jnp.float32) + 1.0
+    sched.arm(0, after=0, mode="corrupt")
+    silent = np.asarray(f(x))
+    abi.verify_clean(silent, "off")           # no-op by contract
+    np.testing.assert_array_equal(silent, -np.asarray(x))  # sign-flipped
+
+
+# ---------------------------------------------------------------------------
+# drop -> wait timeout -> reset (plan, group member, pooled)
+# ---------------------------------------------------------------------------
+def test_plan_wait_timeout_exactness_and_reset(mesh1):
+    sched, abi = _faulty_ctx(mesh1)
+    comm = abi.comm_from_axes(("data",), "dp")  # drops target axes comms
+    x = jnp.ones((4,), jnp.float32)
+    plan = abi.allreduce_init(jax.ShapeDtypeStruct((4,), jnp.float32),
+                              C.PAX_SUM, comm)
+    f = shard_map(lambda v: abi.wait(plan.start(v), timeout_s=0.15),
+                  mesh=mesh1, in_specs=P(), out_specs=P())
+    np.testing.assert_array_equal(np.asarray(f(x)), np.asarray(x))  # clean
+
+    sched.arm(0, after=0, mode="drop")
+    t0 = time.perf_counter()
+    with pytest.raises(PaxError) as ei:
+        f(x)
+    dt = time.perf_counter() - t0
+    assert ei.value.code == PAX_ERR_TIMEOUT
+    assert 0.15 <= dt < 1.5                   # deadline honored, not a hang
+
+    # the request stays ACTIVE across the raise: a restart is refused
+    # (PAX_ERR_REQUEST), a re-wait times out again — reset is the only out
+    with pytest.raises(PaxError) as ei2:
+        f(x)
+    assert ei2.value.code == PAX_ERR_REQUEST
+    with pytest.raises(PaxError) as ei3:
+        plan.wait(timeout_s=0.01)
+    assert ei3.value.code == PAX_ERR_TIMEOUT
+
+    plan.reset()
+    sched.kill_rank = -1                      # link healed (test-only)
+    sched.dropping = False
+    np.testing.assert_array_equal(np.asarray(f(x)), np.asarray(x))
+
+
+def test_pooled_wait_and_waitall_timeout(mesh1):
+    sched, abi = _faulty_ctx(mesh1)
+    comm = abi.comm_from_axes(("data",), "dp")
+    x = jnp.ones((4,), jnp.float32)
+
+    f = shard_map(
+        lambda v: abi.wait(abi.iallreduce(v, C.PAX_SUM, comm),
+                           timeout_s=0.02),
+        mesh=mesh1, in_specs=P(), out_specs=P())
+    np.testing.assert_array_equal(np.asarray(f(x)), np.asarray(x))  # clean
+
+    sched.arm(0, after=0, mode="drop")
+    with pytest.raises(PaxError) as ei:
+        f(x)
+    assert ei.value.code == PAX_ERR_TIMEOUT
+
+    g = shard_map(
+        lambda v: abi.waitall([abi.iallreduce(v, C.PAX_SUM, comm)],
+                              timeout_s=0.02),
+        mesh=mesh1, in_specs=P(), out_specs=P())
+    with pytest.raises(PaxError) as ei2:
+        g(x)
+    assert ei2.value.code == PAX_ERR_TIMEOUT
+
+
+def test_incomplete_value_sentinel_identity():
+    iv = IncompleteValue("dropped allreduce")
+    assert iv.__class__ is IncompleteValue
+    assert "dropped allreduce" in repr(iv)
+
+
+# ---------------------------------------------------------------------------
+# RetryPolicy: ordering, exhaustion, escalation
+# ---------------------------------------------------------------------------
+def test_retry_policy_reset_before_rerun_then_verify():
+    events = []
+    n = {"calls": 0}
+
+    def attempt():
+        n["calls"] += 1
+        events.append(f"attempt{n['calls']}")
+        if n["calls"] == 1:
+            raise PaxError(PAX_ERR_TIMEOUT, "transient drop")
+        return "ok"
+
+    pol = RetryPolicy(max_retries=2,
+                      reset=lambda: events.append("reset"),
+                      verify=lambda out: events.append("verify"))
+    assert pol.run(attempt, what="unit") == "ok"
+    assert events == ["attempt1", "reset", "attempt2", "verify"]
+    assert pol.retries == 1 and pol.escalations == 0
+
+
+def test_retry_policy_verify_failure_is_retried():
+    n = {"calls": 0}
+
+    def attempt():
+        n["calls"] += 1
+        return n["calls"]
+
+    def verify(out):
+        if out == 1:  # first result is poisoned
+            raise PaxError(PAX_ERR_DATA_CORRUPTION, "poisoned payload")
+
+    pol = RetryPolicy(max_retries=2, verify=verify)
+    assert pol.run(attempt) == 2
+    assert pol.retries == 1
+
+
+def test_retry_policy_exhaustion_escalates_then_raises():
+    events, escalated = [], []
+
+    def attempt():
+        events.append("attempt")
+        raise PaxError(PAX_ERR_DATA_CORRUPTION, "persistently bad wire")
+
+    pol = RetryPolicy(max_retries=2,
+                      reset=lambda: events.append("reset"),
+                      escalate=escalated.append)
+    with pytest.raises(PaxError) as ei:
+        pol.run(attempt, what="unit")
+    assert ei.value.code == PAX_ERR_DATA_CORRUPTION
+    # attempt -> reset, three times (initial + 2 retries), then escalate
+    assert events == ["attempt", "reset"] * 3
+    assert escalated == [ei.value]
+    assert pol.retries == 2 and pol.escalations == 1
+
+
+def test_retry_policy_rank_death_is_not_a_flaky_link():
+    def attempt():
+        raise PaxError(PAX_ERR_PROC_FAILED, "a corpse, not a drop")
+
+    pol = RetryPolicy(reset=lambda: pytest.fail("reset on non-retryable"))
+    with pytest.raises(PaxError) as ei:
+        pol.run(attempt)
+    assert ei.value.code == PAX_ERR_PROC_FAILED
+    assert pol.retries == 0 and pol.escalations == 0
+
+
+class _Monitor:
+    """Confirms rank 3 silent after ``confirm_after`` beats."""
+
+    def __init__(self, confirm_after):
+        self.ticks, self.confirm_after = 0, confirm_after
+
+    def beat(self):
+        self.ticks += 1
+        return (3,) if self.ticks >= self.confirm_after else ()
+
+
+def test_escalate_to_failure_confirms_then_raises_proc_failed():
+    cause = PaxError(PAX_ERR_TIMEOUT, "dropped bcast")
+    esc = escalate_to_failure(_Monitor(confirm_after=3))
+    with pytest.raises(PaxError) as ei:
+        esc(cause)
+    assert ei.value.code == PAX_ERR_PROC_FAILED
+    assert ei.value.__cause__ is cause
+    assert "3" in str(ei.value)
+
+
+def test_escalate_to_failure_unconfirmed_returns():
+    esc = escalate_to_failure(_Monitor(confirm_after=10 ** 9), max_ticks=4)
+    assert esc(PaxError(PAX_ERR_TIMEOUT, "x")) is None
+
+
+# ---------------------------------------------------------------------------
+# checkpoint content integrity
+# ---------------------------------------------------------------------------
+def _state(v):
+    return {"w": jnp.full((4,), v, jnp.float32),
+            "step": jnp.asarray(v, jnp.int32)}
+
+
+def _shard(ckdir, step):
+    return ckdir / f"step_{step:010d}" / "shard_0.npz"
+
+
+def test_checkpoint_bitflip_falls_back_loudly(tmp_path):
+    ck = Checkpointer(tmp_path, keep=3)
+    for s in (2, 4, 6):
+        ck.save(s, _state(float(s)))
+
+    blob = bytearray(_shard(tmp_path, 6).read_bytes())
+    blob[len(blob) // 2] ^= 0x40              # one flipped bit mid-shard
+    _shard(tmp_path, 6).write_bytes(bytes(blob))
+
+    restored, step = ck.restore(_state(0.0))
+    assert step == 4
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.full((4,), 4.0, np.float32))
+    [event] = ck.integrity_events
+    assert event["step"] == 6 and event["fell_back_to"] == 4
+    assert "CRC mismatch" in event["reason"]
+
+
+def test_checkpoint_truncation_falls_back(tmp_path):
+    ck = Checkpointer(tmp_path, keep=3)
+    for s in (1, 3):
+        ck.save(s, _state(float(s)))
+    blob = _shard(tmp_path, 3).read_bytes()
+    _shard(tmp_path, 3).write_bytes(blob[: len(blob) // 2])  # torn write
+
+    restored, step = ck.restore(_state(0.0))
+    assert step == 1
+    assert ck.integrity_events[0]["step"] == 3
+    assert ck.integrity_events[0]["fell_back_to"] == 1
+
+
+def test_checkpoint_all_corrupt_raises_never_restores_garbage(tmp_path):
+    ck = Checkpointer(tmp_path, keep=3)
+    for s in (1, 2):
+        ck.save(s, _state(float(s)))
+        blob = bytearray(_shard(tmp_path, s).read_bytes())
+        blob[4] ^= 0xFF
+        _shard(tmp_path, s).write_bytes(bytes(blob))
+    with pytest.raises(CheckpointCorrupt):
+        ck.restore(_state(0.0))
+    assert [e["step"] for e in ck.integrity_events] == [2, 1]
+    assert all(e["fell_back_to"] is None for e in ck.integrity_events)
+
+
+def test_checkpoint_missing_shard_is_a_reason(tmp_path):
+    ck = Checkpointer(tmp_path, keep=3)
+    for s in (1, 2):
+        ck.save(s, _state(float(s)))
+    _shard(tmp_path, 2).unlink()
+    restored, step = ck.restore(_state(0.0))
+    assert step == 1
+    assert "missing shard" in ck.integrity_events[0]["reason"]
+
+
+# ---------------------------------------------------------------------------
+# injection composes under Mukautuva (schedule shared through wrappers)
+# ---------------------------------------------------------------------------
+def test_fault_schedule_of_surfaces_shared_schedule(mesh1):
+    sched, abi = _faulty_ctx(mesh1)
+    assert fault_schedule_of(abi.backend) is sched
